@@ -1,0 +1,141 @@
+"""Shared benchmark harness: small-model training cache + quality eval.
+
+Quality tables train reduced models from scratch on the synthetic corpus
+(no pretrained checkpoints offline), then compare *relative* degradation
+across quantization methods — reproducing the paper's orderings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, PAPER_FAMILY, ModelConfig, reduced
+from repro.core import quantized as qz
+from repro.core.pipeline import QuantizedLM, blockwise_quantize, float_lm
+from repro.core.policy import QuantPolicy
+from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+from repro.models import registry as R
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+MODEL_DIR = os.path.join(ART, "models")
+VOCAB = 128          # 128^2 bigram contexts: learnable in 400 steps
+SEQ = 128
+BATCH = 8
+TRAIN_STEPS = 400
+CALIB_BATCHES = 4
+EVAL_BATCHES = 8
+
+
+def corpus() -> SyntheticCorpus:
+    return SyntheticCorpus(CorpusConfig(vocab_size=VOCAB, seed=1234))
+
+
+def bench_config(name: str) -> ModelConfig:
+    """Reduced benchmark model of the requested family."""
+    base = (ARCHS.get(name) or PAPER_FAMILY[name])
+    cfg = reduced(base, d_model=192, n_layers=4, d_ff=448,
+                  vocab_size=VOCAB, n_heads=6)
+    if base.rwkv_version:
+        cfg = dataclasses.replace(cfg, rwkv_head_dim=32, n_heads=6,
+                                  head_dim=0)
+    return dataclasses.replace(cfg, name=f"bench-{name}")
+
+
+def train_small(cfg: ModelConfig, steps: int = TRAIN_STEPS,
+                seed: int = 0, quiet: bool = True):
+    """Train (or load cached) a small model on the synthetic corpus."""
+    os.makedirs(MODEL_DIR, exist_ok=True)
+    tag = f"{cfg.name}_s{steps}_v{VOCAB}"
+    cdir = os.path.join(MODEL_DIR, tag)
+    state = init_train_state(cfg, jax.random.PRNGKey(seed))
+    last = ckpt.latest_step(cdir)
+    if last == steps:
+        state = ckpt.restore(cdir, steps, state)
+        return state.params
+    c = corpus()
+    step_fn = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=steps)),
+        donate_argnums=(0,))
+    t0 = time.time()
+    for s in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in
+                 c.batch(s, BATCH, SEQ).items()}
+        state, metrics = step_fn(state, batch)
+        if not quiet and (s + 1) % 50 == 0:
+            print(f"  [{tag}] step {s+1} loss={float(metrics['loss']):.3f}")
+    final = float(metrics["loss"])
+    if not np.isfinite(final):
+        raise RuntimeError(f"{tag}: training diverged (loss={final})")
+    os.makedirs(cdir, exist_ok=True)
+    ckpt.save(cdir, steps, state)
+    if not quiet:
+        print(f"  [{tag}] trained in {time.time()-t0:.0f}s "
+              f"final loss={float(metrics['loss']):.3f}")
+    return state.params
+
+
+def calib_batches(n: int = CALIB_BATCHES) -> List[Dict]:
+    c = corpus()
+    return [{k: jnp.asarray(v) for k, v in c.batch(10_000 + i, 4, SEQ)
+             .items()} for i in range(n)]
+
+
+def eval_ppl(lm: QuantizedLM, n: int = EVAL_BATCHES) -> float:
+    """Perplexity on held-out synthetic batches (steps >= 20000)."""
+    c = corpus()
+    tot, cnt = 0.0, 0
+    for i in range(n):
+        b = {k: jnp.asarray(v) for k, v in c.batch(20_000 + i, 4, SEQ)
+             .items()}
+        tot += float(lm.nll(b))
+        cnt += 1
+    return float(np.exp(tot / cnt))
+
+
+def weight_mse(lm_q: QuantizedLM, lm_f: QuantizedLM) -> float:
+    """Mean per-tensor weight MSE between quantized and float blocks."""
+    tot, n = 0.0, 0
+    for bq, bf in zip(lm_q.blocks, lm_f.blocks):
+        for lq, lf in zip(jax.tree.leaves(bq, is_leaf=qz.is_quantized),
+                          jax.tree.leaves(bf)):
+            if qz.is_quantized(lq):
+                d = qz.dequant(lq).reshape(lf.shape).astype(jnp.float32)
+                tot += float(jnp.mean((d - lf.astype(jnp.float32)) ** 2))
+                n += 1
+    return tot / max(n, 1)
+
+
+def iter_matmul_weights(params):
+    """(path, layer, 2d weight) over scan-stacked block params."""
+    from repro.core.hybrid import iter_quantizable, _layer_slices
+    from repro.core.policy import DATAFREE_3_275
+    for ps, leaf, kind, stacked in iter_quantizable(params, DATAFREE_3_275):
+        if kind not in ("matmul", "matmul_nd"):
+            continue
+        for li, w in _layer_slices(leaf, stacked):
+            if kind == "matmul_nd":
+                w = w.reshape(-1, w.shape[-1])
+            yield ps, li, w
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.time()
+
+    def lap(self) -> float:
+        t = time.time() - self.t0
+        self.t0 = time.time()
+        return t
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,67 @@
+"""Aggregate dry-run artifacts into the §Roofline table (markdown + CSV)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import ART, csv_row
+
+
+def load_cells(mesh: str = "single"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, "dryrun", mesh, "*.json"))):
+        r = json.load(open(f))
+        if "error" in r:
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "quantized": r.get("quantized", False),
+                         "error": r["error"]})
+            continue
+        rows.append(r)
+    return rows
+
+
+def markdown_table(mesh: str = "single") -> str:
+    rows = load_cells(mesh)
+    lines = [
+        "| arch | shape | q | t_compute | t_memory | t_collective |"
+        " bottleneck | useful_frac | mfu_bound | arg GiB | tmp GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | "
+                         f"{int(r['quantized'])} | ERROR: {r['error'][:60]} "
+                         "| | | | | | | |")
+            continue
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {int(r['quantized'])} "
+            f"| {ro['t_compute_s']:.4f} | {ro['t_memory_s']:.4f} "
+            f"| {ro['t_collective_s']:.4f} | {ro['bottleneck']} "
+            f"| {ro['useful_flops_frac']:.3f} | {ro['mfu_bound']:.4f} "
+            f"| {r['memory']['argument_bytes']/2**30:.2f} "
+            f"| {r['memory']['temp_bytes']/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def run(print_csv=print):
+    for mesh in ("single", "multi"):
+        rows = load_cells(mesh)
+        ok = [r for r in rows if "error" not in r]
+        print_csv(csv_row(f"roofline/{mesh}/cells", 0.0,
+                          f"ok={len(ok)};total={len(rows)}"))
+        for r in ok:
+            ro = r["roofline"]
+            t = max(ro["t_compute_s"], ro["t_memory_s"],
+                    ro["t_collective_s"])
+            q = "q" if r["quantized"] else "fp"
+            print_csv(csv_row(
+                f"roofline/{mesh}/{r['arch']}/{r['shape']}/{q}",
+                t * 1e6,
+                f"bneck={ro['bottleneck']};mfu={ro['mfu_bound']:.4f};"
+                f"useful={ro['useful_flops_frac']:.3f}"))
+
+
+if __name__ == "__main__":
+    print(markdown_table("single"))

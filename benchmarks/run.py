@@ -1,0 +1,63 @@
+"""Benchmark driver — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2,table5]
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measurement).
+Small benchmark models are trained once on the synthetic corpus and
+cached under artifacts/models/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. table1,fig5")
+    args = ap.parse_args()
+
+    from benchmarks import (fig5_sq_proportion, roofline_report,
+                            table1_cluster_loss, table2_quant_quality,
+                            table4_speed_memory, table5_hybrid_ablation,
+                            table6_proxy_ablation, table7_codebook_ablation,
+                            table12_tau_sensitivity)
+
+    sections = {
+        "table1": table1_cluster_loss.run,
+        "table2": table2_quant_quality.run,
+        "table4": table4_speed_memory.run,
+        "table5": table5_hybrid_ablation.run,
+        "table6": table6_proxy_ablation.run,
+        "table7": table7_codebook_ablation.run,
+        "table12": table12_tau_sensitivity.run,
+        "fig5": fig5_sq_proportion.run,
+        "roofline": roofline_report.run,
+    }
+    chosen = (args.only.split(",") if args.only else list(sections))
+
+    print("name,us_per_call,derived")
+    t_all = time.time()
+    failures = []
+    import jax
+    for name in chosen:
+        t0 = time.time()
+        jax.clear_caches()
+        try:
+            sections[name](print_csv=print)
+        except Exception as e:                         # keep going
+            failures.append(name)
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name}/ERROR,0.00,{type(e).__name__}:{str(e)[:120]}")
+        print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+    print(f"# all benchmarks done in {time.time()-t_all:.0f}s; "
+          f"failures={failures or 'none'}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

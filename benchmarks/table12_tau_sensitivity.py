@@ -1,0 +1,44 @@
+"""Paper Table 12 (appendix): sensitivity to (τ_c, τ_f)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import (Timer, bench_config, calib_batches, csv_row,
+                               eval_ppl, train_small)
+from repro.core.hybrid import compute_all_proxies
+from repro.core.pipeline import blockwise_quantize, float_lm
+from repro.core.policy import PAPER_3_275
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run(print_csv=print, arch="rwkv7-0.1b"):
+    t = Timer()
+    cfg = bench_config(arch)
+    params = train_small(cfg)
+    batches = calib_batches()
+    # pick tau grid around the calibrated operating point
+    proxies = compute_all_proxies(params, PAPER_3_275)
+    pcs = np.array([v[0] for v in proxies.values()])
+    pfs = np.array([v[1] for v in proxies.values()])
+    tau_cs = [float(np.quantile(pcs, q)) for q in (0.5, 0.9, 0.999)]
+    tau_fs = [float(np.quantile(pfs, q)) for q in (0.5, 0.9)]
+    out = {}
+    for tc in tau_cs:
+        for tf in tau_fs:
+            jax.clear_caches()
+            pol = dataclasses.replace(PAPER_3_275, tau_c=tc, tau_f=tf)
+            lm = blockwise_quantize(cfg, params, batches, pol, KEY)
+            ppl = eval_ppl(lm)
+            out[(tc, tf)] = (ppl, lm.report.sq_fraction)
+            print_csv(csv_row(
+                f"table12/{arch}/tc{tc:.3g}_tf{tf:.3g}", t.lap() * 1e6,
+                f"ppl={ppl:.3f};sq_frac={lm.report.sq_fraction:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

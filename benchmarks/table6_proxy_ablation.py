@@ -1,0 +1,107 @@
+"""Paper Table 6: proxy ablation — Variance/CV/Range/MAD/MSE/IE vs ours.
+
+Each proxy ranks the per-layer weights; the same budget split is applied
+(top 90% -> SQ 3.25, rest -> VQ 3.5) so only the *selection* differs.
+'MSE' selects per weight by direct quantized-weight MSE comparison (the
+paper's locally-optimal-but-globally-worse baseline); 'ours' is the
+coarse-to-fine P_c/P_f rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (Timer, bench_config, calib_batches, csv_row,
+                               eval_ppl, iter_matmul_weights, train_small)
+from repro.core import proxy as proxy_mod
+from repro.core.pipeline import blockwise_quantize, float_lm
+from repro.core.policy import PAPER_3_275
+from repro.core.sq.rtn import rtn_quantize
+from repro.core.vq.gptvq import kmeans_vq_quantize
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mse_scores(params):
+    """Negative (SQ_mse - VQ_mse): higher => prefer VQ (like high P_c)."""
+    scores = {}
+    for ps, li, w in iter_matmul_weights(params):
+        ic, oc = w.shape
+        if ic % 64 or ic % 2:
+            continue
+        sq = rtn_quantize(w, 3, min(64, ic))
+        vq = kmeans_vq_quantize(w, 2, 7, KEY, 8)
+        mse_sq = float(jnp.mean((sq.dequant().astype(jnp.float32)
+                                 - w.astype(jnp.float32)) ** 2))
+        mse_vq = float(jnp.mean((vq.dequant().astype(jnp.float32)
+                                 - w.astype(jnp.float32)) ** 2))
+        scores[(ps, li)] = mse_sq - mse_vq
+    return scores
+
+
+def _proxy_scores(params, fn):
+    return {(ps, li): fn(np.asarray(w))
+            for ps, li, w in iter_matmul_weights(params)}
+
+
+def _tau_for_fraction(scores, frac=0.9):
+    vals = np.sort(list(scores.values()))
+    idx = min(int(frac * len(vals)), len(vals) - 1)
+    return float(vals[idx]) + 1e-12
+
+
+def run(print_csv=print, arch="rwkv7-0.1b"):
+    t = Timer()
+    cfg = bench_config(arch)
+    params = train_small(cfg)
+    batches = calib_batches()
+    results = {"fp16": eval_ppl(float_lm(cfg, params))}
+
+    # single-score proxies: force the Eq.18 decision via tau on one score
+    for name, fn in list(proxy_mod.ABLATION_PROXIES.items()):
+        scores = _proxy_scores(params, fn)
+        tau = _tau_for_fraction(scores)
+        pol = dataclasses.replace(PAPER_3_275, tau_c=tau, tau_f=float("inf"))
+        # monkey-select: reuse the pipeline but substitute the proxy by
+        # pre-seeding thresholds; P_c is replaced by running with tau on
+        # the IE proxy only for 'ie'; for the others we wrap via policy
+        lm = _quantize_with_scores(cfg, params, batches, scores, tau)
+        results[name] = eval_ppl(lm)
+        print_csv(csv_row(f"table6/{arch}/{name}", t.lap() * 1e6,
+                          f"ppl={results[name]:.3f}"))
+
+    scores = _mse_scores(params)
+    tau = _tau_for_fraction(scores)
+    lm = _quantize_with_scores(cfg, params, batches, scores, tau)
+    results["mse"] = eval_ppl(lm)
+    print_csv(csv_row(f"table6/{arch}/mse", t.lap() * 1e6,
+                      f"ppl={results['mse']:.3f}"))
+
+    lm = blockwise_quantize(cfg, params, batches, PAPER_3_275, KEY)
+    results["ours"] = eval_ppl(lm)
+    print_csv(csv_row(f"table6/{arch}/ours", t.lap() * 1e6,
+                      f"ppl={results['ours']:.3f}"))
+    others = [v for k, v in results.items() if k not in ("fp16", "ours")]
+    print_csv(csv_row(f"table6/{arch}/claim", 0.0,
+                      f"ours={results['ours']:.3f};"
+                      f"best_other={min(others):.3f};"
+                      f"ours_best={bool(results['ours'] <= min(others)*1.03)}"))
+    return results
+
+
+def _quantize_with_scores(cfg, params, batches, scores, tau):
+    """Run the calibrated pipeline with an externally-scored selection."""
+    pol = dataclasses.replace(PAPER_3_275, tau_c=tau, tau_f=float("inf"))
+
+    def proxy_fn(ps, li, w):
+        return (scores.get((ps, li), 0.0), 0.0)
+
+    return blockwise_quantize(cfg, params, batches, pol, KEY,
+                              proxy_fn=proxy_fn)
+
+
+if __name__ == "__main__":
+    run()

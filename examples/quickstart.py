@@ -1,0 +1,50 @@
+"""Quickstart: RWKVQuant in six steps on a small RWKV-6.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, reduced
+from repro.core import quantized as qz
+from repro.core.hybrid import quantize_tree
+from repro.core.policy import DATAFREE_3_275
+from repro.models import registry as R
+
+key = jax.random.PRNGKey(0)
+
+# 1. pick an architecture (any of the 10 assigned ids work: --arch style)
+cfg = reduced(ARCHS["rwkv6-3b"])
+print(f"arch={cfg.name} d_model={cfg.d_model} layers={cfg.n_layers}")
+
+# 2. initialize parameters
+params = R.init_params(cfg, key)
+print(f"fp params: {qz.param_bytes(params)/1e6:.1f} MB")
+
+# 3. quantize with the proxy-guided hybrid (data-free variant here;
+#    see examples/quantize_rwkv.py for the calibrated GPTQ/GPTVQ pipeline)
+qparams, report = quantize_tree(params, DATAFREE_3_275, key)
+print("quantization report:", report.summary())
+print(f"quantized params: {qz.param_bytes(qparams)/1e6:.1f} MB "
+      f"({qz.param_bytes(params)/qz.param_bytes(qparams):.1f}x smaller)")
+
+# 4. run a forward pass with quantized weights (same model code!)
+batch = R.make_inputs(cfg, "train", 2, 64, key)
+hidden, _ = R.forward(cfg, qparams, batch)
+logits = R.model_logits(cfg, qparams, hidden)
+print("quantized logits:", logits.shape)
+
+# 5. compare against the float model
+h_fp, _ = R.forward(cfg, params, batch)
+rel = float(jnp.linalg.norm(hidden - h_fp) / jnp.linalg.norm(h_fp))
+print(f"hidden-state relative error vs fp: {rel:.3f}")
+
+# 6. decode a few tokens through the serving path
+cache = R.init_cache(cfg, 2, 32)
+lg, cache = R.prefill(cfg, qparams, {"tokens": batch["tokens"][:, :8]},
+                      cache)
+tok = jnp.argmax(lg, -1)[:, None]
+for _ in range(4):
+    lg, cache = R.decode_step(cfg, qparams, cache, tok)
+    tok = jnp.argmax(lg, -1)[:, None]
+print("decoded OK; per-slot cache index:", int(cache["index"]))

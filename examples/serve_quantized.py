@@ -1,0 +1,58 @@
+"""Serve a quantized RWKV-6 with continuous batching.
+
+Trains a small model, quantizes it to ~3.3 bpw, and runs the batched
+serving engine over byte-tokenized prompts (greedy decoding).
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.core import quantized as qz
+from repro.core.hybrid import quantize_tree
+from repro.core.policy import DATAFREE_3_275
+from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+from repro.models import registry as R
+from repro.serve.engine import ServeEngine
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    cfg = dataclasses.replace(reduced(ARCHS["rwkv6-3b"]),
+                              n_layers=3, vocab_size=256)
+    print("training a tiny RWKV-6 ...")
+    tr = Trainer(cfg,
+                 TrainerConfig(total_steps=60, ckpt_every=1000,
+                               ckpt_dir="/tmp/serve_example_ckpt",
+                               log_every=20, batch=4, seq=64),
+                 AdamWConfig(lr=2e-3, warmup_steps=10, total_steps=60))
+    state = tr.run(resume=False)
+
+    print("quantizing ...")
+    qparams, report = quantize_tree(state.params, DATAFREE_3_275,
+                                    jax.random.PRNGKey(0))
+    print(" ", report.summary())
+    print(f"  {qz.param_bytes(state.params)/1e6:.1f} MB -> "
+          f"{qz.param_bytes(qparams)/1e6:.1f} MB")
+
+    print("serving with continuous batching (4 slots, 6 requests) ...")
+    eng = ServeEngine(cfg, qparams, n_slots=4, max_len=96)
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=256))
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        prompt = corpus.batch(i, 1, 12)["tokens"][0]
+        eng.submit(prompt, max_new_tokens=16)
+    done = eng.run_until_drained()
+    for r in sorted(done, key=lambda r: r.uid):
+        print(f"  req {r.uid}: prompt[:6]={r.prompt[:6].tolist()} "
+              f"-> {r.out_tokens[:8]}...")
+    print(f"served {len(done)} requests "
+          f"(RWKV state is O(1) per slot — no KV growth)")
+
+
+if __name__ == "__main__":
+    main()

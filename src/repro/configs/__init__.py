@@ -1,0 +1,59 @@
+"""Architecture registry: ``--arch <id>`` resolves through ``get_config``."""
+from __future__ import annotations
+
+from repro.configs.base import (ModelConfig, ShapeSpec, SHAPES, TRAIN_4K,
+                                PREFILL_32K, DECODE_32K, LONG_500K, reduced)
+
+from repro.configs.llava_next_34b import CONFIG as _llava
+from repro.configs.llama3_8b import CONFIG as _llama3
+from repro.configs.minicpm3_4b import CONFIG as _minicpm3
+from repro.configs.yi_6b import CONFIG as _yi
+from repro.configs.granite_3_2b import CONFIG as _granite
+from repro.configs.jamba_1_5_large_398b import CONFIG as _jamba
+from repro.configs.whisper_large_v3 import CONFIG as _whisper
+from repro.configs.llama4_scout_17b_a16e import CONFIG as _llama4
+from repro.configs.deepseek_v2_236b import CONFIG as _deepseek
+from repro.configs.rwkv6_3b import CONFIG as _rwkv6
+from repro.configs.rwkv_paper import PAPER_FAMILY
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in (_llava, _llama3, _minicpm3, _yi, _granite,
+              _jamba, _whisper, _llama4, _deepseek, _rwkv6)
+}
+
+ALL_CONFIGS: dict[str, ModelConfig] = {**ARCHS, **PAPER_FAMILY}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return ALL_CONFIGS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(ALL_CONFIGS)}") from None
+
+
+def get_shape(name: str) -> ShapeSpec:
+    return SHAPES[name]
+
+
+def cells(include_long: bool = True):
+    """Yield every valid (config, shape) dry-run cell.
+
+    ``long_500k`` only applies to sub-quadratic archs (ssm/hybrid) per the
+    assignment; full-attention archs skip it (recorded in DESIGN.md §5).
+    """
+    for cfg in ARCHS.values():
+        for shape in SHAPES.values():
+            if shape.name == "long_500k" and not cfg.supports_long_context:
+                continue
+            if shape.name == "long_500k" and not include_long:
+                continue
+            yield cfg, shape
+
+
+__all__ = [
+    "ModelConfig", "ShapeSpec", "SHAPES", "ARCHS", "ALL_CONFIGS",
+    "PAPER_FAMILY", "get_config", "get_shape", "cells", "reduced",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+]

@@ -1,0 +1,232 @@
+"""Model/shape configuration for all assigned architectures.
+
+A single ``ModelConfig`` dataclass covers every family in the assignment
+(dense GQA, MLA, MoE, hybrid Mamba+attention, RWKV6/7, enc-dec audio, VLM
+backbones).  Family-specific fields are simply unused by other families.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab_size: int
+    n_kv_heads: int = 0              # 0 -> = n_heads (MHA); GQA otherwise
+    head_dim: int = 0                # 0 -> d_model // n_heads
+
+    # --- MoE ---
+    n_experts: int = 0               # routed experts (0 = dense FFN)
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                # per-expert FFN dim (0 -> d_ff)
+    moe_every: int = 1               # MoE FFN on layers where (i % moe_every)==moe_offset
+    moe_offset: int = 0
+    first_k_dense: int = 0           # first K layers use a dense FFN (deepseek)
+
+    # --- MLA (multi-head latent attention; minicpm3 / deepseek-v2) ---
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- hybrid (jamba: 1 attention layer per `attn_every`) ---
+    attn_every: int = 0              # 0 -> all layers are attention
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    mamba_dt_rank: int = 0           # 0 -> ceil(d_model/16)
+
+    # --- RWKV ---
+    rwkv_version: int = 0            # 0 = not RWKV; 6 = Finch; 7 = Goose
+    rwkv_head_dim: int = 64
+
+    # --- encoder-decoder (whisper) ---
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    max_source_positions: int = 1500
+
+    # --- modality frontend stub ---
+    frontend: str = "none"           # none | patch_embed | audio_frames
+
+    # --- common ---
+    norm_eps: float = 1e-5
+    rope_theta: float = 500_000.0
+    use_rope: bool = True            # jamba/whisper: no rotary
+    tie_embeddings: bool = False
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True               # activation checkpointing per block
+    supports_long_context: bool = False  # sub-quadratic decode (ssm/hybrid)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def kv_heads(self) -> int:
+        return self.n_kv_heads or self.n_heads
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def dt_rank(self) -> int:
+        return self.mamba_dt_rank or max(1, -(-self.d_model // 16))
+
+    @property
+    def d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    @property
+    def rwkv_n_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.n_experts == 0 or i < self.first_k_dense:
+            return False
+        return (i % self.moe_every) == self.moe_offset
+
+    def is_attn_layer(self, i: int) -> bool:
+        """For hybrid archs: which layers are attention (rest are Mamba)."""
+        if self.attn_every <= 0:
+            return True
+        # jamba: the attention layer sits mid-period (index attn_every//2)
+        return (i % self.attn_every) == (self.attn_every // 2)
+
+    # ------------------------------------------------------------------ #
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, ff, V = self.d_model, self.d_ff, self.vocab_size
+        total = V * d                               # embedding
+        if not self.tie_embeddings:
+            total += d * V                          # lm head
+        enc_layers = self.n_encoder_layers if self.is_encoder_decoder else 0
+        for i in range(self.n_layers):
+            total += self._block_params(i, decoder=True)
+        for i in range(enc_layers):
+            total += self._block_params(i, decoder=False, encoder=True)
+        return total
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only top_k + shared experts count)."""
+        if self.n_experts == 0:
+            return self.n_params()
+        d = self.d_model
+        eff = self.expert_d_ff
+        total = self.n_params()
+        n_moe_layers = sum(self.is_moe_layer(i) for i in range(self.n_layers))
+        inactive = (self.n_experts - self.top_k) * 3 * d * eff * n_moe_layers
+        return total - inactive
+
+    def _attn_params(self) -> int:
+        d, H, KV, hd = self.d_model, self.n_heads, self.kv_heads, self.hd
+        if self.use_mla:
+            qr = self.q_lora_rank or d
+            nope, rope, vh = self.qk_nope_head_dim, self.qk_rope_head_dim, self.v_head_dim
+            p = 0
+            if self.q_lora_rank:
+                p += d * qr + qr * H * (nope + rope)
+            else:
+                p += d * H * (nope + rope)
+            p += d * (self.kv_lora_rank + rope)              # kv down + rope k
+            p += self.kv_lora_rank * H * (nope + vh)         # kv up
+            p += H * vh * d                                  # out proj
+            return p
+        return d * H * hd + 2 * d * KV * hd + H * hd * d
+
+    def _ffn_params(self, i: int) -> int:
+        d = self.d_model
+        if self.is_moe_layer(i):
+            eff = self.expert_d_ff
+            p = self.n_experts * 3 * d * eff + d * self.n_experts  # router
+            p += self.n_shared_experts * 3 * d * eff
+            return p
+        return 3 * d * self.d_ff
+
+    def _block_params(self, i: int, decoder: bool, encoder: bool = False) -> int:
+        d = self.d_model
+        if self.rwkv_version:
+            H, hd = self.rwkv_n_heads, self.rwkv_head_dim
+            # time-mix: r,k,v,o,g projections + decay/mix vectors + ln
+            tm = 5 * d * d + 8 * d + 2 * H * hd
+            if self.rwkv_version == 6:
+                tm += 2 * (d * 32 + 32 * d) * 5 // 5 + (d * 64 + 64 * d)
+            else:
+                tm += 3 * (d * 64 + 64 * d)
+            cm = d * self.d_ff + self.d_ff * d + 2 * d      # channel mix
+            return tm + cm + 4 * d
+        if self.family == "hybrid" and not self.is_attn_layer(i):
+            di, ds, dr = self.d_inner, self.mamba_d_state, self.dt_rank
+            mx = d * 2 * di + di * self.mamba_d_conv + di * (dr + 2 * ds) \
+                + dr * di + di + di * ds + di + di * d
+            return mx + self._ffn_params(i) + 4 * d
+        p = self._attn_params() + self._ffn_params(i) + 4 * d
+        if encoder is False and decoder and self.is_encoder_decoder:
+            p += self._attn_params() + 2 * d                 # cross attention
+        return p
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Small same-family config for CPU smoke tests."""
+    small = dict(
+        n_layers=min(cfg.n_layers, 4),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.kv_heads, 2) if cfg.n_kv_heads else 0,
+        head_dim=32 if cfg.head_dim else 0,
+        d_ff=256,
+        vocab_size=512,
+        param_dtype="float32",
+        compute_dtype="float32",
+        remat=False,
+    )
+    if cfg.n_experts:
+        small.update(n_experts=4, top_k=min(cfg.top_k, 2) or 1,
+                     moe_d_ff=128 if cfg.moe_d_ff else 0,
+                     n_shared_experts=min(cfg.n_shared_experts, 1))
+    if cfg.use_mla:
+        small.update(kv_lora_rank=32, q_lora_rank=64 if cfg.q_lora_rank else 0,
+                     qk_nope_head_dim=16, qk_rope_head_dim=16, v_head_dim=32,
+                     head_dim=0, n_kv_heads=0)
+    if cfg.attn_every:
+        small.update(n_layers=8, attn_every=cfg.attn_every,
+                     mamba_d_state=8, mamba_dt_rank=8)
+    if cfg.rwkv_version:
+        small.update(rwkv_head_dim=32, n_heads=4, n_kv_heads=0, head_dim=0)
+    if cfg.is_encoder_decoder:
+        small.update(n_encoder_layers=2, max_source_positions=64)
+    small.update(overrides)
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **small)

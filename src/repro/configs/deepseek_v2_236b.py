@@ -1,0 +1,33 @@
+"""deepseek-v2-236b — MoE + MLA decoder. [arXiv:2405.04434; hf]
+
+60L d_model=5120 128H, MLA kv_lora_rank=512 q_lora_rank=1536
+(nope/rope head dims 128/64, v_head_dim=128), expert d_ff=1536,
+2 shared + 160 routed experts top-6, vocab=102400.  First layer uses a
+dense FFN (moe_offset=1 with moe_every=1 would make all MoE; deepseek-v2
+keeps layer 0 dense — modeled via moe_offset on i>=1).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=12288,            # dense-FFN layers (layer 0)
+    vocab_size=102400,
+    use_mla=True,
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    qk_nope_head_dim=128,
+    qk_rope_head_dim=64,
+    v_head_dim=128,
+    n_experts=160,
+    n_shared_experts=2,
+    top_k=6,
+    moe_d_ff=1536,
+    moe_every=1,
+    first_k_dense=1,
+    rope_theta=10_000.0,
+)

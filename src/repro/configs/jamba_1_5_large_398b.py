@@ -1,0 +1,29 @@
+"""jamba-1.5-large-398b — hybrid Mamba + attention (1:7) with MoE.
+
+[arXiv:2403.19887; hf] 72L d_model=8192 64H (GQA kv=8) d_ff=24576
+vocab=65536, MoE 16 experts top-2, MoE every 2 layers; attention layer at
+position 4 of each 8-layer period (1 attention : 7 mamba).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    n_experts=16,
+    top_k=2,
+    moe_every=2,
+    moe_offset=1,
+    attn_every=8,
+    mamba_d_state=16,
+    mamba_d_conv=4,
+    mamba_expand=2,
+    use_rope=False,
+    supports_long_context=True,
+)

@@ -1,0 +1,24 @@
+"""llama4-scout-17b-a16e — MoE decoder, 16 experts top-1 + 1 shared expert.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified] 48L d_model=5120 40H
+(GQA kv=8) expert d_ff=8192 vocab=202048, early fusion (text-only backbone
+here; fusion frontend out of scope per assignment).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    n_experts=16,
+    n_shared_experts=1,
+    top_k=1,
+    moe_every=1,
+    rope_theta=500_000.0,
+)

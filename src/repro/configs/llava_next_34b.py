@@ -1,0 +1,20 @@
+"""llava-next-34b — VLM backbone (anyres tiling frontend stubbed).
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf family scaled per assignment; unverified]
+Backbone: 60L, d_model=7168, 56 heads (GQA kv=8), d_ff=20480, vocab=64000.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    frontend="patch_embed",
+    rope_theta=5_000_000.0,
+)

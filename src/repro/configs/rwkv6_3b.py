@@ -1,0 +1,20 @@
+"""rwkv6-3b — RWKV-6 "Finch": attention-free, data-dependent decay.
+
+[arXiv:2404.05892; hf] 32L d_model=2560 d_ff=8960 vocab=65536, head_dim=64.
+The paper's own architecture family — full RWKVQuant applicability
+(hybrid SQ/VQ + element-wise-multiplication codebook optimization).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    n_layers=32,
+    d_model=2560,
+    n_heads=40,
+    d_ff=8960,
+    vocab_size=65536,
+    rwkv_version=6,
+    rwkv_head_dim=64,
+    supports_long_context=True,
+)

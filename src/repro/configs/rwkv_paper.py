@@ -1,0 +1,34 @@
+"""The paper's own RWKV-6/RWKV-7 model sizes (Tables 2/9/10).
+
+Used by the fidelity benchmarks; the quality tables run on ``reduced``
+versions of these, trained from scratch on the synthetic corpus.
+"""
+from repro.configs.base import ModelConfig
+
+
+def _rwkv(name: str, version: int, L: int, d: int, ff_mult: float,
+          vocab: int = 65536) -> ModelConfig:
+    d_ff = int(d * ff_mult) // 32 * 32
+    return ModelConfig(
+        name=name, family="ssm", n_layers=L, d_model=d,
+        n_heads=d // 64, d_ff=d_ff, vocab_size=vocab,
+        rwkv_version=version, rwkv_head_dim=64, supports_long_context=True,
+    )
+
+
+# RWKV-7 "Goose" sizes (paper §4: 0.1B / 0.5B / 1.47B)
+RWKV7_0p1B = _rwkv("rwkv7-0.1b", 7, 12, 768, 4.0)
+RWKV7_0p5B = _rwkv("rwkv7-0.5b", 7, 24, 1024, 4.0)
+RWKV7_1p5B = _rwkv("rwkv7-1.5b", 7, 24, 2048, 4.0)
+
+# RWKV-6 "Finch" sizes (paper §4: 1B / 3B / 7B / 14B)
+RWKV6_1B = _rwkv("rwkv6-1b", 6, 24, 2048, 3.5)
+RWKV6_3B = _rwkv("rwkv6-3b-paper", 6, 32, 2560, 3.5)
+RWKV6_7B = _rwkv("rwkv6-7b", 6, 32, 4096, 3.5)
+RWKV6_14B = _rwkv("rwkv6-14b", 6, 61, 4096, 3.5)
+
+PAPER_FAMILY = {
+    c.name: c
+    for c in (RWKV7_0p1B, RWKV7_0p5B, RWKV7_1p5B,
+              RWKV6_1B, RWKV6_3B, RWKV6_7B, RWKV6_14B)
+}

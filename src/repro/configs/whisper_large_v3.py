@@ -1,0 +1,25 @@
+"""whisper-large-v3 — encoder-decoder audio transformer (conv frontend stubbed).
+
+[arXiv:2212.04356; unverified] 32 encoder + 32 decoder layers, d_model=1280,
+20 heads (MHA), d_ff=5120, vocab=51866.  ``input_specs`` provides precomputed
+mel-frame embeddings (the conv1/conv2 frontend is a stub per assignment).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,
+    n_encoder_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51866,
+    is_encoder_decoder=True,
+    max_source_positions=1500,
+    frontend="audio_frames",
+    use_rope=False,
+    rope_theta=10_000.0,
+)

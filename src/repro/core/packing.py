@@ -1,0 +1,71 @@
+"""Bit-plane packing: b-bit integer codes <-> b uint32 planes.
+
+Layout: ``pack`` turns codes (n, ...) into (b, ceil(n/32), ...) uint32 —
+plane j, word w holds bit j of codes [32w, 32w+32) in its 32 lanes.
+
+Why bit-planes (vs. value-packing k codes per word): storage is *exactly*
+b bits/code for any b (3-bit stays 3.0, not 3.2), and every K-block whose
+size is a multiple of 32 aligns with word boundaries — which is what a
+TPU Pallas kernel needs to unpack with vectorized shifts/masks over
+(bk/32, bn) word tiles.  Packing runs along axis 0 (the input-channel
+axis), so a weight sharded on its output axis keeps its PartitionSpec
+(the plane axis is just a new leading unsharded dim).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANES = 32
+
+
+def pack(codes: jax.Array, bits: int) -> jax.Array:
+    """codes: (n, ...) ints in [0, 2^bits) -> (bits, ceil(n/32), ...) uint32."""
+    assert 1 <= bits <= 16, bits
+    n = codes.shape[0]
+    n_pad = (-n) % LANES
+    if n_pad:
+        pad = [(0, n_pad)] + [(0, 0)] * (codes.ndim - 1)
+        codes = jnp.pad(codes, pad)
+    c = codes.astype(jnp.uint32).reshape((-1, LANES) + codes.shape[1:])
+    r = jnp.arange(LANES, dtype=jnp.uint32).reshape(
+        (1, LANES) + (1,) * (codes.ndim - 1))
+    planes = []
+    for j in range(bits):
+        bitj = (c >> jnp.uint32(j)) & jnp.uint32(1)
+        planes.append(jnp.sum(bitj << r, axis=1, dtype=jnp.uint32))
+    return jnp.stack(planes)                    # (bits, n/32, ...)
+
+
+def unpack(words: jax.Array, bits: int, n: int) -> jax.Array:
+    """Inverse of :func:`pack`: (bits, nw, ...) -> (n, ...) integer codes.
+
+    Codes accumulate in the narrowest sufficient unsigned dtype (uint8
+    for <=8 bits): the unpacked-code intermediate is the dominant HBM
+    tensor of the XLA dequant fallback, so 4 bytes -> 1 byte matters
+    (§Perf pair-3 iteration 2)."""
+    acc_dt = jnp.uint8 if bits <= 8 else jnp.uint16
+    r = jnp.arange(LANES, dtype=jnp.uint32).reshape(
+        (1, LANES) + (1,) * (words.ndim - 2))
+    total = None
+    for j in range(bits):
+        bitj = (words[j][:, None] >> r) & jnp.uint32(1)    # (nw, 32, ...)
+        contrib = bitj.astype(acc_dt) << j
+        total = contrib if total is None else total + contrib
+    out = total.reshape((-1,) + words.shape[2:])
+    return out[:n]
+
+
+def packed_words(n: int) -> int:
+    """Words per plane for n codes."""
+    return -(-n // LANES)
+
+
+def packed_bits_per_code(bits: int) -> float:
+    """Exact b bits/code (modulo the <=31-row tail padding)."""
+    return float(bits)
+
+
+def pack_np(codes: np.ndarray, bits: int) -> np.ndarray:
+    return np.asarray(pack(jnp.asarray(codes), bits))

@@ -1,0 +1,254 @@
+"""Block-wise calibrated PTQ pipeline (the paper's actual procedure).
+
+Processes one layer at a time, GPTQ-style:
+
+    1. run calibration activations through layer i (eager, with capture)
+       -> per-weight Hessians H = XᵀX and ⊙-activation samples
+    2. quantize layer i's weights with the *exact per-layer* Eq. 18
+       decision (SQ->GPTQ / VQ->GPTVQ; μ-class -> §3.2 codebook)
+    3. propagate activations through the QUANTIZED layer (so later layers
+       compensate earlier layers' quantization error)
+
+Supports rwkv6 / rwkv7 / dense+MLA transformer families (the ones used by
+the paper-fidelity quality benchmarks).  Returns a ``QuantizedLM`` whose
+blocks may be *heterogeneous* across layers (true per-layer hybrid).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, replace as dc_replace
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import proxy as proxy_mod
+from repro.core import quantized as qz
+from repro.core.hybrid import (QuantReport, TensorRecord, calibrate,
+                               compute_all_proxies, quantize_tree)
+from repro.core.policy import QuantPolicy
+from repro.models import registry as R
+from repro.models import rwkv6 as m6
+from repro.models import rwkv7 as m7
+from repro.models import transformer as mtx
+from repro.models import layers as ml
+
+
+def _unstack(tree, n):
+    return [jax.tree.map(lambda t: t[i], tree) for i in range(n)]
+
+
+def _restack_ok(blocks: List[Any]) -> bool:
+    """True if every layer produced the same container structure."""
+    s0 = jax.tree.structure(blocks[0],
+                            is_leaf=qz.is_quantized)
+    return all(jax.tree.structure(b, is_leaf=qz.is_quantized) == s0
+               for b in blocks[1:])
+
+
+# --------------------------------------------------------------------------- #
+#  Family adapters
+# --------------------------------------------------------------------------- #
+class _Adapter:
+    """embed() -> per-batch state; run_block(blk, state) -> state;
+    hidden(state) -> final hidden (pre final-norm)."""
+
+    def __init__(self, cfg, params):
+        self.cfg, self.params = cfg, params
+
+    def n_layers(self):
+        return self.cfg.n_layers
+
+    def blocks(self):
+        return _unstack(self.params["blocks"], self.n_layers())
+
+
+class _RWKV6Adapter(_Adapter):
+    def embed(self, batch):
+        return {"x": m6._embed(self.cfg, self.params, batch)}
+
+    def run_block(self, i, blk, st):
+        y, _, _ = m6._block_apply(self.cfg, blk, st["x"])
+        return {"x": y}
+
+    def hidden(self, st):
+        return st["x"]
+
+
+class _RWKV7Adapter(_Adapter):
+    def embed(self, batch):
+        x = m7._embed(self.cfg, self.params, batch)
+        return {"x": x, "v0": jnp.zeros_like(x)}
+
+    def run_block(self, i, blk, st):
+        y, _, v0, _ = m7._block_apply(self.cfg, blk, st["x"], st["v0"],
+                                      i == 0)
+        return {"x": y, "v0": v0}
+
+    def hidden(self, st):
+        return st["x"]
+
+
+class _TransformerAdapter(_Adapter):
+    def embed(self, batch):
+        x = mtx.embed_inputs(self.cfg, self.params, batch)
+        return {"x": x,
+                "pos": jnp.arange(x.shape[1], dtype=jnp.int32)}
+
+    def run_block(self, i, blk, st):
+        y, _ = mtx._block_apply(self.cfg, blk, st["x"], st["pos"],
+                                self.cfg.is_moe_layer(i))
+        return dict(st, x=y)
+
+    def hidden(self, st):
+        return st["x"]
+
+
+def adapter_for(cfg, params) -> _Adapter:
+    if cfg.rwkv_version == 6:
+        return _RWKV6Adapter(cfg, params)
+    if cfg.rwkv_version == 7:
+        return _RWKV7Adapter(cfg, params)
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _TransformerAdapter(cfg, params)
+    raise NotImplementedError(
+        f"blockwise pipeline does not support family {cfg.family!r}; "
+        "use core.hybrid.quantize_tree (data-free) instead")
+
+
+# --------------------------------------------------------------------------- #
+#  The pipeline
+# --------------------------------------------------------------------------- #
+@dataclass
+class QuantizedLM:
+    cfg: Any
+    embed_params: Dict[str, Any]     # embed (+ln0) etc.
+    blocks: List[Any]                # per-layer (possibly heterogeneous)
+    tail: Dict[str, Any]             # final_norm (+ lm_head)
+    report: QuantReport
+
+    def hidden(self, batch):
+        ad = adapter_for(self.cfg, {**self.embed_params, "blocks": None})
+        st = ad.embed(batch)
+        for i, blk in enumerate(self.blocks):
+            st = ad.run_block(i, blk, st)
+        return ad.hidden(st)
+
+    def logits(self, batch):
+        h = self.hidden(batch)
+        h = ml.rms_norm(h, self.tail["final_norm"], self.cfg.norm_eps)
+        w = self.tail.get("lm_head")
+        if w is None:                               # tied embeddings
+            emb = qz.dequant(self.embed_params["embed"])
+            return jnp.matmul(h, emb.T.astype(h.dtype))
+        return qz.matmul(h, w)
+
+    def nll(self, batch):
+        lg = self.logits(batch).astype(jnp.float32)
+        tgt = batch["labels"]
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tgt[..., None], -1)[..., 0]
+        return jnp.mean(lse - gold)
+
+    def param_bytes(self) -> int:
+        return (qz.param_bytes(self.embed_params)
+                + sum(qz.param_bytes(b) for b in self.blocks)
+                + qz.param_bytes(self.tail))
+
+
+def blockwise_quantize(cfg, params, batches: List[Dict], policy: QuantPolicy,
+                       key, proxy_fn=None) -> QuantizedLM:
+    """Calibrated per-layer hybrid quantization (see module docstring).
+
+    ``proxy_fn(path, layer, w) -> (pc, pf)`` optionally replaces the
+    coarse-to-fine proxy (paper Table 6 ablation: variance/CV/range/...).
+    """
+    ad = adapter_for(cfg, params)
+    n_layers = ad.n_layers()
+
+    # 1) global proxy calibration over every block weight (data-free)
+    if proxy_fn is None:
+        proxies = compute_all_proxies(params, policy)
+    else:
+        from repro.core.hybrid import iter_quantizable, _layer_slices
+        proxies = {}
+        for ps, leaf, kind, stacked in iter_quantizable(params, policy):
+            if kind not in ("matmul", "matmul_nd"):
+                continue
+            for li, w in _layer_slices(leaf, stacked):
+                if kind == "matmul_nd":
+                    w = w.reshape(-1, w.shape[-1])
+                proxies[(ps, li)] = proxy_fn(ps, li, w)
+    th = calibrate(proxies, policy)
+    pol = dc_replace(policy, tau_c=th.tau_c, tau_f=th.tau_f)
+
+    report = QuantReport(tau_c=th.tau_c, tau_f=th.tau_f)
+    states = [ad.embed(b) for b in batches]
+    qblocks = []
+    for i, blk in enumerate(ad.blocks()):
+        # capture calibration stats for this layer
+        with qz.capture_stats() as cap:
+            for st in states:
+                ad.run_block(i, blk, st)
+        leaf_by_path = {
+            "/".join(str(getattr(kk, "key", getattr(kk, "idx", kk)))
+                     for kk in path): leaf
+            for path, leaf in jax.tree_util.tree_flatten_with_path(blk)[0]}
+
+        def stats_fn(path, layer):
+            leaf = leaf_by_path.get(path)
+            if leaf is None:
+                return None
+            return {"H": cap.hessian(leaf), "acts": cap.emul_acts(leaf)}
+
+        # per-block proxies from the global pass (keys shift to block-local)
+        block_proxies = {(bp, -1): proxies[(f"blocks/{bp}", i)]
+                         for (gp, li) in list(proxies)
+                         if li == i and gp.startswith("blocks/")
+                         for bp in [gp[len("blocks/"):]]}
+        key, sub = jax.random.split(key)
+        qblk, rep = quantize_tree(blk, pol, sub, stats_fn=stats_fn,
+                                  proxies=block_proxies or None)
+        for r in rep.records:
+            report.records.append(dataclasses.replace(r, layer=i))
+        qblocks.append(qblk)
+        # 3) propagate through the quantized layer
+        states = [ad.run_block(i, qblk, st) for st in states]
+
+    # quantize the LM head with a Hessian from the final hidden states
+    embed_params = {k: v for k, v in params.items()
+                    if k in ("embed", "ln0")}
+    tail = {"final_norm": params["final_norm"]}
+    if "lm_head" in params and policy.quantize_head:
+        hiddens = [ml.rms_norm(ad.hidden(st), params["final_norm"],
+                               cfg.norm_eps) for st in states]
+        with qz.capture_stats() as cap:
+            for h in hiddens:
+                qz.matmul(h, params["lm_head"])
+
+        def head_stats(path, layer):
+            return {"H": cap.hessian(params["lm_head"])}
+
+        key, sub = jax.random.split(key)
+        qhead, rep = quantize_tree({"lm_head": params["lm_head"]}, pol, sub,
+                                   stats_fn=head_stats)
+        report.records.extend(rep.records)
+        tail["lm_head"] = qhead["lm_head"]
+    elif "lm_head" in params:
+        tail["lm_head"] = params["lm_head"]
+    return QuantizedLM(cfg=cfg, embed_params=embed_params, blocks=qblocks,
+                       tail=tail, report=report)
+
+
+def float_lm(cfg, params) -> QuantizedLM:
+    """Wrap unquantized params in the same eval interface."""
+    ad = adapter_for(cfg, params)
+    tail = {"final_norm": params["final_norm"]}
+    if "lm_head" in params:
+        tail["lm_head"] = params["lm_head"]
+    return QuantizedLM(cfg=cfg,
+                       embed_params={k: v for k, v in params.items()
+                                     if k in ("embed", "ln0")},
+                       blocks=ad.blocks(), tail=tail,
+                       report=QuantReport())

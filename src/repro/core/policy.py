@@ -1,0 +1,91 @@
+"""Quantization policy: bit budgets, method selection, bpw accounting.
+
+Paper settings (§4.1): SQ at 3.25 bpw on ~9/10 of the layers, VQ at 3.5
+bpw on the rest ⇒ ~3.275 bpw average.  With fp16 scale+bias pairs,
+3-bit group-128 gives 3 + 32/128 = 3.25 and group-64 gives 3.5; VQ with
+d=2, k=7 gives 3.5 + (KiB-scale codebook)/numel.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class QuantPolicy:
+    # scalar quantization (compensation-based)
+    sq_method: str = "gptq"          # gptq | rtn
+    sq_bits: int = 3
+    sq_group: int = 128              # 3.25 bpw nominal
+    # vector quantization
+    vq_method: str = "gptvq"         # gptvq | kmeans
+    vq_d: int = 2
+    vq_k: int = 7                    # 3.5 bpw nominal
+    kmeans_iters: int = 20
+    # element-wise (x ⊙ μ) codebook optimization (§3.2)
+    ew_enabled: bool = True
+    ew_d: int = 4
+    ew_k: int = 6
+    ew_clip_pct: float = 99.0
+    ew_use_clipping: bool = True
+    ew_weighted: bool = True         # False: unweighted k-means ('wo.' ablation)
+    # hybrid selection
+    sq_fraction: float = 0.9
+    proxy_K: int = 4
+    tau_c: Optional[float] = None    # None -> calibrate to sq_fraction
+    tau_f: Optional[float] = None
+    force_method: Optional[str] = None   # 'sq'|'vq': disable the proxy
+    # scope
+    min_weight_numel: int = 1024
+    quantize_embed: bool = False
+    quantize_head: bool = True
+    percdamp: float = 0.01
+
+    def sq_bpw(self) -> float:
+        return self.sq_bits + 32.0 / self.sq_group
+
+    def vq_bpw(self) -> float:
+        return self.vq_k / self.vq_d         # + codebook/numel (tensor-dep.)
+
+
+# paper's operating point
+PAPER_3_275 = QuantPolicy()
+# bpw-matched single-method baselines (paper tables)
+SQ_ONLY_3_25 = replace(PAPER_3_275, force_method="sq")
+SQ_ONLY_3_5 = replace(PAPER_3_275, force_method="sq", sq_group=64)
+VQ_ONLY_3_5 = replace(PAPER_3_275, force_method="vq")
+RTN_3_5 = replace(SQ_ONLY_3_5, sq_method="rtn")
+KMEANS_3_5 = replace(VQ_ONLY_3_5, vq_method="kmeans")
+DATAFREE_3_275 = replace(PAPER_3_275, sq_method="rtn", vq_method="kmeans")
+
+
+# --------------------------------------------------------------------------- #
+#  Leaf classification
+# --------------------------------------------------------------------------- #
+# element-wise multiplication weights (RWKV μ-class; paper §3.2)
+EW_PATTERNS = re.compile(
+    r"(^|/)(mu_[a-z]+|bonus|bonus_rk|kappa_k|adapt_k)$")
+# never quantized: norms, small biases/bases, routers, convs
+SKIP_PATTERNS = re.compile(
+    r"(^|/)(ln[0-9x]?|.*norm.*|g|b|router|conv_w|conv_b|dt_bias|A_log|D|"
+    r"decay_w|iclr_base|v_base|pos_embed)$")
+
+
+def classify(path: str, leaf, policy: QuantPolicy) -> str:
+    """'matmul' | 'elementwise' | 'skip' for one param leaf."""
+    import numpy as np
+    shape = getattr(leaf, "shape", ())
+    numel = int(np.prod(shape)) if shape else 0
+    name = path.split("/")[-1]
+    if SKIP_PATTERNS.search(path):
+        return "skip"
+    if EW_PATTERNS.search(path):
+        return "elementwise" if policy.ew_enabled and numel >= 8 else "skip"
+    if name == "embed":
+        return "matmul" if policy.quantize_embed else "skip"
+    if name == "lm_head":
+        return "matmul" if policy.quantize_head else "skip"
+    if len(shape) >= 2 and numel >= policy.min_weight_numel:
+        return "matmul"
+    return "skip"

@@ -1,0 +1,159 @@
+"""RWKVQuant coarse-to-fine proxy (paper §3.1, Eqs. 5-18).
+
+Coarse proxy  P_c = H(Ĝ') - H(G') = log(n) - H(G')      (Eq. 9)
+Fine proxy    P_f = Σ_{k=2..K} v_k |M_k|,  v_k = n^k/(k(k-1))   (Eq. 17)
+
+where G' is the normalized distribution of adjacent intervals of the
+sorted, flattened weight.  P_f is evaluated with normalized deviations
+δ'_i = n·G'_i − 1 (so v_k·M_k = E[δ'^k]/(k(k-1))), which is algebraically
+identical to Eq. 17 but does not overflow for n ~ 10^8.
+
+Decision rule (Eq. 18):  SQ  iff  P_c < τ_c and P_f < τ_f;  else VQ.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_K = 4  # highest central moment (variance, skewness, kurtosis)
+
+
+def interval_distribution(w: jax.Array) -> jax.Array:
+    """Flatten -> sort -> adjacent intervals -> normalize (Eqs. 5-6)."""
+    flat = jnp.sort(w.astype(jnp.float32).reshape(-1))
+    g = flat[1:] - flat[:-1]                         # (n,), all >= 0
+    total = jnp.sum(g)
+    return g / jnp.maximum(total, 1e-30)
+
+
+def coarse_proxy(w: jax.Array) -> jax.Array:
+    """P_c in nats (Eq. 9). 0 for perfectly uniform weights."""
+    gp = interval_distribution(w)
+    n = gp.shape[0]
+    h = -jnp.sum(jnp.where(gp > 0, gp * jnp.log(gp), 0.0))
+    return jnp.log(float(n)) - h
+
+
+def fine_proxy(w: jax.Array, K: int = DEFAULT_K) -> jax.Array:
+    """P_f (Eq. 17), overflow-free via δ' = n·G' − 1."""
+    gp = interval_distribution(w)
+    n = gp.shape[0]
+    nd = float(n) * gp - 1.0                         # δ'_i, O(1) when uniform
+    total = jnp.float32(0.0)
+    acc = nd * nd                                    # δ'^2
+    for k in range(2, K + 1):
+        mk = jnp.mean(acc)
+        total = total + jnp.abs(mk) / (k * (k - 1))
+        acc = acc * nd
+    return total
+
+
+@jax.jit
+def proxies(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(P_c, P_f) in one pass over the sorted intervals."""
+    gp = interval_distribution(w)
+    n = gp.shape[0]
+    h = -jnp.sum(jnp.where(gp > 0, gp * jnp.log(gp), 0.0))
+    pc = jnp.log(float(n)) - h
+    nd = float(n) * gp - 1.0
+    pf = jnp.float32(0.0)
+    acc = nd * nd
+    for k in range(2, DEFAULT_K + 1):
+        pf = pf + jnp.abs(jnp.mean(acc)) / (k * (k - 1))
+        acc = acc * nd
+    return pc, pf
+
+
+def decide(pc: float, pf: float, tau_c: float, tau_f: float) -> str:
+    """Eq. 18: 'sq' (φ=1) or 'vq' (φ=0)."""
+    return "sq" if (pc < tau_c and pf < tau_f) else "vq"
+
+
+# --------------------------------------------------------------------------- #
+#  Alternative proxies (paper Table 6 ablation)
+# --------------------------------------------------------------------------- #
+def _gp_np(w) -> np.ndarray:
+    flat = np.sort(np.asarray(w, dtype=np.float64).reshape(-1))
+    g = flat[1:] - flat[:-1]
+    return g / max(g.sum(), 1e-30)
+
+
+def proxy_variance(w) -> float:
+    gp = _gp_np(w)
+    n = gp.shape[0]
+    return float(np.var(n * gp))
+
+
+def proxy_cv(w) -> float:
+    gp = _gp_np(w)
+    m = gp.mean()
+    return float(gp.std() / max(m, 1e-30))
+
+
+def proxy_range(w) -> float:
+    gp = _gp_np(w)
+    n = gp.shape[0]
+    return float((gp.max() - gp.min()) * n)
+
+
+def proxy_mad(w) -> float:
+    gp = _gp_np(w)
+    n = gp.shape[0]
+    return float(np.mean(np.abs(n * gp - 1.0)))
+
+
+def proxy_ie(w) -> float:
+    """Coarse IE proxy alone (paper Table 6 row 'IE')."""
+    return float(coarse_proxy(jnp.asarray(w)))
+
+
+ABLATION_PROXIES = {
+    "variance": proxy_variance,
+    "cv": proxy_cv,
+    "range": proxy_range,
+    "mad": proxy_mad,
+    "ie": proxy_ie,
+}
+
+
+# --------------------------------------------------------------------------- #
+#  Threshold calibration
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Thresholds:
+    tau_c: float
+    tau_f: float
+
+
+def calibrate_thresholds(pcs: Dict[str, float], pfs: Dict[str, float],
+                         sq_fraction: float = 0.9) -> Thresholds:
+    """Choose (τ_c, τ_f) so ~``sq_fraction`` of weights select SQ.
+
+    Mirrors the paper's setup ("SQ ... in nine-tenths of the layers"):
+    τ_c is the (sq_fraction + margin)-quantile of P_c, then τ_f is set on
+    the weights passing τ_c so the joint rule hits the target fraction.
+    """
+    names = sorted(pcs)
+    pc = np.array([pcs[n] for n in names])
+    pf = np.array([pfs[n] for n in names])
+    m = len(names)
+    if m == 0:
+        return Thresholds(float("inf"), float("inf"))
+    n_sq = int(round(sq_fraction * m))
+    if n_sq >= m:
+        return Thresholds(float("inf"), float("inf"))
+    if n_sq == 0:
+        return Thresholds(-float("inf"), -float("inf"))
+    # coarse gate: admit a little extra so the fine gate has room to act
+    n_pass = min(m, max(n_sq + max(1, m // 20), n_sq))
+    tau_c = float(np.sort(pc)[n_pass - 1]) + 1e-12
+    passing = pf[pc < tau_c]
+    k = n_sq
+    tau_f = float(np.sort(passing)[k - 1]) + 1e-12 if k <= len(passing) \
+        else float("inf")
+    return Thresholds(tau_c, tau_f)

@@ -1,0 +1,58 @@
+"""AWQ (activation-aware weight quantization) baseline.
+
+Searches a per-input-channel scale s (grid over α) minimizing the
+calibrated output error of RTN(W·s) applied to x/s.  On T-LLMs the scale
+folds into the preceding op; on RWKV the token-shift/sigmoid/exp
+non-linearities block the fusion (paper §1 constraint #1), so the runtime
+must pay an extra element-wise multiply — represented here by keeping the
+scale explicit in the result.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantized import SQTensor
+from repro.core.sq.rtn import rtn_quantize
+
+
+@dataclass
+class AWQResult:
+    qweight: SQTensor            # RTN(W * s)
+    in_scale: jax.Array          # (ic,) — runtime applies x / s (unfused!)
+
+    def dequant_effective(self) -> jax.Array:
+        """Effective weight  diag(1/s) @ dequant(Q(W s))."""
+        return self.qweight.dequant() / self.in_scale[:, None]
+
+
+def awq_quantize(w: jax.Array, act_absmean: Optional[jax.Array], bits: int,
+                 group: int, n_grid: int = 20) -> AWQResult:
+    """w: (ic, oc); act_absmean: (ic,) mean |x| per input channel."""
+    ic, oc = w.shape
+    wf = w.astype(jnp.float32)
+    if act_absmean is None:
+        act_absmean = jnp.ones((ic,), jnp.float32)
+    a = jnp.maximum(act_absmean.astype(jnp.float32), 1e-8)
+    wmax = jnp.maximum(jnp.max(jnp.abs(wf), axis=1), 1e-8)      # (ic,)
+
+    best = (jnp.inf, None, None)
+    for gi in range(n_grid + 1):
+        alpha = gi / n_grid
+        s = (a ** alpha) / (wmax ** (1.0 - alpha))
+        s = s / jnp.maximum(jnp.mean(s), 1e-12)                # normalize
+        qt = rtn_quantize(wf * s[:, None], bits, group)
+        w_eff = qt.dequant().astype(jnp.float32) / s[:, None]
+        # proxy for output error: activation-weighted weight error
+        err = float(jnp.sum((a[:, None] * (wf - w_eff)) ** 2))
+        if err < best[0]:
+            best = (err, qt, s)
+    return AWQResult(qweight=best[1], in_scale=best[2])
+
+
+def apply_awq(x: jax.Array, r: AWQResult) -> jax.Array:
+    """Runtime matmul with the UNFUSED input scale (RWKV overhead)."""
+    return jnp.matmul(x / r.in_scale, r.qweight.dequant().astype(x.dtype))

@@ -1,0 +1,112 @@
+"""GPTQ (Frantar et al., 2022): compensation-based scalar quantization.
+
+Column-serial quantization with second-order error propagation:
+given Hessian H = 2 X Xᵀ (we drop the 2: it cancels), let U be the upper
+Cholesky factor of H⁻¹.  Quantizing column i with error e_i updates the
+remaining columns  W[:, j>i] -= e_i · U[i, j] / U[i, i].
+
+The whole loop is a single ``lax.fori_loop`` (compiles once per shape);
+group scale/bias are (re)computed from the *compensated* weights whenever
+a group boundary is entered, matching the reference implementation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import packing
+from repro.core.quantized import SQTensor
+
+
+def hessian_from_acts(x: jax.Array) -> jax.Array:
+    """x: (..., ic) calibration activations -> (ic, ic) f32 Hessian."""
+    xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    return xf.T @ xf
+
+
+def _prep_hinv_cholesky(H: jax.Array, percdamp: float) -> jax.Array:
+    """Upper Cholesky factor of H^-1 with diagonal damping."""
+    ic = H.shape[0]
+    damp = percdamp * jnp.mean(jnp.diag(H)) + 1e-8
+    Hd = H + damp * jnp.eye(ic, dtype=H.dtype)
+    # H^-1 via Cholesky solve, then its upper factor
+    Lc = jnp.linalg.cholesky(Hd)
+    eye = jnp.eye(ic, dtype=H.dtype)
+    Hinv = jax.scipy.linalg.cho_solve((Lc, True), eye)
+    # symmetrize for numerical safety
+    Hinv = 0.5 * (Hinv + Hinv.T)
+    U = jnp.linalg.cholesky(Hinv + 1e-12 * eye, upper=True)
+    return U
+
+
+from functools import partial
+
+
+@partial(jax.jit, static_argnums=(2, 3))
+def _gptq_core(wT: jax.Array, U: jax.Array, bits: int, group: int):
+    """wT: (oc, ic) f32. Returns (codes (oc, ic) int32, scales, biases)."""
+    oc, ic = wT.shape
+    n_groups = ic // group
+    qmax = 2 ** bits - 1
+
+    def body(i, state):
+        W, codes, scales, biases = state
+        gidx = i // group
+
+        def enter_group(sb):
+            scales_, biases_ = sb
+            blk = lax.dynamic_slice(W, (0, gidx * group), (oc, group))
+            mn = jnp.min(blk, axis=1)
+            mx = jnp.max(blk, axis=1)
+            s = (mx - mn) / qmax
+            s = jnp.where(s <= 0, 1.0, s)
+            scales_ = lax.dynamic_update_slice(scales_, s[:, None], (0, gidx))
+            biases_ = lax.dynamic_update_slice(biases_, mn[:, None], (0, gidx))
+            return scales_, biases_
+
+        scales, biases = lax.cond(i % group == 0, enter_group,
+                                  lambda sb: sb, (scales, biases))
+        s = lax.dynamic_slice(scales, (0, gidx), (oc, 1))[:, 0]
+        b = lax.dynamic_slice(biases, (0, gidx), (oc, 1))[:, 0]
+        wcol = lax.dynamic_slice(W, (0, i), (oc, 1))[:, 0]
+        code = jnp.clip(jnp.round((wcol - b) / s), 0, qmax)
+        wq = code * s + b
+        err = (wcol - wq) / U[i, i]
+        urow = U[i]                                   # (ic,)
+        mask = jnp.arange(ic) > i
+        W = W - err[:, None] * jnp.where(mask, urow, 0.0)[None, :]
+        W = lax.dynamic_update_slice(W, wq[:, None], (0, i))
+        codes = lax.dynamic_update_slice(
+            codes, code.astype(jnp.int32)[:, None], (0, i))
+        return W, codes, scales, biases
+
+    init = (wT,
+            jnp.zeros((oc, ic), jnp.int32),
+            jnp.ones((oc, n_groups), jnp.float32),
+            jnp.zeros((oc, n_groups), jnp.float32))
+    _, codes, scales, biases = lax.fori_loop(0, ic, body, init)
+    return codes, scales, biases
+
+
+def gptq_quantize(w: jax.Array, H: Optional[jax.Array], bits: int,
+                  group: int, percdamp: float = 0.01,
+                  store_dtype=jnp.float16) -> SQTensor:
+    """w: (ic, oc); H: (ic, ic) f32 from calibration (None -> identity=RTN).
+
+    Returns an SQTensor (same layout as RTN: codes packed along ic)."""
+    ic, oc = w.shape
+    assert ic % group == 0, (ic, group)
+    wf = w.astype(jnp.float32)
+    if H is None:
+        H = jnp.eye(ic, dtype=jnp.float32)
+    U = _prep_hinv_cholesky(H.astype(jnp.float32), percdamp)
+    codes, scales, biases = _gptq_core(wf.T, U, bits, group)
+    # transpose back: codes (oc, ic) -> (ic, oc); scales (oc, g) -> (g, oc)
+    return SQTensor(
+        packed=packing.pack(codes.T, bits),
+        scales=scales.T.astype(store_dtype),
+        biases=biases.T.astype(store_dtype),
+        shape=(ic, oc), bits=bits, group=group)

@@ -1,0 +1,57 @@
+"""QuaRot-style rotation baseline: quantize Qᵀ·W after a random orthogonal
+(Hadamard) rotation of the input space.
+
+On T-LLMs Q folds into the previous linear/norm; RWKV's non-linear
+operators on the fusion path (token-shift, sigmoid, exp) block this, so
+the runtime must materialize x @ Q — an extra (ic × ic) matmul per
+projection.  ``flop_overhead`` quantifies the paper's ">99% extra FLOPs"
+claim; the roofline benchmark charges it to the compute term.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from scipy.linalg import hadamard
+
+from repro.core.quantized import SQTensor
+from repro.core.sq.rtn import rtn_quantize
+
+
+def orthogonal_matrix(n: int, seed: int = 0) -> jnp.ndarray:
+    """Normalized Hadamard if n is a power of two, else Haar-random Q."""
+    if n & (n - 1) == 0:
+        return jnp.asarray(hadamard(n).astype(np.float32) / np.sqrt(n))
+    rng = np.random.default_rng(seed)
+    qm, _ = np.linalg.qr(rng.standard_normal((n, n)).astype(np.float64))
+    return jnp.asarray(qm.astype(np.float32))
+
+
+@dataclass
+class RotResult:
+    qweight: SQTensor            # RTN(Qᵀ W)
+    Q: jax.Array                 # (ic, ic) rotation, NOT fusable in RWKV
+
+    def dequant_effective(self) -> jax.Array:
+        return self.Q @ self.qweight.dequant().astype(jnp.float32)
+
+
+def rotate_quantize(w: jax.Array, bits: int, group: int,
+                    seed: int = 0) -> RotResult:
+    ic, oc = w.shape
+    Q = orthogonal_matrix(ic, seed)
+    wr = Q.T @ w.astype(jnp.float32)
+    return RotResult(qweight=rtn_quantize(wr, bits, group), Q=Q)
+
+
+def apply_rotated(x: jax.Array, r: RotResult) -> jax.Array:
+    """Runtime: x @ Q (unfused rotation) then quantized matmul."""
+    xr = jnp.matmul(x, r.Q.astype(x.dtype))
+    return jnp.matmul(xr, r.qweight.dequant().astype(x.dtype))
+
+
+def flop_overhead(ic: int, oc: int) -> float:
+    """Extra FLOPs fraction from the unfused rotation: ic²/(ic·oc)."""
+    return ic / oc

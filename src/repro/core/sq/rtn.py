@@ -1,0 +1,43 @@
+"""Round-to-nearest group-wise scalar quantization (asymmetric, Eq. 2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.quantized import SQTensor
+
+
+def quant_params(wg: jax.Array, bits: int):
+    """Per-group scale/bias from a (n_groups, group, oc) view."""
+    mn = jnp.min(wg, axis=1)
+    mx = jnp.max(wg, axis=1)
+    qmax = 2 ** bits - 1
+    scale = (mx - mn) / qmax
+    scale = jnp.where(scale <= 0, 1.0, scale)
+    return scale, mn
+
+
+def rtn_quantize(w: jax.Array, bits: int, group: int,
+                 store_dtype=jnp.float16) -> SQTensor:
+    """w: (ic, oc) -> SQTensor with codes packed along ic."""
+    ic, oc = w.shape
+    assert ic % group == 0, (ic, group)
+    wf = w.astype(jnp.float32)
+    wg = wf.reshape(ic // group, group, oc)
+    scale, bias = quant_params(wg, bits)
+    codes = jnp.clip(jnp.round((wg - bias[:, None]) / scale[:, None]),
+                     0, 2 ** bits - 1).astype(jnp.int32)
+    return SQTensor(
+        packed=packing.pack(codes.reshape(ic, oc), bits),
+        scales=scale.astype(store_dtype),
+        biases=bias.astype(store_dtype),
+        shape=(ic, oc), bits=bits, group=group)
+
+
+def rtn_quantize_1d(w: jax.Array, bits: int, group: int = 0,
+                    store_dtype=jnp.float16) -> SQTensor:
+    """1-D weight (element-wise μ etc.): stored as an (n,1) container."""
+    n = w.shape[0]
+    g = group if (group and n % group == 0) else n
+    return rtn_quantize(w.reshape(n, 1), bits, g, store_dtype)

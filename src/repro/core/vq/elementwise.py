@@ -1,0 +1,71 @@
+"""Codebook optimization for element-wise multiplication (paper §3.2).
+
+For RWKV's ``x ⊙ μ`` weights the quantization loss is
+``L = Σ X²ᵢⱼ (Δμᵢⱼ)²`` (Eq. 19), so the codebook is built with an
+X²-weighted k-means.  Batches of calibration activations are integrated by
+percentile-clipping each channel before averaging (Fig. 4): activations
+are ≈ normal and raw means are corrupted by outliers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.quantized import VQTensor
+from repro.core.vq.kmeans import kmeans
+
+
+def clipped_mean(acts: jax.Array, pct: float = 99.0) -> jax.Array:
+    """Percentile-clip each channel, then average over samples.
+
+    acts: (n_samples, n) activations observed entering the ⊙ op."""
+    a = jnp.asarray(acts, jnp.float32)
+    lo = jnp.percentile(a, 100.0 - pct, axis=0)
+    hi = jnp.percentile(a, pct, axis=0)
+    return jnp.mean(jnp.clip(a, lo[None, :], hi[None, :]), axis=0)
+
+
+def representative_x(acts: jax.Array, pct: float = 99.0,
+                     use_clipping: bool = True) -> jax.Array:
+    """Per-channel representative |X| (the batch-integration of §3.2).
+
+    Eq. 19's objective weights are Σ_i X²ᵢⱼ, so the representative is
+    taken on |X| (zero-mean channels would otherwise cancel to 0);
+    percentile clipping before averaging suppresses the outlier rows
+    shown in Fig. 4."""
+    a = jnp.abs(jnp.asarray(acts, jnp.float32))
+    if use_clipping:
+        hi = jnp.percentile(a, pct, axis=0)
+        a = jnp.minimum(a, hi[None, :])
+    return jnp.mean(a, axis=0)
+
+
+def elementwise_vq(mu: jax.Array, acts: Optional[jax.Array], d: int, k: int,
+                   key: jax.Array, pct: float = 99.0,
+                   kmeans_iters: int = 25, use_clipping: bool = True,
+                   store_dtype=jnp.float16) -> VQTensor:
+    """Quantize a 1-D element-wise weight with the §3.2 codebook.
+
+    mu: (n,); acts: (n_samples, n) calibration inputs to the ⊙ op, or
+    None for the unweighted fallback.  Returns an (n, 1) VQTensor.
+    """
+    n = mu.shape[0]
+    assert n % d == 0, (n, d)
+    vecs = mu.astype(jnp.float32).reshape(n // d, d)
+    if acts is not None:
+        xbar = representative_x(acts, pct, use_clipping)
+        Wimp = (xbar * xbar).reshape(n // d, d) + 1e-8          # Eq. 19: X²
+    else:
+        Wimp = None
+    K = min(2 ** k, n // d)  # cannot have more centroids than vectors
+    kk = int(np.log2(K)) if K & (K - 1) == 0 else k
+    cb, assign = kmeans(vecs, K, key, kmeans_iters, weights=Wimp)
+    if K < 2 ** k:
+        cb = jnp.pad(cb, ((0, 2 ** k - K), (0, 0)))
+    return VQTensor(packed=packing.pack(assign.reshape(n // d, 1), k),
+                    codebook=cb[None].astype(store_dtype),
+                    shape=(n, 1), d=d, k=k)

@@ -1,0 +1,108 @@
+"""GPTVQ-style vector quantization with GPTQ error compensation.
+
+Vectors of dimension ``d`` run along the input-channel axis.  Processing
+ic in blocks of ``d`` columns (transposed view), each row's d-vector is
+assigned to the nearest codebook entry; the block error is propagated to
+the remaining columns through the upper Cholesky factor of H⁻¹ (the
+blocked-GPTQ "lazy batch" update):
+
+    E   = W_b − Q_b                      (oc, d)
+    W_rest -= (E @ inv(U_bb)) @ U_b,rest
+
+The codebook is seeded with Hessian-diagonal-weighted k-means over all
+vectors of the tensor (GPTVQ's importance weighting).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import packing
+from repro.core.quantized import VQTensor
+from repro.core.sq.gptq import _prep_hinv_cholesky
+from repro.core.vq.kmeans import kmeans, _pairwise
+
+
+def vectors_of(w: jax.Array, d: int) -> jax.Array:
+    """(ic, oc) -> (ic//d * oc, d), vectors along ic, oc-major inner."""
+    ic, oc = w.shape
+    return w.reshape(ic // d, d, oc).transpose(0, 2, 1).reshape(-1, d)
+
+
+def assign_to_indices(assign: jax.Array, ic: int, oc: int, d: int):
+    return assign.reshape(ic // d, oc)
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _vq_compensate(wT: jax.Array, U: jax.Array, cb: jax.Array, d: int):
+    """wT: (oc, ic); cb: (K, d). Returns (assign (oc, ic//d), wq (oc, ic))."""
+    oc, ic = wT.shape
+    nb = ic // d
+
+    def body(bi, state):
+        W, assign = state
+        start = bi * d
+        blk = lax.dynamic_slice(W, (0, start), (oc, d))        # (oc, d)
+        dist = _pairwise(blk, cb)                              # (oc, K)
+        a = jnp.argmin(dist, axis=1)                           # (oc,)
+        qblk = cb[a]                                           # (oc, d)
+        E = blk - qblk
+        # solve E @ inv(U_bb): U_bb upper triangular (d, d)
+        Ubb = lax.dynamic_slice(U, (start, start), (d, d))
+        Err = jax.scipy.linalg.solve_triangular(
+            Ubb.T, E.T, lower=True).T                          # (oc, d)
+        Urest = lax.dynamic_slice(U, (start, 0), (d, ic))      # rows of U
+        mask = (jnp.arange(ic) >= start + d).astype(W.dtype)
+        W = W - (Err @ Urest) * mask[None, :]
+        W = lax.dynamic_update_slice(W, qblk, (0, start))
+        assign = lax.dynamic_update_slice(
+            assign, a.astype(jnp.int32)[:, None], (0, bi))
+        return W, assign
+
+    init = (wT, jnp.zeros((oc, nb), jnp.int32))
+    W, assign = lax.fori_loop(0, nb, body, init)
+    return assign, W
+
+
+def gptvq_quantize(w: jax.Array, H: Optional[jax.Array], d: int, k: int,
+                   key: jax.Array, kmeans_iters: int = 25,
+                   percdamp: float = 0.01,
+                   store_dtype=jnp.float16) -> VQTensor:
+    """w: (ic, oc); H: (ic, ic) or None (data-free: plain k-means VQ)."""
+    ic, oc = w.shape
+    assert ic % d == 0, (ic, d)
+    wf = w.astype(jnp.float32)
+    K = 2 ** k
+
+    vecs = vectors_of(wf, d)                                   # (N, d)
+    if H is not None:
+        hd = jnp.maximum(jnp.diag(H).astype(jnp.float32), 1e-10)
+        # per-element importance: H diag per ic position
+        Wimp = hd.reshape(ic // d, d)[:, None, :].repeat(oc, 1).reshape(-1, d)
+    else:
+        Wimp = None
+    cb, _ = kmeans(vecs, K, key, kmeans_iters, weights=Wimp)
+
+    if H is not None:
+        U = _prep_hinv_cholesky(H.astype(jnp.float32), percdamp)
+        assign, _ = _vq_compensate(wf.T, U, cb, d)
+        idx = assign.T                                         # (ic//d, oc)
+    else:
+        dist = _pairwise(vecs, cb)
+        idx = jnp.argmin(dist, axis=1).reshape(ic // d, oc)
+
+    return VQTensor(packed=packing.pack(idx, k),
+                    codebook=cb[None].astype(store_dtype),
+                    shape=(ic, oc), d=d, k=k)
+
+
+def kmeans_vq_quantize(w: jax.Array, d: int, k: int, key: jax.Array,
+                       kmeans_iters: int = 25,
+                       store_dtype=jnp.float16) -> VQTensor:
+    """Plain (data-free) k-means VQ — paper's 'kMeans' baseline."""
+    return gptvq_quantize(w, None, d, k, key, kmeans_iters,
+                          store_dtype=store_dtype)

@@ -1,0 +1,114 @@
+"""Weighted k-means (Lloyd, 1982) in JAX.
+
+Supports per-vector weights (N,) and per-element weights (N, d) — the
+latter is what RWKVQuant §3.2 needs (X²-weighted clustering, Eq. 19):
+
+    d(i, c) = Σ_j W_ij (x_ij − c_j)²
+    c_j     = Σ_i W_ij x_ij / Σ_i W_ij
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _pairwise_w(vecs, cb, W):
+    """Weighted squared distances (N, k)."""
+    # Σ W x² − 2 (x⊙W)·c + W·c²
+    xWx = jnp.sum(W * vecs * vecs, axis=1, keepdims=True)      # (N,1)
+    cross = (vecs * W) @ cb.T                                  # (N,k)
+    quad = W @ (cb * cb).T                                     # (N,k)
+    return xWx - 2.0 * cross + quad
+
+
+def _pairwise(vecs, cb):
+    x2 = jnp.sum(vecs * vecs, axis=1, keepdims=True)
+    c2 = jnp.sum(cb * cb, axis=1)
+    return x2 - 2.0 * (vecs @ cb.T) + c2[None, :]
+
+
+def kmeans_pp_init(vecs, k, key, W=None):
+    """k-means++ seeding (sequential fori_loop)."""
+    N, d = vecs.shape
+    cb0 = jnp.zeros((k, d), vecs.dtype)
+    i0 = jax.random.randint(key, (), 0, N)
+    cb0 = cb0.at[0].set(vecs[i0])
+    d0 = jnp.full((N,), jnp.inf, vecs.dtype)
+
+    def body(i, state):
+        cb, dmin, key = state
+        c = cb[i - 1]
+        if W is None:
+            dist = jnp.sum((vecs - c[None]) ** 2, axis=1)
+        else:
+            dist = jnp.sum(W * (vecs - c[None]) ** 2, axis=1)
+        dmin = jnp.minimum(dmin, dist)
+        key, sub = jax.random.split(key)
+        p = dmin / jnp.maximum(dmin.sum(), 1e-30)
+        idx = jax.random.categorical(sub, jnp.log(jnp.maximum(p, 1e-38)))
+        cb = cb.at[i].set(vecs[idx])
+        return cb, dmin, key
+
+    cb, _, _ = lax.fori_loop(1, k, body, (cb0, d0, key))
+    return cb
+
+
+@partial(jax.jit, static_argnums=(1, 3))
+def kmeans(vecs: jax.Array, k: int, key: jax.Array, iters: int = 25,
+           weights: Optional[jax.Array] = None
+           ) -> Tuple[jax.Array, jax.Array]:
+    """vecs: (N, d) f32. Returns (codebook (k,d), assignments (N,))."""
+    N, d = vecs.shape
+    vecs = vecs.astype(jnp.float32)
+    if weights is None:
+        W = jnp.ones_like(vecs)
+    elif weights.ndim == 1:
+        W = jnp.broadcast_to(weights[:, None], vecs.shape).astype(jnp.float32)
+    else:
+        W = weights.astype(jnp.float32)
+    W = jnp.maximum(W, 1e-12)
+
+    cb = kmeans_pp_init(vecs, k, key, W)
+
+    def step(_, cb):
+        dist = _pairwise_w(vecs, cb, W)
+        assign = jnp.argmin(dist, axis=1)                      # (N,)
+        sums = jnp.zeros((k, d), jnp.float32).at[assign].add(vecs * W)
+        den = jnp.zeros((k, d), jnp.float32).at[assign].add(W)
+        new_cb = sums / jnp.maximum(den, 1e-12)
+        # dead centroids -> farthest points
+        dmin = jnp.take_along_axis(dist, assign[:, None], 1)[:, 0]
+        order = jnp.argsort(-dmin)
+        cand = vecs[order[:k]]
+        alive = (jnp.zeros((k,), jnp.float32).at[assign].add(1.0) > 0)
+        return jnp.where(alive[:, None], new_cb, cand)
+
+    cb = lax.fori_loop(0, iters, step, cb)
+    assign = jnp.argmin(_pairwise_w(vecs, cb, W), axis=1)
+    return cb, assign
+
+
+def cluster_loss(vecs, cb, assign, weights=None) -> jax.Array:
+    """Mean (weighted) squared distance to assigned centroid."""
+    diff = vecs - cb[assign]
+    if weights is None:
+        return jnp.mean(jnp.sum(diff * diff, axis=1))
+    W = weights if weights.ndim == 2 else weights[:, None]
+    return jnp.sum(W * diff * diff) / jnp.maximum(jnp.sum(W), 1e-12)
+
+
+def relative_cluster_loss(w: jax.Array, n_clusters: int,
+                          key: jax.Array, iters: int = 20) -> float:
+    """Paper Table 1 metric: scalar k-means loss normalized by variance.
+
+    Clusters the flattened weight scalars into ``n_clusters`` and reports
+    loss / var(w) * 100 (relative, so model scale cancels).
+    """
+    flat = w.astype(jnp.float32).reshape(-1, 1)
+    cb, assign = kmeans(flat, n_clusters, key, iters)
+    loss = cluster_loss(flat, cb, assign)
+    return float(loss / jnp.maximum(jnp.var(flat), 1e-12) * 100.0)

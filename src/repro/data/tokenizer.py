@@ -1,0 +1,34 @@
+"""Byte-level tokenizer (for text-consuming examples)."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+PAD, BOS, EOS = 256, 257, 258
+VOCAB_SIZE = 259
+
+
+class ByteTokenizer:
+    vocab_size = VOCAB_SIZE
+    pad_id, bos_id, eos_id = PAD, BOS, EOS
+
+    def encode(self, text: str, add_bos: bool = True,
+               add_eos: bool = False) -> List[int]:
+        ids = list(text.encode("utf-8"))
+        if add_bos:
+            ids = [BOS] + ids
+        if add_eos:
+            ids = ids + [EOS]
+        return ids
+
+    def decode(self, ids) -> str:
+        bs = bytes(i for i in ids if 0 <= int(i) < 256)
+        return bs.decode("utf-8", errors="replace")
+
+    def encode_batch(self, texts: List[str], seq_len: int) -> np.ndarray:
+        out = np.full((len(texts), seq_len), PAD, np.int32)
+        for i, t in enumerate(texts):
+            ids = self.encode(t)[:seq_len]
+            out[i, :len(ids)] = ids
+        return out

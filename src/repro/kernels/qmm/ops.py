@@ -1,0 +1,43 @@
+"""jit'd wrapper: SQTensor matmul through the Pallas kernel.
+
+Pads M up to the tile size, flattens leading batch dims, and falls back to
+the XLA dequant path for shapes the kernel does not tile (tiny matrices in
+reduced test configs).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.kernels.qmm.kernel import qmm_pallas
+
+_INTERPRET = not any(d.platform == "tpu" for d in jax.devices())
+
+
+def _tileable(M, K, N, bits, group, bm, bn):
+    bk = max(group, 256)
+    return K % bk == 0 and bk % group == 0 and N % bn == 0
+
+
+def qmm(x: jax.Array, w, bm: int = 128, bn: int = 128) -> jax.Array:
+    """x: (..., K) @ SQTensor(K, N) -> (..., N)."""
+    K, N = w.shape
+    lead = x.shape[:-1]
+    M = 1
+    for s in lead:
+        M *= s
+    x2 = x.reshape(M, K)
+    if not _tileable(M, K, N, w.bits, w.group, bm, bn):
+        return jnp.matmul(x2, w.dequant().astype(x.dtype)).reshape(
+            lead + (N,))
+    bm_eff = min(bm, max(8, M))
+    Mp = -(-M // bm_eff) * bm_eff
+    if Mp != M:
+        x2 = jnp.pad(x2, ((0, Mp - M), (0, 0)))
+    y = qmm_pallas(x2, w.packed, w.scales, w.biases,
+                   bits=w.bits, group=w.group, K=K, N=N,
+                   bm=bm_eff, bn=bn, interpret=_INTERPRET)
+    return y[:M].reshape(lead + (N,))

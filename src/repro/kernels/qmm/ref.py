@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the qmm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+
+def qmm_ref(x, packed, scales, biases, *, bits: int, group: int,
+            K: int, N: int) -> jax.Array:
+    codes = packing.unpack(packed, bits, K)                    # (K, N)
+    s = jnp.repeat(scales.astype(jnp.float32), group, axis=0)[:K]
+    b = jnp.repeat(biases.astype(jnp.float32), group, axis=0)[:K]
+    w = (codes.astype(jnp.float32) * s + b).astype(x.dtype)
+    return jnp.matmul(x, w)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: fused codebook-dequant (VQ) matmul.
+
+    y = x @ codebook-expand(planes, codebook)
+
+The codebook (2^k × d fp16/f32, a few KiB) is pinned WHOLE in VMEM via a
+constant-index BlockSpec — the TPU-native replacement for the CUDA
+shared-memory codebook in VPTQ-class GPU kernels.  Indices stream as
+uint32 bit-planes; the lookup is a VMEM-local gather (Mosaic DynamicGather
+for small tables), never an HBM gather.
+
+Grid: (M/bm, N/bn, K/bk), K innermost, f32 VMEM accumulator.
+Constraints: 32·d | bk (so whole plane words and whole vectors per block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 32
+
+
+def _unpack_idx(words, k: int, bkv: int):
+    """(k, bkv/32, bn) uint32 -> (bkv, bn) int32 indices."""
+    nw, bn = words.shape[1], words.shape[2]
+    r = jnp.arange(LANES, dtype=jnp.uint32).reshape(1, LANES, 1)
+    total = None
+    for j in range(k):
+        bitj = (words[j][:, None, :] >> r) & jnp.uint32(1)
+        contrib = bitj.astype(jnp.int32) << j
+        total = contrib if total is None else total + contrib
+    return total.reshape(bkv, bn)
+
+
+def _vqmm_kernel(x_ref, i_ref, cb_ref, o_ref, acc_ref, *,
+                 k: int, d: int, bk: int, nk: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bkv = bk // d
+    idx = _unpack_idx(i_ref[...], k, bkv)                      # (bkv, bn)
+    cb = cb_ref[0]                                             # (2^k, d) VMEM
+    vecs = cb[idx]                                             # (bkv, bn, d)
+    bn = idx.shape[1]
+    w = vecs.transpose(0, 2, 1).reshape(bk, bn).astype(x_ref.dtype)
+    acc_ref[...] += jnp.dot(x_ref[...], w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def vqmm_pallas(x: jax.Array, packed: jax.Array, codebook: jax.Array, *,
+                k: int, d: int, K: int, N: int, bm: int = 128,
+                bn: int = 128, bk: int = 0,
+                interpret: bool = False) -> jax.Array:
+    """x: (M,K); packed: (k, (K/d)/32, N); codebook: (1, 2^k, d)."""
+    M = x.shape[0]
+    if bk == 0:
+        bk = 256 if K % 256 == 0 else K
+    assert K % bk == 0 and bk % (LANES * d) == 0, (K, bk, d)
+    assert M % bm == 0 and N % bn == 0, (M, bm, N, bn)
+    nk = K // bk
+    nK = 2 ** k
+
+    return pl.pallas_call(
+        functools.partial(_vqmm_kernel, k=k, d=d, bk=bk, nk=nk),
+        grid=(M // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((k, bk // d // LANES, bn),
+                         lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((1, nK, d), lambda i, j, kk: (0, 0, 0)),  # pinned
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, packed, codebook)

@@ -1,0 +1,33 @@
+"""jit'd wrapper: VQTensor matmul through the Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vqmm.kernel import vqmm_pallas, LANES
+
+_INTERPRET = not any(d.platform == "tpu" for d in jax.devices())
+
+
+def vqmm(x: jax.Array, w, bm: int = 128, bn: int = 128) -> jax.Array:
+    """x: (..., K) @ VQTensor(K, N) -> (..., N)."""
+    K, N = w.shape
+    lead = x.shape[:-1]
+    M = 1
+    for s in lead:
+        M *= s
+    x2 = x.reshape(M, K)
+    bk = 256 if K % 256 == 0 else K
+    tileable = (w.n_books == 1 and K % bk == 0
+                and bk % (LANES * w.d) == 0 and N % bn == 0)
+    if not tileable:
+        return jnp.matmul(x2, w.dequant().astype(x.dtype)).reshape(
+            lead + (N,))
+    bm_eff = min(bm, max(8, M))
+    Mp = -(-M // bm_eff) * bm_eff
+    if Mp != M:
+        x2 = jnp.pad(x2, ((0, Mp - M), (0, 0)))
+    y = vqmm_pallas(x2, w.packed, w.codebook.astype(jnp.float32),
+                    k=w.k, d=w.d, K=K, N=N, bm=bm_eff, bn=bn,
+                    interpret=_INTERPRET)
+    return y[:M].reshape(lead + (N,))

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: RWKV-6 WKV recurrence (chunk-parallel schedule).
+
+Per (batch × head) grid cell the (hd × hd) f32 state lives in VMEM
+scratch across the sequential T-grid axis; each T-block of ``ct`` steps
+applies the exact chunk-parallel update (same math as
+models/rwkv6.wkv6_chunked, all exponents <= 0):
+
+    a       = cumsum(log w)            (inclusive)
+    y       = (r·exp(a_prev)) @ S
+            + [(Σ_i r k exp(a_prev_t − a_s)) ⊙ causal] @ v
+            + ((r·u·k)·1) v
+    S_new   = exp(a_end) ⊙ S + (k·exp(a_end − a))ᵀ @ v
+
+The O(ct²·hd) pairwise tile E stays in registers/VMEM (ct=64, hd=64 →
+1 MiB f32); the three inner products hit the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                 y_ref, sout_ref, state, *, ct: int, nt: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        state[...] = s0_ref[0]
+
+    rr = r_ref[0].astype(jnp.float32)                     # (ct, hd)
+    kk = k_ref[0].astype(jnp.float32)
+    vv = v_ref[0].astype(jnp.float32)
+    lw = jnp.log(jnp.maximum(w_ref[0].astype(jnp.float32), 1e-38))
+    u = u_ref[0].astype(jnp.float32)                      # (1, hd)
+
+    a = jnp.cumsum(lw, axis=0)                            # inclusive
+    a_prev = a - lw
+    a_end = a[-1:]                                        # (1, hd)
+
+    S = state[...]
+    re = rr * jnp.exp(a_prev)
+    y_inter = jnp.dot(re, S, preferred_element_type=jnp.float32)
+
+    # valid (t>s) exponents are <=0; clamp kills inf*0=NaN on masked cells
+    E = jnp.exp(jnp.minimum(a_prev[:, None, :] - a[None, :, :], 0.0))
+    A = jnp.sum(rr[:, None, :] * kk[None, :, :] * E, axis=-1)
+    causal = jnp.tril(jnp.ones((ct, ct), jnp.float32), k=-1)
+    A = A * causal
+    y_intra = jnp.dot(A, vv, preferred_element_type=jnp.float32)
+
+    bonus = jnp.sum(rr * u * kk, axis=-1, keepdims=True)  # (ct, 1)
+    y = y_inter + y_intra + bonus * vv
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    k_out = kk * jnp.exp(a_end - a)
+    state[...] = S * jnp.exp(a_end).T + jnp.dot(
+        k_out.T, vv, preferred_element_type=jnp.float32)
+
+    @pl.when(t == nt - 1)
+    def _done():
+        sout_ref[0] = state[...]
+
+
+def wkv6_pallas(r, k, v, w, u, s0, *, ct: int = 64,
+                interpret: bool = False):
+    """r,k,v,w: (BH, T, hd); u: (BH, hd); s0: (BH, hd, hd) f32.
+
+    Returns (y (BH, T, hd), s_out (BH, hd, hd))."""
+    BH, T, hd = r.shape
+    assert T % ct == 0, (T, ct)
+    nt = T // ct
+
+    grid = (BH, nt)
+    io_spec = pl.BlockSpec((1, ct, hd), lambda b, t: (b, t, 0))
+    y, sout = pl.pallas_call(
+        functools.partial(_wkv6_kernel, ct=ct, nt=nt),
+        grid=grid,
+        in_specs=[
+            io_spec, io_spec, io_spec, io_spec,
+            pl.BlockSpec((1, hd), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, t: (b, 0, 0)),
+        ],
+        out_specs=[
+            io_spec,
+            pl.BlockSpec((1, hd, hd), lambda b, t: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, hd), r.dtype),
+            jax.ShapeDtypeStruct((BH, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, sout

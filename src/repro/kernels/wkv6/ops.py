@@ -1,0 +1,30 @@
+"""jit'd wrapper: (B,T,H,hd) WKV6 through the Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import wkv6_pallas
+
+_INTERPRET = not any(d.platform == "tpu" for d in jax.devices())
+
+
+def wkv6(r, k, v, w, u, state, ct: int = 64):
+    """Same signature as models.rwkv6.wkv6_scan.
+
+    r,k,v,w: (B,T,H,hd); u: (H,hd); state: (B,H,hd,hd) f32."""
+    B, T, H, hd = r.shape
+    if T % ct != 0:
+        from repro.models.rwkv6 import wkv6_scan
+        return wkv6_scan(r, k, v, w, u, state)
+
+    def to_bh(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+
+    rb, kb, vb, wb = (to_bh(t) for t in (r, k, v, w))
+    ub = jnp.tile(u, (B, 1))                              # (B*H, hd)
+    s0 = state.reshape(B * H, hd, hd).astype(jnp.float32)
+    y, sout = wkv6_pallas(rb, kb, vb, wb, ub, s0, ct=ct,
+                          interpret=_INTERPRET)
+    y = y.reshape(B, H, T, hd).transpose(0, 2, 1, 3)
+    return y.astype(r.dtype), sout.reshape(B, H, hd, hd)

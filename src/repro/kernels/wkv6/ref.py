@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the wkv6 kernel (sequential recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """r,k,v,w: (BH,T,hd); u: (BH,hd); s0: (BH,hd,hd) f32."""
+    rf, kf, vf, wf = (t.astype(jnp.float32).transpose(1, 0, 2)
+                      for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                              # (BH, hd)
+        kv = kt[:, :, None] * vt[:, None, :]
+        y = jnp.einsum("bi,bij->bj", rt, S + uf[:, :, None] * kv)
+        S = S * wt[:, :, None] + kv
+        return S, y
+
+    S, ys = lax.scan(step, s0.astype(jnp.float32), (rf, kf, vf, wf))
+    return ys.transpose(1, 0, 2).astype(r.dtype), S

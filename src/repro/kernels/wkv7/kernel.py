@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: RWKV-7 delta-rule recurrence.
+
+State transition is a full matrix (diag(w) + aᵀb), so the chunk-parallel
+trick of wkv6 does not apply directly; the kernel keeps the (hd_v × hd_k)
+state in VMEM scratch and steps through a ct-length block with a
+``fori_loop`` of rank-1 updates (VPU-bound — RWKV-7 is only used at
+<= 1.5B in the fidelity benchmarks; the assigned production arch is
+RWKV-6 with the chunked kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv7_kernel(r_ref, w_ref, k_ref, v_ref, a_ref, b_ref, s0_ref,
+                 y_ref, sout_ref, state, *, ct: int, nt: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        state[...] = s0_ref[0]
+
+    rr = r_ref[0].astype(jnp.float32)                     # (ct, hd)
+    ww = w_ref[0].astype(jnp.float32)
+    kk = k_ref[0].astype(jnp.float32)
+    vv = v_ref[0].astype(jnp.float32)
+    aa = a_ref[0].astype(jnp.float32)
+    bb = b_ref[0].astype(jnp.float32)
+
+    def step(i, ys):
+        S = state[...]                                    # (hd_v, hd_k)
+        sa = S @ aa[i][:, None]                           # (hd_v, 1)
+        S = S * ww[i][None, :] + sa * bb[i][None, :] \
+            + vv[i][:, None] * kk[i][None, :]
+        state[...] = S
+        y = (S @ rr[i][:, None])[:, 0]                    # (hd_v,)
+        return ys.at[i].set(y)
+
+    ys = lax.fori_loop(0, ct, step, jnp.zeros_like(rr))
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+    @pl.when(t == nt - 1)
+    def _done():
+        sout_ref[0] = state[...]
+
+
+def wkv7_pallas(r, w, k, v, a, b, s0, *, ct: int = 128,
+                interpret: bool = False):
+    """r,w,k,v,a,b: (BH, T, hd); s0: (BH, hd, hd) f32 (v-rows, k-cols)."""
+    BH, T, hd = r.shape
+    assert T % ct == 0, (T, ct)
+    nt = T // ct
+
+    io_spec = pl.BlockSpec((1, ct, hd), lambda bh, t: (bh, t, 0))
+    y, sout = pl.pallas_call(
+        functools.partial(_wkv7_kernel, ct=ct, nt=nt),
+        grid=(BH, nt),
+        in_specs=[io_spec] * 6 + [
+            pl.BlockSpec((1, hd, hd), lambda bh, t: (bh, 0, 0))],
+        out_specs=[
+            io_spec,
+            pl.BlockSpec((1, hd, hd), lambda bh, t: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, hd), r.dtype),
+            jax.ShapeDtypeStruct((BH, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, w, k, v, a, b, s0)
+    return y, sout

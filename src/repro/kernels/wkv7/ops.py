@@ -1,0 +1,28 @@
+"""jit'd wrapper: (B,T,H,hd) WKV7 through the Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv7.kernel import wkv7_pallas
+
+_INTERPRET = not any(d.platform == "tpu" for d in jax.devices())
+
+
+def wkv7(r, w, k, v, a, b, state, ct: int = 128):
+    """Same layout as models.rwkv7.wkv7_scan."""
+    B, T, H, hd = r.shape
+    if T % ct != 0:
+        ct = 1 if T == 1 else ct
+        if T % ct != 0:
+            from repro.models.rwkv7 import wkv7_scan
+            return wkv7_scan(r, w, k, v, a, b, state)
+
+    def to_bh(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+
+    inp = tuple(to_bh(t) for t in (r, w, k, v, a, b))
+    s0 = state.reshape(B * H, hd, hd).astype(jnp.float32)
+    y, sout = wkv7_pallas(*inp, s0, ct=min(ct, T), interpret=_INTERPRET)
+    y = y.reshape(B, H, T, hd).transpose(0, 2, 1, 3)
+    return y.astype(r.dtype), sout.reshape(B, H, hd, hd)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the wkv7 kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv7_ref(r, w, k, v, a, b, s0):
+    """r,w,k,v,a,b: (BH,T,hd); s0: (BH,hd,hd) f32 (v-rows, k-cols)."""
+    fs = tuple(t.astype(jnp.float32).transpose(1, 0, 2)
+               for t in (r, w, k, v, a, b))
+
+    def step(S, inp):
+        rt, wt, kt, vt, at, bt = inp
+        sa = jnp.einsum("bvk,bk->bv", S, at)
+        S = S * wt[:, None, :] + sa[:, :, None] * bt[:, None, :] \
+            + vt[:, :, None] * kt[:, None, :]
+        y = jnp.einsum("bvk,bk->bv", S, rt)
+        return S, y
+
+    S, ys = lax.scan(step, s0.astype(jnp.float32), fs)
+    return ys.transpose(1, 0, 2).astype(r.dtype), S

@@ -1,0 +1,489 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# (docstring below; the two lines above MUST precede any jax import so the
+# 512 placeholder devices exist before the backend locks its device count)
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: abstract
+inputs (ShapeDtypeStruct, no allocation), the production mesh
+(16×16 single-pod / 2×16×16 multi-pod over 512 host-platform placeholder
+devices), real GSPMD partitioning, real XLA compilation.  Per cell it
+records memory_analysis (fits-in-HBM proof), cost_analysis (FLOPs/bytes
+for §Roofline) and the collective-bytes parse.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch rwkv6-3b \
+        --shape decode_32k --mesh single --quantized
+"""
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, cells, get_config, get_shape
+from repro.core import quantized as qz
+from repro.core.policy import QuantPolicy, DATAFREE_3_275
+from repro.launch import roofline as rl
+from repro.launch.mesh import activate, dp_size, make_production_mesh, tp_size
+from repro.models import registry as R
+from repro.models import sharding as shd
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+P = jax.sharding.PartitionSpec
+
+LAST_HLO = None      # stashed by lower_cell for perf tooling
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "../../../artifacts/dryrun")
+
+
+# --------------------------------------------------------------------------- #
+#  Abstract (ShapeDtypeStruct) state builders
+# --------------------------------------------------------------------------- #
+def abstract_params(cfg):
+    return jax.eval_shape(lambda: R.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_train_state(cfg):
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_quantize(params_sds, policy: QuantPolicy):
+    """Quantized-container SDS tree (dry-run path: SQ matmuls, VQ ⊙)."""
+    from repro.core.hybrid import iter_quantizable, _largest_group
+    targets = {ps: (kind, stacked)
+               for ps, _, kind, stacked in iter_quantizable(params_sds,
+                                                            policy)}
+
+    def visit(path, leaf):
+        ps = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path)
+        if ps not in targets:
+            return leaf
+        kind, stacked = targets[ps]
+        f16 = jnp.float16
+        if kind == "elementwise":
+            n = int(np.prod(leaf.shape[1:] if stacked else leaf.shape))
+            lead = leaf.shape[:1] if stacked else ()
+            d, k = policy.ew_d, policy.ew_k
+            if n % d or (n // d) % 32:
+                return leaf
+            return qz.VQTensor(
+                packed=jax.ShapeDtypeStruct(
+                    lead + (k, (n // d) // 32, 1), jnp.uint32),
+                codebook=jax.ShapeDtypeStruct(lead + (1, 2 ** k, d), f16),
+                shape=(n, 1), d=d, k=k)
+        # matmul / matmul_nd
+        ic, oc = leaf.shape[-2:]
+        lead = leaf.shape[:-2]
+        if ic % 32:
+            return leaf
+        bits = policy.sq_bits
+        group = policy.sq_group if ic % policy.sq_group == 0 \
+            else _largest_group(ic, policy.sq_group)
+        return qz.SQTensor(
+            packed=jax.ShapeDtypeStruct(lead + (bits, ic // 32, oc),
+                                        jnp.uint32),
+            scales=jax.ShapeDtypeStruct(lead + (ic // group, oc), f16),
+            biases=jax.ShapeDtypeStruct(lead + (ic // group, oc), f16),
+            shape=(ic, oc), bits=bits, group=group)
+
+    return jax.tree_util.tree_map_with_path(visit, params_sds)
+
+
+# --------------------------------------------------------------------------- #
+#  Sharding specs for batches and caches
+# --------------------------------------------------------------------------- #
+def batch_specs(batch_sds, mesh):
+    dpn = dp_size(mesh)
+    dp = tuple(ax for ax in ("pod", "data") if ax in mesh.axis_names)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def one(leaf):
+        B = leaf.shape[0] if leaf.shape else 0
+        spec = [None] * len(leaf.shape)
+        if B and B % dpn == 0:
+            spec[0] = dp
+        return P(*spec)
+
+    return jax.tree.map(one, batch_sds)
+
+
+def cache_specs(cfg, cache_sds, mesh, B: int, S: int):
+    dpn, tpn = dp_size(mesh), tp_size(mesh)
+    dp = tuple(ax for ax in ("pod", "data") if ax in mesh.axis_names)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    has_data = "data" in mesh.axis_names
+    data_n = mesh.shape.get("data", 1)
+
+    def one(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        shape = leaf.shape
+        if not shape:                                  # index scalar
+            return P()
+        spec: list = [None] * len(shape)
+        # batch axis: first axis (from 1) whose size == B
+        b_ax = None
+        for i in range(1, len(shape)):
+            if shape[i] == B:
+                b_ax = i
+                break
+        if b_ax is not None and B % dpn == 0:
+            spec[b_ax] = dp
+        # kv-like: shard the SEQUENCE axis over `model` when divisible —
+        # works for any head count (llava 56H, minicpm3 40H, whisper 20H)
+        # and turns decode-attention partial-sum all-reduces into tiny
+        # softmax-stat psums (§Perf pair-3 iter 3).  Fall back to
+        # head-dim sharding, then to `data`-axis sequence sharding
+        # (long_500k, batch=1).
+        if "kv" in name:
+            s_ax = (b_ax or 1) + 1
+            if (s_ax < len(shape) and shape[s_ax] >= 4096
+                    and shape[s_ax] % tpn == 0):
+                spec[s_ax] = "model"
+            elif shape[-1] % tpn == 0 and shape[-1] >= tpn:
+                spec[-1] = "model"
+            if (spec[b_ax or 1] is None and has_data and s_ax < len(shape)
+                    and spec[s_ax] is None
+                    and shape[s_ax] >= 4096 and shape[s_ax] % data_n == 0):
+                spec[s_ax] = "data"
+        elif "ssm" in name or "conv" in name:
+            if shape[-2] % tpn == 0 and shape[-2] >= tpn and "ssm" in name:
+                spec[-2] = "model"
+            if "conv" in name and shape[-1] % tpn == 0 and shape[-1] >= tpn:
+                spec[-1] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_sds)
+
+
+def _axes_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_specs(sds_tree, spec_tree, mesh):
+    """Drop (or relocate) sharding on dims the mesh doesn't divide.
+
+    Explicit in_shardings require divisibility; e.g. granite's vocab
+    49155 is not divisible by 16, so the embed's vocab axis moves to the
+    d_model axis instead of staying 16-way sharded.
+    """
+    def one(sds, spec):
+        def fix(s, shape):
+            parts = list(s) + [None] * (len(shape) - len(s))
+            moved = []
+            for i, dim in enumerate(shape):
+                if parts[i] is not None and dim % _axes_size(
+                        mesh, parts[i]) != 0:
+                    moved.append(parts[i])
+                    parts[i] = None
+            for entry in moved:                       # try to relocate
+                for i, dim in enumerate(shape):
+                    if parts[i] is None and dim % _axes_size(
+                            mesh, entry) == 0 and dim >= _axes_size(
+                            mesh, entry):
+                        parts[i] = entry
+                        break
+            return P(*parts)
+
+        if qz.is_quantized(sds):
+            fields = jax.tree.leaves(sds)
+            specs = jax.tree.leaves(spec,
+                                    is_leaf=lambda x: isinstance(x, P))
+            return jax.tree.unflatten(
+                jax.tree.structure(spec,
+                                   is_leaf=lambda x: isinstance(x, P)),
+                [fix(sp, f.shape) for f, sp in zip(fields, specs)])
+        return fix(spec, sds.shape)
+
+    return jax.tree.map(one, sds_tree, spec_tree, is_leaf=qz.is_quantized)
+
+
+def _attach(sds_tree, spec_tree, mesh):
+    spec_tree = sanitize_specs(sds_tree, spec_tree, mesh)
+
+    def one(sds, spec):
+        if qz.is_quantized(sds):
+            return jax.tree.unflatten(
+                jax.tree.structure(sds),
+                [jax.ShapeDtypeStruct(
+                    f.shape, f.dtype,
+                    sharding=jax.sharding.NamedSharding(mesh, sp))
+                 for f, sp in zip(jax.tree.leaves(sds),
+                                  jax.tree.leaves(
+                                      spec,
+                                      is_leaf=lambda x: isinstance(x, P)))])
+        return jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype,
+            sharding=jax.sharding.NamedSharding(mesh, spec))
+    return jax.tree.map(one, sds_tree, spec_tree,
+                        is_leaf=qz.is_quantized)
+
+
+# --------------------------------------------------------------------------- #
+#  One cell
+# --------------------------------------------------------------------------- #
+def lower_cell(arch: str, shape_name: str, mesh, *, quantized: bool = False,
+               remat: Optional[bool] = None):
+    """Lower+compile one (arch × shape) on a mesh. Returns result dict."""
+    import dataclasses
+    cfg = get_config(arch)
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = get_shape(shape_name)
+    activate(mesh)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+
+    def _tree_bytes(t):
+        return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                   for x in jax.tree.leaves(t))
+
+    def _maybe_fsdp(params_sds, pspecs):
+        """ZeRO-3 the weights when params/TP exceed the HBM budget."""
+        per_dev = _tree_bytes(params_sds) / tp_size(mesh)
+        if per_dev > 10e9:
+            return shd.fsdp_specs(params_sds, pspecs, dp_axes=("data",),
+                                  dp_size=mesh.shape.get("data", 1)), True
+        return pspecs, False
+
+    fsdp = False
+    if shape.kind == "train":
+        state_sds = abstract_train_state(cfg)
+        pspecs = shd.param_specs(state_sds.params)
+        pspecs, fsdp = _maybe_fsdp(state_sds.params, pspecs)
+        ospecs = shd.opt_state_specs(state_sds.params, pspecs,
+                                     dp_axes=("data",),
+                                     dp_size=mesh.shape.get("data", 1))
+        from repro.train.train_step import TrainState
+        from repro.train.optimizer import OptState
+        state_specs = TrainState(
+            params=pspecs,
+            opt=OptState(mu=ospecs, nu=ospecs, count=P()),
+            step=P())
+        batch_sds = R.input_specs(cfg, shape)
+        bspecs = batch_specs(batch_sds, mesh)
+        state_in = _attach(state_sds, state_specs, mesh)
+        batch_in = _attach(batch_sds, bspecs, mesh)
+        step_fn = make_train_step(cfg, AdamWConfig())
+        with jax.sharding.set_mesh(mesh):
+            lowered = jax.jit(step_fn, donate_argnums=(0,)).lower(
+                state_in, batch_in)
+        model_fl = rl.model_flops_train(
+            cfg, shape.global_batch * shape.seq_len)
+    elif shape.kind == "prefill":
+        params_sds = abstract_params(cfg)
+        if quantized:
+            params_sds = abstract_quantize(params_sds, DATAFREE_3_275)
+        pspecs = shd.param_specs(params_sds)
+        pspecs, fsdp = _maybe_fsdp(params_sds, pspecs)
+        cache_sds = jax.eval_shape(
+            lambda: R.init_cache(cfg, shape.global_batch, shape.seq_len))
+        cspecs = cache_specs(cfg, cache_sds, mesh, shape.global_batch,
+                             shape.seq_len)
+        batch_sds = R.input_specs(cfg, shape)
+        bspecs = batch_specs(batch_sds, mesh)
+        fn = partial(R.prefill, cfg)
+        with jax.sharding.set_mesh(mesh):
+            lowered = jax.jit(fn, donate_argnums=(2,)).lower(
+                _attach(params_sds, pspecs, mesh),
+                _attach(batch_sds, bspecs, mesh),
+                _attach(cache_sds, cspecs, mesh))
+        model_fl = 2.0 * cfg.n_active_params() * shape.global_batch \
+            * shape.seq_len
+    else:                                                # decode
+        params_sds = abstract_params(cfg)
+        if quantized:
+            params_sds = abstract_quantize(params_sds, DATAFREE_3_275)
+        pspecs = shd.param_specs(params_sds)
+        pspecs, fsdp = _maybe_fsdp(params_sds, pspecs)
+        cache_sds = jax.eval_shape(
+            lambda: R.init_cache(cfg, shape.global_batch, shape.seq_len))
+        # pretend the cache is mid-sequence: index is dynamic anyway
+        cspecs = cache_specs(cfg, cache_sds, mesh, shape.global_batch,
+                             shape.seq_len)
+        tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        bspec = batch_specs(tok_sds, mesh)
+        fn = partial(R.decode_step, cfg)
+        with jax.sharding.set_mesh(mesh):
+            lowered = jax.jit(fn, donate_argnums=(1,)).lower(
+                _attach(params_sds, pspecs, mesh),
+                _attach(cache_sds, cspecs, mesh),
+                _attach(tok_sds, bspec, mesh))
+        model_fl = rl.model_flops_decode(cfg, shape.global_batch)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # Decode cells: analytic kernel-path memory bound.  The XLA fallback
+    # materializes dequant intermediates; the Pallas qmm/vqmm/wkv kernels
+    # (validated vs oracles in interpret mode) fuse dequant in VMEM, so
+    # their HBM traffic is exactly packed-params + cache + logits.
+    kernel_bound = None
+    if shape.kind == "decode":
+        def _shard_bytes(sds_tree, spec_tree, axes_filter=None):
+            """Per-device read bytes. axes_filter: count only those mesh
+            axes toward sharding (weights under FSDP are all-gathered per
+            step, so only the TP shard reduces per-step weight reads)."""
+            spec_tree = sanitize_specs(sds_tree, spec_tree, mesh)
+            tot = [0.0]
+
+            def one(leaf, sp):
+                if qz.is_quantized(leaf):
+                    fs = jax.tree.leaves(leaf)
+                    ss = jax.tree.leaves(
+                        sp, is_leaf=lambda x: isinstance(x, P))
+                else:
+                    fs, ss = [leaf], [sp]
+                for f, s in zip(fs, ss):
+                    shard = 1
+                    for entry in (list(s) if isinstance(s, P) else []):
+                        if entry is None:
+                            continue
+                        axes = entry if isinstance(entry, tuple) \
+                            else (entry,)
+                        if axes_filter is not None:
+                            axes = tuple(a for a in axes
+                                         if a in axes_filter)
+                        for a in axes:
+                            shard *= mesh.shape[a]
+                    tot[0] += int(np.prod(f.shape)) * f.dtype.itemsize \
+                        / shard
+                return leaf
+
+            jax.tree.map(one, sds_tree, spec_tree, is_leaf=qz.is_quantized)
+            return tot[0]
+
+        pb = _shard_bytes(params_sds, pspecs, axes_filter={"model"})
+        cb = _shard_bytes(cache_sds, cspecs)
+        logits_b = shape.global_batch * cfg.vocab_size * 2 / chips
+        kernel_bound = (pb + cb + logits_b) / rl.HBM_BW
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    global LAST_HLO
+    LAST_HLO = hlo
+    roof = rl.analyze(compiled, model_fl, chips, hlo_text=hlo)
+    from repro.launch import hlo_cost
+    parsed = hlo_cost.module_cost(hlo)
+    xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, list):
+        xla_cost = xla_cost[0]
+
+    def _mem_get(attr):
+        return float(getattr(mem, attr, 0) or 0)
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": dict(mesh.shape), "chips": chips,
+        "quantized": quantized, "fsdp": fsdp,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": _mem_get("argument_size_in_bytes"),
+            "output_bytes": _mem_get("output_size_in_bytes"),
+            "temp_bytes": _mem_get("temp_size_in_bytes"),
+            "code_bytes": _mem_get("generated_code_size_in_bytes"),
+        },
+        "flops_per_device": roof.flops,
+        "bytes_per_device": roof.hbm_bytes,
+        "collective_bytes": roof.coll_bytes,
+        "collectives": parsed.coll,
+        "collective_counts": parsed.coll_counts,
+        "xla_cost_analysis": {
+            "flops_body_once": float(xla_cost.get("flops", 0.0)),
+            "bytes_body_once": float(xla_cost.get("bytes accessed", 0.0)),
+        },
+        "model_flops": model_fl,
+        "roofline": roof.row(),
+    }
+    if kernel_bound is not None:
+        result["t_memory_kernel_bound_s"] = kernel_bound
+    return result
+
+
+def cell_path(arch, shape_name, mesh_name, quantized):
+    suffix = "__q" if quantized else ""
+    return os.path.join(ARTIFACT_DIR, mesh_name,
+                        f"{arch}__{shape_name}{suffix}.json")
+
+
+def run_cell(arch, shape_name, mesh_name, quantized=False, force=False):
+    out = cell_path(arch, shape_name, mesh_name, quantized)
+    if os.path.exists(out) and not force:
+        with open(out) as f:
+            return json.load(f)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    try:
+        result = lower_cell(arch, shape_name, mesh, quantized=quantized)
+    except Exception as e:                              # record failures
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                  "quantized": quantized, "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-2000:]}
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--quantized", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    todo = []
+    if args.all:
+        for cfg, shape in cells():
+            todo.append((cfg.name, shape.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    n_ok = 0
+    for arch, shape_name in todo:
+        t0 = time.time()
+        res = run_cell(arch, shape_name, args.mesh,
+                       quantized=args.quantized, force=args.force)
+        ok = "error" not in res
+        n_ok += ok
+        status = "OK " if ok else "FAIL"
+        extra = ""
+        if ok:
+            r = res["roofline"]
+            extra = (f"bottleneck={r['bottleneck']} "
+                     f"t={max(r['t_compute_s'], r['t_memory_s'], r['t_collective_s']):.4f}s "
+                     f"mem={res['memory']['argument_bytes']/2**30:.2f}GiB")
+        else:
+            extra = res["error"][:160]
+        print(f"[{status}] {arch:24s} {shape_name:12s} mesh={args.mesh} "
+              f"q={int(args.quantized)} ({time.time()-t0:.0f}s) {extra}",
+              flush=True)
+    print(f"\n{n_ok}/{len(todo)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,331 @@
+"""Trip-count-aware cost accounting over optimized HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body once, so scanned-
+layer models under-report FLOPs/bytes/collectives by ~n_layers.  This
+parser walks the module's computations and multiplies each while body by
+its ``backend_config known_trip_count`` (always present for lax.scan):
+
+  * FLOPs:  every ``dot`` contributes 2·numel(result)·prod(contracted
+    lhs dims); fusions are recursed via ``calls=``.
+  * HBM bytes: per "real" op, result bytes + operand result bytes
+    (pass-through ops — bitcast/GTE/tuple/parameter/constant — are free;
+    a fusion's internal traffic stays in registers/VMEM so only its
+    operands+result count).  This is a producer-write + consumer-read
+    traffic model, the standard roofline convention.
+  * Collective bytes: result-shape bytes per collective op, by kind,
+    trip-multiplied.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_KIND_RE = re.compile(r"\s([a-z][a-z0-9\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$")
+_OPLINE_RE = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s+=\s+(.*)$")
+
+PASSTHROUGH = {"parameter", "constant", "get-tuple-element", "bitcast",
+               "tuple", "iota", "after-all", "partition-id", "replica-id"}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> List[List[int]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append([int(d) for d in dims.split(",") if d])
+    return out
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_bytes: int
+    result_dims: List[List[int]]
+    operands: List[str]
+    attrs: str
+    operand_str: str = ""
+    trip: int = 1
+    body: Optional[str] = None
+    calls: Optional[str] = None
+    lhs_contracting: Tuple[int, ...] = ()
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v * mult
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def parse_module(text: str):
+    """-> (computations: {name: [Op]}, entry_name)."""
+    comps: Dict[str, List[Op]] = {}
+    entry = None
+    cur: Optional[List[Op]] = None
+    for line in text.splitlines():
+        h = _HEADER_RE.match(line)
+        if h:
+            name = h.group(2)
+            comps[name] = []
+            cur = comps[name]
+            if h.group(1):
+                entry = name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OPLINE_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        km = _KIND_RE.search(" " + rhs)
+        if not km:
+            continue
+        kind = km.group(1)
+        type_part = rhs[:km.start()]
+        paren = rhs.find("(", km.start())
+        # operand list: up to the matching close paren
+        depth, j = 0, paren
+        while j < len(rhs):
+            if rhs[j] == "(":
+                depth += 1
+            elif rhs[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        operand_str = rhs[paren + 1:j]
+        attrs = rhs[j + 1:]
+        op = Op(name=name, kind=kind,
+                result_bytes=_shape_bytes(type_part),
+                result_dims=_shape_dims(type_part),
+                operands=_OPERAND_RE.findall(operand_str),
+                attrs=attrs, operand_str=operand_str)
+        if kind == "while":
+            tm = _TRIP_RE.search(attrs)
+            op.trip = int(tm.group(1)) if tm else 1
+            bm = _BODY_RE.search(attrs)
+            op.body = bm.group(1) if bm else None
+        cm = _CALLS_RE.search(attrs)
+        if cm:
+            op.calls = cm.group(1)
+        if kind == "dot":
+            lm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", attrs)
+            if lm:
+                op.lhs_contracting = tuple(
+                    int(x) for x in lm.group(1).split(",") if x)
+        cur.append(op)
+    return comps, entry
+
+
+def _dot_flops(op: Op, table: Dict[str, Op]) -> float:
+    numel = 1
+    for dims in op.result_dims[:1]:
+        for d in dims:
+            numel *= d
+    lhs = table.get(op.operands[0]) if op.operands else None
+    contracted = 1
+    if lhs is not None and lhs.result_dims:
+        dims = lhs.result_dims[0]
+        for ax in op.lhs_contracting:
+            if ax < len(dims):
+                contracted *= dims[ax]
+    return 2.0 * numel * contracted
+
+
+def _conv_flops(op: Op, table: Dict[str, Op]) -> float:
+    numel = 1
+    for dims in op.result_dims[:1]:
+        for d in dims:
+            numel *= d
+    rhs = table.get(op.operands[1]) if len(op.operands) > 1 else None
+    kn = 1
+    if rhs is not None and rhs.result_dims:
+        for d in rhs.result_dims[0][:-1]:     # kernel spatial × in-features
+            kn *= d
+    return 2.0 * numel * kn
+
+
+def _root_kind(comps, name: str) -> Optional[str]:
+    ops = comps.get(name)
+    return ops[-1].kind if ops else None
+
+
+_SLICE_KINDS = ("dynamic-slice", "slice", "gather")
+
+
+def _fusion_param_reads(comps, calls: str) -> Dict[int, Optional[float]]:
+    """Per-parameter read bytes inside a fusion computation.
+
+    Returns {param_index: bytes or None}; None means 'read fully'.
+    A parameter consumed ONLY by slice-like ops reads just the slices —
+    how XLA fusions touch scan-stacked buffers in practice."""
+    inner = comps.get(calls, [])
+    pname_to_idx = {}
+    for iop in inner:
+        if iop.kind == "parameter":
+            try:
+                pname_to_idx[iop.name] = int(iop.operand_str.strip())
+            except ValueError:
+                pass
+    sliced: Dict[int, float] = {}
+    full = set()
+    for iop in inner:
+        if iop.kind == "parameter":
+            continue
+        for o in iop.operands:
+            if o in pname_to_idx:
+                idx = pname_to_idx[o]
+                if iop.kind in _SLICE_KINDS:
+                    sliced[idx] = sliced.get(idx, 0.0) + iop.result_bytes
+                elif iop.kind == "dynamic-update-slice" and \
+                        iop.operands and iop.operands[0] == o:
+                    # aliased in-place buffer: no read traffic
+                    sliced.setdefault(idx, 0.0)
+                else:
+                    full.add(idx)
+    out: Dict[int, Optional[float]] = {}
+    for idx in set(sliced) | full:
+        out[idx] = None if idx in full else sliced[idx]
+    return out
+
+
+def _fusion_write_bytes(comps, op: Op, table: Dict[str, Op]) -> float:
+    """Result write bytes; a DUS root writes only the updated slice."""
+    rk = _root_kind(comps, op.calls)
+    if rk == "dynamic-update-slice":
+        inner = comps.get(op.calls, [])
+        root = inner[-1]
+        upd = None
+        if len(root.operands) > 1:
+            in_table = {o.name: o for o in inner}
+            upd = in_table.get(root.operands[1])
+        return float(upd.result_bytes if upd else op.result_bytes // 8)
+    return float(op.result_bytes)
+
+
+def op_hbm_bytes(op: Op, table: Dict[str, Op],
+                 comps: Optional[Dict] = None) -> float:
+    """HBM traffic of one op under XLA aliasing/fusion semantics.
+
+    * dynamic-update-slice updates its buffer IN PLACE: traffic is the
+      slice, not the buffer (scan residual stacking, decode cache writes);
+    * fusion operands consumed only through slice-like inner ops read
+      just the slices;
+    * everything else: result write + full operand reads.
+    """
+    kind = op.kind
+    if kind == "fusion" and comps is not None and op.calls:
+        total = _fusion_write_bytes(comps, op, table)
+        reads = _fusion_param_reads(comps, op.calls)
+        for i, o in enumerate(op.operands):
+            src = table.get(o)
+            if src is None:
+                continue
+            r = reads.get(i, None)
+            total += src.result_bytes if r is None else r
+        return total
+    if kind == "dynamic-update-slice":
+        upd = table.get(op.operands[1]) if len(op.operands) > 1 else None
+        return 2.0 * (upd.result_bytes if upd else op.result_bytes)
+    if kind in ("dynamic-slice", "gather", "slice"):
+        return 2.0 * op.result_bytes
+    total = float(op.result_bytes)
+    for o in op.operands:
+        src = table.get(o)
+        if src is not None:
+            total += src.result_bytes
+    return total
+
+
+def _comp_cost(comps, name: str, memo: Dict[str, Cost]) -> Cost:
+    if name in memo:
+        return memo[name]
+    memo[name] = Cost()                       # break cycles defensively
+    total = Cost()
+    ops = comps.get(name, [])
+    table = {op.name: op for op in ops}
+    for op in ops:
+        if op.kind == "while":
+            if op.body and op.body in comps:
+                total.add(_comp_cost(comps, op.body, memo), op.trip)
+            # init tuple + result traffic counted via operands below
+            for o in op.operands:
+                src = table.get(o)
+                if src is not None:
+                    total.bytes += src.result_bytes
+            continue
+        if op.kind in PASSTHROUGH:
+            continue
+        if op.kind == "fusion" or op.kind in ("call", "custom-call"):
+            if op.calls and op.calls in comps:
+                sub = _comp_cost(comps, op.calls, memo)
+                total.flops += sub.flops      # dots inside fusions
+                for k, v in sub.coll.items():
+                    total.coll[k] = total.coll.get(k, 0.0) + v
+        if op.kind == "dot":
+            total.flops += _dot_flops(op, table)
+        elif op.kind == "convolution":
+            total.flops += _conv_flops(op, table)
+        for c in COLLECTIVES:
+            if op.kind == c or op.kind == c + "-start":
+                total.coll[c] = total.coll.get(c, 0.0) + op.result_bytes
+                total.coll_counts[c] = total.coll_counts.get(c, 0.0) + 1
+        total.bytes += op_hbm_bytes(op, table, comps)
+    memo[name] = total
+    return total
+
+
+def module_cost(hlo_text: str) -> Cost:
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        return Cost()
+    return _comp_cost(comps, entry, {})

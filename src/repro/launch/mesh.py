@@ -1,0 +1,52 @@
+"""Production mesh construction + logical-axis activation.
+
+Importing this module never touches jax device state; the mesh is built
+by calling ``make_production_mesh`` (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 first).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.models.sharding import set_axis_map
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2) -> jax.sharding.Mesh:
+    """Small mesh for CPU integration tests (needs host device override)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def activate(mesh: jax.sharding.Mesh) -> Dict[str, Tuple[str, ...]]:
+    """Register the logical->physical axis map used by ``constrain``."""
+    names = mesh.axis_names
+    dp = tuple(n for n in ("pod", "data") if n in names)
+    mapping = {
+        "dp": dp,
+        "tp": ("model",) if "model" in names else (),
+        "sp": ("data",) if "data" in names else (),
+    }
+    sizes = {k: int(np.prod([mesh.shape[a] for a in v]) if v else 1)
+             for k, v in mapping.items()}
+    set_axis_map(mapping, sizes)
+    return mapping
+
+
+def dp_size(mesh) -> int:
+    n = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            n *= mesh.shape[ax]
+    return n
+
+
+def tp_size(mesh) -> int:
+    return mesh.shape.get("model", 1)

@@ -1,0 +1,46 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Per-cell perf analysis: lower one cell, print roofline + top-op report.
+#   PYTHONPATH=src python -m repro.launch.perf_cell --arch rwkv6-3b \
+#       --shape train_4k [--quantized]
+
+import argparse
+import json
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--quantized", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    import jax
+    from repro.launch import perf_tools
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    # lower_cell returns the result dict; we re-lower to get the text
+    import repro.launch.dryrun as dr
+    import time
+    t0 = time.time()
+    res = lower_cell(args.arch, args.shape, mesh, quantized=args.quantized)
+    print(json.dumps(res["roofline"], indent=1))
+    print("collectives:", {k: f"{v/1e9:.2f}GB"
+                           for k, v in res["collectives"].items()})
+    print(f"(lower+compile {time.time()-t0:.0f}s)")
+    hlo = dr.LAST_HLO
+    if args.save_hlo:
+        open(args.save_hlo, "w").write(hlo)
+    print(perf_tools.print_report(hlo, top=args.top))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Per-op attribution over the trip-count-aware HLO walk (§Perf tooling).
+
+``top_contributors`` returns the heaviest ops by HBM bytes / FLOPs with
+their jax-level op_name metadata (so a 167MB tensor maps back to the
+source line that built it).  This is the 'profile' of the dry-run world:
+no wall clock, but exact per-op traffic/compute under the roofline model.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch import hlo_cost
+
+_OPNAME_RE = re.compile(r'op_name="([^"]+)"')
+
+
+@dataclass
+class OpContrib:
+    kind: str
+    op_name: str
+    bytes: float
+    flops: float
+    count: float
+
+
+def _walk(comps, name, mult, out, memo_guard):
+    ops = comps.get(name, [])
+    table = {op.name: op for op in ops}
+    for op in ops:
+        if op.kind == "while":
+            if op.body and op.body in comps and op.body not in memo_guard:
+                _walk(comps, op.body, mult * op.trip, out,
+                      memo_guard | {op.body})
+            continue
+        if op.kind in hlo_cost.PASSTHROUGH:
+            continue
+        m = _OPNAME_RE.search(op.attrs)
+        op_name = m.group(1) if m else "(none)"
+        flops = 0.0
+        if op.kind == "dot":
+            flops = hlo_cost._dot_flops(op, table)
+        elif op.kind == "convolution":
+            flops = hlo_cost._conv_flops(op, table)
+        elif op.kind in ("fusion", "call", "custom-call") and op.calls \
+                and op.calls in comps:
+            flops = hlo_cost._comp_cost(comps, op.calls, {}).flops
+        nbytes = hlo_cost.op_hbm_bytes(op, table, comps)
+        key = (op.kind, op_name)
+        ent = out.get(key)
+        if ent is None:
+            out[key] = OpContrib(op.kind, op_name, nbytes * mult,
+                                 flops * mult, mult)
+        else:
+            ent.bytes += nbytes * mult
+            ent.flops += flops * mult
+            ent.count += mult
+
+
+def top_contributors(hlo_text: str, by: str = "bytes", top: int = 25
+                     ) -> List[OpContrib]:
+    comps, entry = hlo_cost.parse_module(hlo_text)
+    out: Dict[Tuple[str, str], OpContrib] = {}
+    if entry:
+        _walk(comps, entry, 1.0, out, frozenset())
+    rows = list(out.values())
+    rows.sort(key=lambda r: getattr(r, by), reverse=True)
+    return rows[:top]
+
+
+def print_report(hlo_text: str, top: int = 25) -> str:
+    rows = top_contributors(hlo_text, "bytes", top)
+    total_b = sum(r.bytes for r in top_contributors(hlo_text, "bytes",
+                                                    10_000))
+    lines = [f"{'GB':>9s} {'%':>5s} {'GFLOP':>10s} {'xN':>7s} "
+             f"{'kind':14s} op_name"]
+    for r in rows:
+        lines.append(
+            f"{r.bytes/1e9:9.2f} {100*r.bytes/max(total_b,1):5.1f} "
+            f"{r.flops/1e9:10.1f} {r.count:7.0f} {r.kind:14s} "
+            f"{r.op_name[:110]}")
+    return "\n".join(lines)

@@ -1,0 +1,163 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs / (peak_FLOPs/s)          per chip
+    memory     = HLO_bytes / HBM_bw                  per chip
+    collective = collective_bytes / link_bw          per chip
+
+``compiled.cost_analysis()`` on an SPMD-partitioned executable reports
+the *per-device* program, so no further division by chip count is done
+(verified against hand-counted FLOPs in tests/test_roofline.py).
+Collective bytes are not in cost_analysis: they are parsed from the
+optimized HLO text by summing result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+# TPU v5e-class hardware constants (per the assignment)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-reduce.5 = f32[8,128]{1,0} all-reduce(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:[a-z0-9]+\[[0-9,]*\][^)\s]*,?\s*)+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [f"{k}:{v/1e6:.1f}MB({self.count_by_kind[k]})"
+                 for k, v in sorted(self.bytes_by_kind.items())]
+        return " ".join(parts) or "none"
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # skip -done ops (the -start carries the shape) and fusions
+        if "-done" in stripped.split("=")[0]:
+            continue
+        m = _OP_RE.search(stripped)
+        if not m:
+            continue
+        shapes_str, kind = m.group(1), m.group(2)
+        nbytes = sum(_shape_bytes(d, s)
+                     for d, s in _SHAPE_RE.findall(shapes_str))
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per-device HLO FLOPs
+    hbm_bytes: float             # per-device HLO bytes accessed
+    coll_bytes: float            # per-device collective bytes
+    model_flops: float           # analytic useful FLOPs (global)
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips): remat/redundancy waste."""
+        tot = self.flops * self.chips
+        return self.model_flops / tot if tot else float("nan")
+
+    @property
+    def mfu_bound(self) -> float:
+        """Roofline-bound MFU: useful flops / (chips × peak × t_bound)."""
+        if self.t_bound == 0:
+            return float("nan")
+        return self.model_flops / (self.chips * PEAK_FLOPS * self.t_bound)
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def analyze(compiled, model_flops: float, chips: int,
+            hlo_text: Optional[str] = None) -> Roofline:
+    """Roofline from the trip-count-aware HLO parse (see hlo_cost.py).
+
+    ``compiled.cost_analysis()`` counts while bodies once (lax.scan!), so
+    the parsed module cost is authoritative; the raw numbers are kept in
+    the dry-run artifact for reference."""
+    from repro.launch import hlo_cost
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = hlo_cost.module_cost(text)
+    return Roofline(flops=cost.flops, hbm_bytes=cost.bytes,
+                    coll_bytes=float(cost.coll_bytes),
+                    model_flops=model_flops, chips=chips)
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE)."""
+    return 6.0 * cfg.n_active_params() * tokens
+
+
+def model_flops_decode(cfg, batch: int) -> float:
+    """2·N_active per generated token."""
+    return 2.0 * cfg.n_active_params() * batch

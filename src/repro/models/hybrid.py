@@ -1,0 +1,219 @@
+"""Jamba-style hybrid: periods of ``attn_every`` layers (1 attention,
+rest Mamba), FFN alternating dense/MoE.
+
+Layer layout per 8-period (jamba-1.5): mixers [M M M M A M M M] (attention
+at index attn_every//2), FFNs [mlp moe mlp moe mlp moe mlp moe]
+(MoE at odd indices: moe_every=2, moe_offset=1).
+
+Params are stacked over *periods* and scanned; the 8 sublayers inside a
+period are unrolled (heterogeneous structure), keeping HLO size O(period).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import quantized as q
+from repro.models import layers as L
+from repro.models import mamba
+from repro.models.sharding import constrain
+
+
+def _period_layout(cfg):
+    P = cfg.attn_every
+    attn_pos = P // 2
+    mixers = ["attn" if i == attn_pos else "mamba" for i in range(P)]
+    ffns = ["moe" if (i % cfg.moe_every) == cfg.moe_offset and cfg.n_experts
+            else "mlp" for i in range(P)]
+    return mixers, ffns
+
+
+def _period_init(cfg, key):
+    mixers, ffns = _period_layout(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    n_mamba = mixers.count("mamba")
+    n_moe = ffns.count("moe")
+    n_mlp = ffns.count("mlp")
+    ks = jax.random.split(key, 4)
+    p = {
+        "mamba": jax.vmap(lambda k: mamba.init(cfg, k))(
+            jax.random.split(ks[0], n_mamba)),
+        "attn": L.gqa_init(cfg, ks[1]),
+        "mlp": jax.vmap(lambda k: L.swiglu_init(cfg, k))(
+            jax.random.split(ks[2], n_mlp)),
+        "moe": (jax.vmap(lambda k: L.moe_init(cfg, k))(
+            jax.random.split(ks[3], n_moe)) if n_moe else {}),
+        "pre_norm": jnp.ones((cfg.attn_every, d), dt),
+        "ffn_norm": jnp.ones((cfg.attn_every, d), dt),
+    }
+    return p
+
+
+def init(cfg, key) -> Dict[str, Any]:
+    assert cfg.n_layers % cfg.attn_every == 0, cfg.name
+    n_periods = cfg.n_layers // cfg.attn_every
+    dt = jnp.dtype(cfg.param_dtype)
+    kE, kB, kH = jax.random.split(key, 3)
+    blocks = jax.vmap(lambda k: _period_init(cfg, k))(
+        jax.random.split(kB, n_periods))
+    return {
+        "embed": L.embed_init(kE, cfg.vocab_size, cfg.d_model, dt),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": L.dense_init(kH, cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def _take(tree, i):
+    return jax.tree.map(lambda t: t[i], tree)
+
+
+def _period_apply(cfg, p, x, positions, *, caches=None, cache_index=None):
+    """One period (unrolled sublayers).
+
+    caches: None (train) or dict with 'kv' (pair), 'ssm' (n_mamba,B,di,ds),
+    'conv' (n_mamba,B,dc-1,di). Returns (x, aux, new_caches).
+    """
+    mixers, ffns = _period_layout(cfg)
+    aux = jnp.float32(0.0)
+    mi = 0
+    li_mlp = 0
+    li_moe = 0
+    new_kv = None
+    new_ssm = []
+    new_conv = []
+    for i, (mx, ff) in enumerate(zip(mixers, ffns)):
+        xn = L.rms_norm(x, p["pre_norm"][i], cfg.norm_eps)
+        if mx == "attn":
+            if caches is None:
+                h, _ = L.gqa_apply(cfg, p["attn"], xn, positions)
+            else:
+                h, new_kv = L.gqa_apply(cfg, p["attn"], xn, positions,
+                                        cache=caches["kv"],
+                                        cache_index=cache_index)
+        else:
+            mp = _take(p["mamba"], mi)
+            if caches is None:
+                h, _, _ = mamba.apply(cfg, mp, xn)
+            else:
+                h, ns, nc = mamba.apply(
+                    cfg, mp, xn, ssm_state=caches["ssm"][mi],
+                    conv_state=caches["conv"][mi])
+                new_ssm.append(ns)
+                new_conv.append(nc)
+            mi += 1
+        x = x + h
+        xn = L.rms_norm(x, p["ffn_norm"][i], cfg.norm_eps)
+        if ff == "moe":
+            y, a = L.moe_apply(cfg, _take(p["moe"], li_moe), xn)
+            aux = aux + a
+            li_moe += 1
+        else:
+            y = L.swiglu_apply(_take(p["mlp"], li_mlp), xn)
+            li_mlp += 1
+        x = x + y
+    new_caches = None
+    if caches is not None:
+        new_caches = {
+            "kv": new_kv,
+            "ssm": jnp.stack(new_ssm),
+            "conv": jnp.stack([c.astype(caches["conv"].dtype)
+                               for c in new_conv]),
+        }
+    return x, aux, new_caches
+
+
+# --------------------------------------------------------------------------- #
+#  Public API
+# --------------------------------------------------------------------------- #
+def _embed(cfg, params, batch):
+    if "embeds" in batch:
+        return batch["embeds"].astype(jnp.dtype(cfg.compute_dtype))
+    emb = q.dequant(params["embed"]) if q.is_quantized(params["embed"]) \
+        else params["embed"]
+    return jnp.take(emb, batch["tokens"], axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+
+
+def forward(cfg, params, batch) -> Tuple[jax.Array, jax.Array]:
+    x = _embed(cfg, params, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = constrain(x, "dp", None, None)
+
+    def body(carry, blk):
+        x, aux = carry
+        y, a, _ = _period_apply(cfg, blk, x, positions)
+        return (constrain(y, "dp", None, None), aux + a), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = lax.scan(fn, (x, jnp.float32(0.0)), params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def logits(cfg, params, hidden) -> jax.Array:
+    return constrain(q.matmul(hidden, params["lm_head"]), "dp", None, "tp")
+
+
+def init_cache(cfg, batch_size: int, max_len: int) -> Dict[str, Any]:
+    n_periods = cfg.n_layers // cfg.attn_every
+    mixers, _ = _period_layout(cfg)
+    n_mamba = mixers.count("mamba")
+    dt = jnp.dtype(cfg.compute_dtype)
+    kvd = cfg.kv_heads * cfg.hd
+    di, ds, dc = cfg.d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {
+        "kv": (jnp.zeros((n_periods, batch_size, max_len, kvd), dt),
+               jnp.zeros((n_periods, batch_size, max_len, kvd), dt)),
+        "ssm": jnp.zeros((n_periods, n_mamba, batch_size, di, ds),
+                         jnp.float32),
+        "conv": jnp.zeros((n_periods, n_mamba, batch_size, dc - 1, di), dt),
+        "index": jnp.int32(0),
+    }
+
+
+def _cached_stack(cfg, params, cache, x, positions, cache_index):
+    def body(carry, scanned):
+        x, aux = carry
+        blk, kv_k, kv_v, ssm, conv = scanned
+        y, a, ncaches = _period_apply(
+            cfg, blk, x, positions,
+            caches={"kv": (kv_k, kv_v), "ssm": ssm, "conv": conv},
+            cache_index=cache_index)
+        return (y, aux + a), ncaches
+
+    (x, aux), ncaches = lax.scan(
+        body, (x, jnp.float32(0.0)),
+        (params["blocks"], cache["kv"][0], cache["kv"][1],
+         cache["ssm"], cache["conv"]))
+    new_cache = dict(cache,
+                     kv=(ncaches["kv"][0], ncaches["kv"][1]),
+                     ssm=ncaches["ssm"], conv=ncaches["conv"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache
+
+
+def prefill(cfg, params, batch, cache) -> Tuple[jax.Array, Dict]:
+    x = _embed(cfg, params, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = constrain(x, "dp", None, None)
+    h, new_cache = _cached_stack(cfg, params, cache, x, positions, 0)
+    new_cache["index"] = jnp.int32(S)
+    return logits(cfg, params, h[:, -1:, :])[:, 0, :], new_cache
+
+
+def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:
+    x = _embed(cfg, params, {"tokens": tokens})
+    idx = jnp.asarray(cache["index"])
+    positions = idx[:, None] if idx.ndim else jnp.reshape(idx, (1, 1))
+    x = constrain(x, "dp", None, None)
+    h, new_cache = _cached_stack(cfg, params, cache, x, positions,
+                                 cache["index"])
+    new_cache["index"] = cache["index"] + 1
+    return logits(cfg, params, h[:, 0:1, :])[:, 0, :], new_cache

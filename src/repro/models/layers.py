@@ -1,0 +1,606 @@
+"""Shared model primitives.
+
+All weights flow through ``repro.core.quantized.matmul`` so any weight may
+transparently be an ``SQTensor``/``VQTensor`` after PTQ.  Shapes follow the
+(B, S, d) convention; caches store flattened head dims (B, S, n_kv*hd) so a
+single PartitionSpec works for every head count (see models/sharding.py).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import quantized as q
+
+Params = Dict[str, Any]
+
+# --------------------------------------------------------------------------- #
+#  Init helpers
+# --------------------------------------------------------------------------- #
+def dense_init(key, ic: int, oc: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(ic)
+    return (jax.random.normal(key, (ic, oc)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+#  Norms
+# --------------------------------------------------------------------------- #
+def rms_norm(x, gamma, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)
+            + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def group_norm(x, gamma, beta, n_groups: int, eps: float):
+    """Per-head group norm (RWKV ln_x). x: (..., n_groups*gd)."""
+    shape = x.shape
+    xf = x.astype(jnp.float32).reshape(shape[:-1] + (n_groups, -1))
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * lax.rsqrt(var + eps)
+    xf = xf.reshape(shape)
+    return (xf * gamma.astype(jnp.float32)
+            + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+#  Rotary position embedding
+# --------------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) or (S,) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                                # (hd/2,)
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * inv                                 # (..., S, hd/2)
+    if ang.ndim == 2:                                          # (S, hd/2)
+        ang = ang[None]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+#  Attention cores
+# --------------------------------------------------------------------------- #
+NEG_INF = -1e30
+
+
+def _plain_attention(qh, kh, vh, *, causal: bool, kv_len=None,
+                     q_offset=0):
+    """qh: (B,Sq,H,hd) kh/vh: (B,Sk,KV,hd_v). Returns (B,Sq,H,hd_v).
+
+    ``kv_len``: optional scalar valid-length mask (decode against a cache
+    whose tail is garbage).  ``q_offset``: absolute position of q[0] for
+    causal masking against cached history.
+    """
+    B, Sq, H, hd = qh.shape
+    Sk, KV = kh.shape[1], kh.shape[2]
+    G = H // KV
+    qh = qh.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qh, kh,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(hd)
+    kpos = jnp.arange(Sk)
+    if causal:
+        off = jnp.asarray(q_offset)
+        if off.ndim == 0:                                      # scalar offset
+            qpos = jnp.arange(Sq) + off
+            mask = kpos[None, :] <= qpos[:, None]              # (Sq, Sk)
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        else:                                                  # per-batch (B,)
+            qpos = jnp.arange(Sq)[None, :] + off[:, None]      # (B, Sq)
+            mask = kpos[None, None, :] <= qpos[:, :, None]     # (B, Sq, Sk)
+            scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    if kv_len is not None:
+        valid = kpos < kv_len                                  # (Sk,)
+        scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(vh.dtype), vh)
+    return out.reshape(B, Sq, H, vh.shape[-1])
+
+
+def _blockwise_attention(qh, kh, vh, *, causal: bool, q_block: int,
+                         kv_block: int):
+    """Flash-style two-level online-softmax attention (memory O(block^2)).
+
+    Baseline computes every (q_block, kv_block) tile and masks; the §Perf
+    pass may skip fully-masked tiles.
+    """
+    B, Sq, H, hd = qh.shape
+    Sk, KV = kh.shape[1], kh.shape[2]
+    hd_v = vh.shape[-1]
+    G = H // KV
+    nq, nk = Sq // q_block, Sk // kv_block
+    scale = 1.0 / math.sqrt(hd)
+
+    qb = qh.reshape(B, nq, q_block, KV, G, hd)
+    kb = kh.reshape(B, nk, kv_block, KV, hd)
+    vb = vh.reshape(B, nk, kv_block, KV, hd_v)
+
+    def q_step(_, qi):
+        qblk = qb[:, qi]                                       # (B,qb,KV,G,hd)
+
+        def kv_step(carry, ki):
+            acc, m, denom = carry
+            kblk, vblk = kb[:, ki], vb[:, ki]
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = qi * q_block + jnp.arange(q_block)
+                kpos = ki * kv_block + jnp.arange(kv_block)
+                mask = kpos[None, :] <= qpos[:, None]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            denom = denom * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vblk.dtype), vblk)
+            acc = acc * alpha[..., None] + pv.astype(jnp.float32)
+            return (acc, m_new, denom), None
+
+        acc0 = jnp.zeros((B, KV, G, q_block, hd_v), jnp.float32)
+        m0 = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+        d0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        (acc, m, denom), _ = lax.scan(kv_step, (acc0, m0, d0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(denom[..., None], 1e-30)
+        # (B,KV,G,qb,hd_v) -> (B,qb,KV,G,hd_v)
+        return None, out.transpose(0, 3, 1, 2, 4).astype(qh.dtype)
+
+    _, blocks = lax.scan(q_step, None, jnp.arange(nq))          # (nq,B,qb,...)
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd_v)
+    return out
+
+
+def _tp_size() -> int:
+    from repro.models.sharding import logical_size
+    return logical_size("tp")
+
+
+def _attn_sharding(qh, kh, vh):
+    """Pin the attention layout (§Perf pair-2).
+
+    Head-sharded over `tp` when both H and KV divide it; otherwise
+    batch-only (replicating attention compute over `tp` costs ~0.3 s of
+    the 256-chip compute budget; leaving it to GSPMD costs 70+ s of
+    per-tile partial-score all-reduces on a sharded head_dim)."""
+    from repro.models.sharding import constrain, logical_size
+    tp = logical_size("tp")
+    if qh.shape[1] == 1:
+        # decode: the cache's own layout (sequence-sharded over tp) rules;
+        # scores are S-local with tiny softmax-stat psums
+        return qh, kh, vh
+    H, KV = qh.shape[2], kh.shape[2]
+    if tp > 1 and H % tp == 0 and KV % tp == 0:
+        qh = constrain(qh, "dp", None, "tp", None)
+        kh = constrain(kh, "dp", None, "tp", None)
+        vh = constrain(vh, "dp", None, "tp", None)
+    elif tp > 1:
+        qh = constrain(qh, "dp", None, None, None)
+        kh = constrain(kh, "dp", None, None, None)
+        vh = constrain(vh, "dp", None, None, None)
+    return qh, kh, vh
+
+
+def _balanced_causal_attention(qh, kh, vh, *, block: int):
+    """Causal blockwise attention with balanced q-pair scheduling.
+
+    Naive causal tiling computes nq·nk tiles and masks half.  Pairing q
+    blocks (i, nq-1-i) makes every pair need exactly nq+1 kv tiles, so
+    the tile count halves with a static schedule (§Perf pair-2 iter 2).
+    Requires q_block == kv_block and even nq.
+    """
+    B, Sq, H, hd = qh.shape
+    Sk, KV = kh.shape[1], kh.shape[2]
+    hd_v = vh.shape[-1]
+    G = H // KV
+    nq = Sq // block
+    scale = 1.0 / math.sqrt(hd)
+
+    from repro.models.sharding import constrain
+    qb = qh.reshape(B, nq, block, KV, G, hd)
+    kb = kh.reshape(B, nq, block, KV, hd)
+    vb = vh.reshape(B, nq, block, KV, hd_v)
+    # shard every tile's q-dim over tp: all tile ops are q-batched, so
+    # scores/softmax/accumulators shard 16-way with zero partial sums
+    # (one relayout per layer; §Perf pair-2 iter 3)
+    if block % max(1, _tp_size()) == 0:
+        qb = constrain(qb, "dp", None, "tp", None, None, None)
+
+    def pair_step(_, qi):
+        lo, hi = qi, nq - 1 - qi
+        qlo, qhi = qb[:, lo], qb[:, hi]
+
+        def kv_step(carry, j):
+            (al, ml, dl, ah, mh, dh) = carry
+            use_lo = j <= qi
+            kv_idx = jnp.where(use_lo, j, j - qi - 1)
+            kblk, vblk = kb[:, kv_idx], vb[:, kv_idx]
+            qblk = jnp.where(use_lo, qlo, qhi)
+            qrow = jnp.where(use_lo, lo, hi) * block
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            qpos = qrow + jnp.arange(block)
+            kpos = kv_idx * block + jnp.arange(block)
+            mask = kpos[None, :] <= qpos[:, None]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_cur = jnp.where(use_lo, ml, mh)
+            a_cur = jnp.where(use_lo, al, ah)
+            d_cur = jnp.where(use_lo, dl, dh)
+            m_new = jnp.maximum(m_cur, s.max(axis=-1))
+            alpha = jnp.exp(m_cur - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            d_new = d_cur * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vblk.dtype), vblk)
+            a_new = a_cur * alpha[..., None] + pv.astype(jnp.float32)
+            al = jnp.where(use_lo, a_new, al)
+            ml = jnp.where(use_lo, m_new, ml)
+            dl = jnp.where(use_lo, d_new, dl)
+            ah = jnp.where(use_lo, ah, a_new)
+            mh = jnp.where(use_lo, mh, m_new)
+            dh = jnp.where(use_lo, dh, d_new)
+            return (al, ml, dl, ah, mh, dh), None
+
+        z = jnp.zeros((B, KV, G, block, hd_v), jnp.float32)
+        m0 = jnp.full((B, KV, G, block), NEG_INF, jnp.float32)
+        d0 = jnp.zeros((B, KV, G, block), jnp.float32)
+        if block % max(1, _tp_size()) == 0:
+            z = constrain(z, "dp", None, None, "tp", None)
+            m0 = constrain(m0, "dp", None, None, "tp")
+            d0 = constrain(d0, "dp", None, None, "tp")
+        (al, ml, dl, ah, mh, dh), _ = lax.scan(
+            kv_step, (z, m0, d0, z, m0, d0), jnp.arange(nq + 1))
+
+        def fin(acc, den):
+            out = acc / jnp.maximum(den[..., None], 1e-30)
+            return out.transpose(0, 3, 1, 2, 4).astype(qh.dtype)
+
+        return None, (fin(al, dl), fin(ah, dh))
+
+    _, (lo_out, hi_out) = lax.scan(pair_step, None, jnp.arange(nq // 2))
+    # rows: lo covers 0..nq/2-1 in order; hi covers nq-1..nq/2 reversed
+    blocks = jnp.concatenate([lo_out, hi_out[::-1]], axis=0)
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd_v)
+    return out
+
+
+def attention(qh, kh, vh, *, causal: bool = True, kv_len=None, q_offset=0,
+              block_threshold: int = 8192, q_block: int = 512,
+              kv_block: int = 1024):
+    """Dispatch between plain and blockwise attention by sequence length."""
+    qh, kh, vh = _attn_sharding(qh, kh, vh)
+    Sq, Sk = qh.shape[1], kh.shape[1]
+    if (Sq >= block_threshold and Sq == Sk and causal and kv_len is None
+            and Sq % q_block == 0 and (Sq // q_block) % 2 == 0):
+        return _balanced_causal_attention(qh, kh, vh, block=q_block)
+    if (Sq >= block_threshold and Sk >= block_threshold and kv_len is None
+            and Sq % q_block == 0 and Sk % kv_block == 0):
+        return _blockwise_attention(qh, kh, vh, causal=causal,
+                                    q_block=q_block, kv_block=kv_block)
+    return _plain_attention(qh, kh, vh, causal=causal, kv_len=kv_len,
+                            q_offset=q_offset)
+
+
+def cache_update(cache, new, index):
+    """Write (B,S,D) `new` into (B,Smax,D) `cache` at position `index`.
+
+    ``index`` may be a scalar (lock-step decode / prefill) or a per-batch
+    (B,) vector (continuous batching: each slot at its own position)."""
+    idx = jnp.asarray(index)
+    new = new.astype(cache.dtype)
+    if idx.ndim == 0:
+        return lax.dynamic_update_slice(cache, new, (0, idx, 0))
+    return jax.vmap(
+        lambda c, n, i: lax.dynamic_update_slice(c, n, (i, 0)))(
+        cache, new, idx)
+
+
+# --------------------------------------------------------------------------- #
+#  GQA attention layer
+# --------------------------------------------------------------------------- #
+def gqa_init(cfg, key) -> Params:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, H * hd, dt),
+        "wk": dense_init(ks[1], d, KV * hd, dt),
+        "wv": dense_init(ks[2], d, KV * hd, dt),
+        "wo": dense_init(ks[3], H * hd, d, dt, scale=1.0 / math.sqrt(H * hd)),
+    }
+
+
+def gqa_apply(cfg, p: Params, x, positions, *, cache=None, cache_index=None,
+              causal=True, kv_source=None):
+    """Full-sequence (cache=None) or cached decode/prefill attention.
+
+    kv_source: cross-attention source (whisper); keys/values from it.
+    Returns (out, new_kv) where new_kv is the updated flattened K,V pair
+    (or None when cache is None).
+    """
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    src = x if kv_source is None else kv_source
+    qf = q.matmul(x, p["wq"])                                   # (B,S,H*hd)
+    kf = q.matmul(src, p["wk"])
+    vf = q.matmul(src, p["wv"])
+    qh = qf.reshape(B, S, H, hd)
+    kh = kf.reshape(B, src.shape[1], KV, hd)
+    vh = vf.reshape(B, src.shape[1], KV, hd)
+    if kv_source is None and cfg.use_rope:                      # self-attn rope
+        qh = apply_rope(qh, positions, cfg.rope_theta)
+        kh = apply_rope(kh, positions, cfg.rope_theta)
+
+    new_kv = None
+    if cache is not None:
+        ck, cv = cache                                          # (B,Smax,KV*hd)
+        Smax = ck.shape[1]
+        ck = cache_update(ck, kh.reshape(B, S, KV * hd), cache_index)
+        cv = cache_update(cv, vh.reshape(B, S, KV * hd), cache_index)
+        new_kv = (ck, cv)
+        kh = ck.reshape(B, Smax, KV, hd)
+        vh = cv.reshape(B, Smax, KV, hd)
+        # causal mask with q_offset also masks the garbage cache tail
+        out = attention(qh, kh, vh, causal=True, q_offset=cache_index)
+    else:
+        out = attention(qh, kh, vh, causal=causal and kv_source is None)
+    return q.matmul(out.reshape(B, S, H * hd), p["wo"]), new_kv
+
+
+# --------------------------------------------------------------------------- #
+#  MLA (multi-head latent attention) layer
+# --------------------------------------------------------------------------- #
+def mla_init(cfg, key) -> Params:
+    d, H = cfg.d_model, cfg.n_heads
+    nope, rope, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": dense_init(ks[0], d, r, dt),
+        "w_kr": dense_init(ks[1], d, rope, dt),
+        "w_uk": dense_init(ks[2], r, H * nope, dt),
+        "w_uv": dense_init(ks[3], r, H * vh, dt),
+        "wo": dense_init(ks[4], H * vh, d, dt),
+        "kv_norm": jnp.ones((r,), dt),
+    }
+    if qr:
+        p["w_dq"] = dense_init(ks[5], d, qr, dt)
+        p["w_uq"] = dense_init(ks[6], qr, H * (nope + rope), dt)
+        p["q_norm"] = jnp.ones((qr,), dt)
+    else:
+        p["wq"] = dense_init(ks[7], d, H * (nope + rope), dt)
+    return p
+
+
+def mla_apply(cfg, p: Params, x, positions, *, cache=None, cache_index=None):
+    """MLA attention.  Cache stores the latent c_kv + rope-k only."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    nope, rope, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+
+    if cfg.q_lora_rank:
+        qlat = rms_norm(q.matmul(x, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+        qf = q.matmul(qlat, p["w_uq"])
+    else:
+        qf = q.matmul(x, p["wq"])
+    qh = qf.reshape(B, S, H, nope + rope)
+    q_nope, q_rope = qh[..., :nope], qh[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rms_norm(q.matmul(x, p["w_dkv"]), p["kv_norm"], cfg.norm_eps)
+    k_rope = q.matmul(x, p["w_kr"]).reshape(B, S, 1, rope)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+
+    q_offset = 0
+    new_cache = None
+    if cache is not None:
+        cc, cr = cache                                          # (B,Smax,r),(B,Smax,rope)
+        cc = cache_update(cc, c_kv, cache_index)
+        cr = cache_update(cr, k_rope.reshape(B, S, rope), cache_index)
+        new_cache = (cc, cr)
+        c_kv, k_rope = cc, cr.reshape(B, cc.shape[1], 1, rope)
+        q_offset = cache_index
+
+    Sk = c_kv.shape[1]
+    kh_nope = q.matmul(c_kv, p["w_uk"]).reshape(B, Sk, H, nope)
+    vh = q.matmul(c_kv, p["w_uv"]).reshape(B, Sk, H, vdim)
+    kh = jnp.concatenate(
+        [kh_nope, jnp.broadcast_to(k_rope, (B, Sk, H, rope))], axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = attention(qfull, kh, vh, causal=True, q_offset=q_offset)
+    return q.matmul(out.reshape(B, S, H * vdim), p["wo"]), new_cache
+
+
+def mla_decode_absorbed(cfg, p: Params, x, positions, *, cache, cache_index):
+    """Weight-absorbed MLA decode: attention runs in the latent space.
+
+    Avoids up-projecting the whole cache per step: ``W_uk`` is absorbed into
+    the query and ``W_uv`` into the output, so per-token cost is
+    O(Sk * (r + rope)) instead of O(Sk * r * H * nope).
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads
+    nope, rope, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+
+    if cfg.q_lora_rank:
+        qlat = rms_norm(q.matmul(x, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+        qf = q.matmul(qlat, p["w_uq"])
+    else:
+        qf = q.matmul(x, p["wq"])
+    qh = qf.reshape(B, S, H, nope + rope)
+    q_nope, q_rope = qh[..., :nope], qh[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rms_norm(q.matmul(x, p["w_dkv"]), p["kv_norm"], cfg.norm_eps)
+    k_rope = q.matmul(x, p["w_kr"]).reshape(B, S, 1, rope)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+
+    cc, cr = cache
+    cc = cache_update(cc, c_kv, cache_index)
+    cr = cache_update(cr, k_rope.reshape(B, S, rope), cache_index)
+
+    w_uk = q.dequant(p["w_uk"]).reshape(r, H, nope)
+    w_uv = q.dequant(p["w_uv"]).reshape(r, H, vdim)
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)          # absorb W_uk
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat, cc,
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshn,btn->bhst", q_rope, cr,
+                        preferred_element_type=jnp.float32)
+    scores = (s_lat + s_rope) / math.sqrt(nope + rope)
+    Sk = cc.shape[1]
+    off = jnp.asarray(cache_index)
+    if off.ndim == 0:
+        qpos = jnp.arange(S) + off
+        mask = jnp.arange(Sk)[None, :] <= qpos[:, None]
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    else:
+        qpos = jnp.arange(S)[None, :] + off[:, None]            # (B,S)
+        mask = jnp.arange(Sk)[None, None, :] <= qpos[:, :, None]
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhst,btr->bshr", probs.astype(cc.dtype), cc)
+    out = jnp.einsum("bshr,rhv->bshv", out_lat, w_uv)           # absorb W_uv
+    y = q.matmul(out.reshape(B, S, H * vdim).astype(x.dtype), p["wo"])
+    return y, (cc, cr)
+
+
+# --------------------------------------------------------------------------- #
+#  FFN: SwiGLU + MoE
+# --------------------------------------------------------------------------- #
+def swiglu_init(cfg, key, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, ff, dt),
+        "w_in": dense_init(ks[1], d, ff, dt),
+        "w_out": dense_init(ks[2], ff, d, dt, scale=1.0 / math.sqrt(ff)),
+    }
+
+
+def swiglu_apply(p: Params, x):
+    g = jax.nn.silu(q.matmul(x, p["w_gate"]))
+    return q.matmul(g * q.matmul(x, p["w_in"]), p["w_out"])
+
+
+def moe_init(cfg, key) -> Params:
+    d, E, eff = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "we_gate": (jax.random.normal(ks[1], (E, d, eff)) * s).astype(dt),
+        "we_in": (jax.random.normal(ks[2], (E, d, eff)) * s).astype(dt),
+        "we_out": (jax.random.normal(ks[3], (E, eff, d))
+                   / math.sqrt(eff)).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = swiglu_init(
+            cfg, ks[4], d_ff=cfg.expert_d_ff * cfg.n_shared_experts)
+    return p
+
+
+CAPACITY_FACTOR = 1.25
+
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int) -> int:
+    c = int(math.ceil(n_tokens * top_k * CAPACITY_FACTOR / n_experts))
+    # tiny batches (unit tests / single-token decode) never drop: expert
+    # overflow there is pure routing noise, not load shedding
+    c = max(c, min(n_tokens, 64))
+    return max(8, -(-c // 8) * 8)                               # 8-aligned
+
+
+def moe_apply(cfg, p: Params, x) -> Tuple[jax.Array, jax.Array]:
+    """Scatter-dispatch MoE (token-drop at fixed capacity).
+
+    x: (B,S,d). Returns (y, aux_loss). Expert tensors are sharded on the
+    'model' axis by models/sharding.py; the dispatch scatter/gather lowers
+    to all-to-all style collectives under GSPMD.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+    C = moe_capacity(T, E, K)
+
+    logits = q.matmul(xt.astype(jnp.float32), p["router"])      # (T,E) f32
+    gates = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = lax.top_k(gates, K)                 # (T,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(gates, axis=0)                                # (E,)
+    fe = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0 / (T * K))
+    aux = E * jnp.sum(fe * me)
+
+    # position of each (token, choice) within its expert
+    flat_e = expert_idx.reshape(-1)                             # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) - onehot) * onehot        # (T*K,E)
+    pos = pos.sum(axis=1)
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)
+
+    xk = jnp.repeat(xt, K, axis=0)                              # (T*K,d)
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].add(xk)
+    xe = buf[:E * C].reshape(E, C, d)
+
+    from repro.models.sharding import constrain
+    xe = constrain(xe, "tp", None, None)
+    g = jax.nn.silu(q.expert_einsum("ecd,edf->ecf", xe, p["we_gate"]))
+    h = g * q.expert_einsum("ecd,edf->ecf", xe, p["we_in"])
+    ye = q.expert_einsum("ecf,efd->ecd", h, p["we_out"])        # (E,C,d)
+
+    yflat = ye.reshape(E * C, d)
+    safe = jnp.where(keep, slot, 0)
+    ytok = yflat[safe] * keep[:, None] * gate_vals.reshape(-1, 1).astype(x.dtype)
+    y = ytok.reshape(T, K, d).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        y = y + swiglu_apply(p["shared"], xt)
+    return y.reshape(B, S, d), aux
+
+
+def ffn_init(cfg, key, layer_idx: int) -> Params:
+    if cfg.is_moe_layer(layer_idx):
+        return moe_init(cfg, key)
+    return swiglu_init(cfg, key)
+
+
+def ffn_apply(cfg, p: Params, x, layer_idx_is_moe: bool):
+    if layer_idx_is_moe:
+        return moe_apply(cfg, p, x)
+    return swiglu_apply(p, x), jnp.float32(0.0)

@@ -1,0 +1,136 @@
+"""Mamba (S6) mixer for the jamba hybrid architecture.
+
+Selective SSM with diagonal state: chunk-parallel training path (outer scan
+over chunks, inner ``lax.associative_scan``) and a single-step decode path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import quantized as q
+from repro.models import layers as L
+
+SSM_CHUNK = 256
+
+
+def init(cfg, key) -> Dict[str, Any]:
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.mamba_d_state
+    dr, dc = cfg.dt_rank, cfg.mamba_d_conv
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    # dt bias: inverse-softplus of uniform in [1e-3, 1e-1]
+    u = jax.random.uniform(ks[0], (di,), minval=math.log(1e-3),
+                           maxval=math.log(1e-1))
+    dt_init = jnp.exp(u)
+    dt_bias = jnp.log(jnp.expm1(dt_init))
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": L.dense_init(ks[1], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[2], (di, dc)) / math.sqrt(dc)
+                   ).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": L.dense_init(ks[3], di, dr + 2 * ds, dt),
+        "dt_proj": (jax.random.normal(ks[4], (dr, di)) * dr ** -0.5
+                    ).astype(dt),
+        "dt_bias": dt_bias.astype(dt),
+        "A_log": jnp.log(A).astype(dt),
+        "D": jnp.ones((di,), dt),
+        "out_proj": L.dense_init(ks[5], di, d, dt),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv. x: (B,S,di), w: (di,dc).
+
+    conv_state: (B, dc-1, di) previous inputs (decode), or None (zero pad).
+    Returns (y, new_conv_state)."""
+    B, S, di = x.shape
+    dc = w.shape[1]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    new_state = xp[:, -(dc - 1):, :] if dc > 1 else None
+    wf = q.dequant(w) if q.is_quantized(w) else w
+    y = lax.conv_general_dilated(
+        xp, wf.astype(x.dtype).T[:, None, :],        # (dc, 1, di)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=di)
+    bb = q.dequant(b).reshape(-1) if q.is_quantized(b) else b
+    return y + bb.astype(y.dtype), new_state
+
+
+def _ssm_chunked(da, dbx, C, h0, chunk: int = SSM_CHUNK):
+    """h_t = da_t * h_{t-1} + dbx_t ; y_t = (h_t * C_t).sum(-1).
+
+    da, dbx: (B,S,di,ds); C: (B,S,ds); h0: (B,di,ds) f32.
+    """
+    B, S, di, ds = da.shape
+    n = max(S // chunk, 1)
+    chunk = S // n
+    dac = da.reshape(B, n, chunk, di, ds).transpose(1, 0, 2, 3, 4)
+    dbc = dbx.reshape(B, n, chunk, di, ds).transpose(1, 0, 2, 3, 4)
+    Cc = C.reshape(B, n, chunk, ds).transpose(1, 0, 2, 3)
+
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def chunk_step(h, inp):
+        a, bx, cc = inp                                # (B,chunk,di,ds)
+        # fold carry into the first step
+        bx = bx.at[:, 0].add(a[:, 0] * h)
+        a_cum, h_all = lax.associative_scan(op, (a, bx), axis=1)
+        y = jnp.einsum("bcds,bcs->bcd", h_all, cc)
+        return h_all[:, -1], y
+
+    h, ys = lax.scan(chunk_step, h0, (dac, dbc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    return y, h
+
+
+def apply(cfg, p: Dict, x, *, ssm_state=None, conv_state=None):
+    """Full-sequence (states None) or stateful decode.
+
+    Returns (out (B,S,d), new_ssm_state, new_conv_state)."""
+    B, S, d = x.shape
+    di, ds, dr = cfg.d_inner, cfg.mamba_d_state, cfg.dt_rank
+
+    xz = q.matmul(x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in, new_conv = _causal_conv(x_in, p["conv_w"], p["conv_b"], conv_state)
+    x_in = jax.nn.silu(x_in)
+
+    dbc = q.matmul(x_in, p["x_proj"])
+    dt, Bc, Cc = jnp.split(dbc, [dr, dr + ds], axis=-1)
+    dtb = q.dequant(p["dt_bias"]).reshape(-1) \
+        if q.is_quantized(p["dt_bias"]) else p["dt_bias"]
+    dt = jax.nn.softplus(q.matmul(dt, p["dt_proj"]).astype(jnp.float32)
+                         + dtb.astype(jnp.float32))            # (B,S,di)
+    A_log = q.dequant(p["A_log"]) if q.is_quantized(p["A_log"]) else p["A_log"]
+    A = -jnp.exp(A_log.astype(jnp.float32))                    # (di,ds)
+
+    da = jnp.exp(dt[..., None] * A[None, None])                # (B,S,di,ds)
+    dbx = (dt * x_in.astype(jnp.float32))[..., None] \
+        * Bc.astype(jnp.float32)[:, :, None, :]                # (B,S,di,ds)
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, di, ds), jnp.float32)
+    if S == 1:
+        h = da[:, 0] * ssm_state + dbx[:, 0]
+        y = jnp.einsum("bds,bs->bd", h, Cc[:, 0].astype(jnp.float32))[:, None]
+        new_h = h
+    else:
+        y, new_h = _ssm_chunked(da, dbx, Cc.astype(jnp.float32), ssm_state)
+
+    Dv = q.dequant(p["D"]).reshape(-1) if q.is_quantized(p["D"]) else p["D"]
+    y = y.astype(x.dtype) + x_in * Dv.astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return q.matmul(y, p["out_proj"]), new_h, new_conv

@@ -1,0 +1,114 @@
+"""Uniform model API over every architecture family.
+
+    module_for(cfg)         -> family module
+    init_params(cfg, key)   -> param pytree (scan-stacked blocks)
+    forward(cfg, p, batch)  -> (hidden, aux)       # train / full-seq
+    model_logits(cfg, p, h) -> logits
+    init_cache(cfg, B, S)   -> serving cache
+    prefill / decode_step   -> serving steps
+    input_specs(cfg, shape) -> ShapeDtypeStruct stand-ins (dry-run)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import hybrid, rwkv6, rwkv7, transformer, whisper
+
+
+def module_for(cfg: ModelConfig):
+    if cfg.rwkv_version == 6:
+        return rwkv6
+    if cfg.rwkv_version == 7:
+        return rwkv7
+    if cfg.family == "hybrid":
+        return hybrid
+    if cfg.is_encoder_decoder:
+        return whisper
+    return transformer
+
+
+def init_params(cfg, key):
+    return module_for(cfg).init(cfg, key)
+
+
+def forward(cfg, params, batch):
+    return module_for(cfg).forward(cfg, params, batch)
+
+
+def model_logits(cfg, params, hidden):
+    return module_for(cfg).logits(cfg, params, hidden)
+
+
+def init_cache(cfg, batch_size: int, max_len: int):
+    return module_for(cfg).init_cache(cfg, batch_size, max_len)
+
+
+def prefill(cfg, params, batch, cache):
+    return module_for(cfg).prefill(cfg, params, batch, cache)
+
+
+def decode_step(cfg, params, cache, tokens):
+    return module_for(cfg).decode_step(cfg, params, cache, tokens)
+
+
+# --------------------------------------------------------------------------- #
+#  Abstract inputs for the dry-run (no allocation)
+# --------------------------------------------------------------------------- #
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model inputs as ShapeDtypeStructs for the given workload shape.
+
+    train:    {tokens,labels} (or stub-frontend embeds)
+    prefill:  prompt inputs
+    decode:   {tokens: (B,1)} — the cache is built separately.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    cd = jnp.dtype(cfg.compute_dtype)
+    if shape.kind == "decode":
+        return {"tokens": _sds((B, 1), jnp.int32)}
+
+    batch: Dict[str, Any] = {}
+    if cfg.frontend == "patch_embed":
+        # precomputed anyres patch embeddings fill the sequence
+        batch["embeds"] = _sds((B, S, cfg.d_model), cd)
+    elif cfg.frontend == "audio_frames":
+        batch["src_frames"] = _sds(
+            (B, cfg.max_source_positions, cfg.d_model), cd)
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    if shape.kind == "train":
+        batch["labels"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract cache pytree for decode dry-runs."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def make_inputs(cfg: ModelConfig, shape_kind: str, B: int, S: int, key):
+    """Concrete small inputs for smoke tests."""
+    k1, k2 = jax.random.split(key)
+    cd = jnp.dtype(cfg.compute_dtype)
+    if cfg.frontend == "patch_embed":
+        batch = {"embeds": jax.random.normal(k1, (B, S, cfg.d_model),
+                                             dtype=jnp.float32).astype(cd)}
+    elif cfg.frontend == "audio_frames":
+        batch = {"src_frames": jax.random.normal(
+            k1, (B, cfg.max_source_positions, cfg.d_model),
+            dtype=jnp.float32).astype(cd),
+            "tokens": jax.random.randint(k2, (B, S), 0, cfg.vocab_size)}
+    else:
+        batch = {"tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab_size)}
+    if shape_kind == "train":
+        batch["labels"] = jax.random.randint(k2, (B, S), 0, cfg.vocab_size)
+    return batch

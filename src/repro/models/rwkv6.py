@@ -1,0 +1,384 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free, data-dependent decay.
+
+The paper's own family.  Element-wise interpolation weights (``mu_*``), the
+decay base and the bonus are exactly the ``x ⊙ μ`` weights targeted by
+RWKVQuant §3.2 (codebook optimization for element-wise multiplication).
+
+Two WKV evaluation paths:
+  * ``wkv6_scan``    — sequential recurrence (decode + correctness oracle);
+  * ``wkv6_chunked`` — chunk-parallel form used for train/prefill (the
+    Pallas kernel in ``repro.kernels.wkv6`` implements the same schedule).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import quantized as q
+from repro.models import layers as L
+from repro.models.sharding import constrain
+
+TM_LORA = 32       # token-shift ddlerp low-rank dim
+DECAY_LORA = 64    # decay lora dim
+WKV_CHUNK = 32     # chunk length for the parallel form
+# §Perf knobs (see EXPERIMENTS.md): nested remat on the chunk scan keeps
+# the (C,C,hd) pairwise tensors out of the autodiff residual set;
+# TP_CONSTRAINTS pins the Megatron col/row-parallel pattern on every
+# projection (without it GSPMD replicates the d×d matmuls on this arch)
+WKV_CHUNK_REMAT = True
+TP_CONSTRAINTS = True
+
+
+# --------------------------------------------------------------------------- #
+#  Init
+# --------------------------------------------------------------------------- #
+def _block_init(cfg, key, layer_idx_frac: float):
+    d, ff = cfg.d_model, cfg.d_ff
+    H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 12)
+    ratio_0_to_1 = layer_idx_frac                      # layer_idx/(L-1)
+    ratio_1_to_0 = 1.0 - layer_idx_frac
+    ch = jnp.arange(d) / d
+
+    # decay base: spaced per channel as in the reference implementation
+    decay_speed = -6.0 + 5.0 * (ch ** (0.7 + 1.3 * ratio_0_to_1))
+    mu = lambda p: (1.0 - ch ** p).astype(dt)
+
+    return {
+        "ln1": {"g": jnp.ones((d,), dt), "b": jnp.zeros((d,), dt)},
+        "ln2": {"g": jnp.ones((d,), dt), "b": jnp.zeros((d,), dt)},
+        "tm": {
+            "mu_x": mu(1.0), "mu_w": mu(0.9), "mu_k": mu(0.7),
+            "mu_v": mu(0.6), "mu_r": mu(0.5), "mu_g": mu(0.8),
+            "lora_maa_A": (jax.random.normal(ks[0], (d, 5 * TM_LORA))
+                           * 1e-2).astype(dt),
+            "lora_maa_B": (jax.random.normal(ks[1], (5, TM_LORA, d))
+                           * 1e-2).astype(dt),
+            "decay_w": decay_speed.astype(dt),
+            "lora_decay_A": (jax.random.normal(ks[2], (d, DECAY_LORA))
+                             * 1e-2).astype(dt),
+            "lora_decay_B": (jax.random.normal(ks[3], (DECAY_LORA, d))
+                             * 1e-2).astype(dt),
+            "bonus": (jax.random.normal(ks[4], (H, hd)) * 0.05
+                      + ratio_0_to_1).astype(dt),
+            "w_r": L.dense_init(ks[5], d, d, dt),
+            "w_k": L.dense_init(ks[6], d, d, dt),
+            "w_v": L.dense_init(ks[7], d, d, dt),
+            "w_g": L.dense_init(ks[8], d, d, dt),
+            "w_o": L.dense_init(ks[9], d, d, dt,
+                                scale=ratio_1_to_0 / math.sqrt(d)),
+            "ln_x": {"g": jnp.ones((d,), dt), "b": jnp.zeros((d,), dt)},
+        },
+        "cm": {
+            "mu_ck": mu(1.0), "mu_cr": mu(1.0),
+            "w_ck": L.dense_init(ks[10], d, ff, dt),
+            "w_cv": L.dense_init(ks[11], ff, d, dt,
+                                 scale=ratio_1_to_0 / math.sqrt(ff)),
+            "w_cr": L.dense_init(jax.random.fold_in(key, 99), d, d, dt),
+        },
+    }
+
+
+def init(cfg, key) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.param_dtype)
+    kE, kB, kH = jax.random.split(key, 3)
+    fracs = jnp.linspace(0.0, 1.0, cfg.n_layers)
+    blocks = jax.vmap(lambda k, f: _block_init(cfg, k, f))(
+        jax.random.split(kB, cfg.n_layers), fracs)
+    return {
+        "embed": L.embed_init(kE, cfg.vocab_size, cfg.d_model, dt),
+        "ln0": {"g": jnp.ones((cfg.d_model,), dt),
+                "b": jnp.zeros((cfg.d_model,), dt)},
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": L.dense_init(kH, cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+# --------------------------------------------------------------------------- #
+#  WKV recurrence
+# --------------------------------------------------------------------------- #
+def wkv6_scan(r, k, v, w, u, state):
+    """Sequential oracle / decode path.
+
+    r,k,v: (B,T,H,hd); w: (B,T,H,hd) decay multiplier in (0,1);
+    u: (H,hd) bonus; state: (B,H,hd,hd) f32 (k-dim rows, v-dim cols).
+    Returns (y (B,T,H,hd), final state).
+    """
+    B, T, H, hd = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inputs):
+        rt, kt, vt, wt = inputs                        # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]       # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + uf[:, :, None] * kv)
+        S = S * wt[..., :, None] + kv
+        return S, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (rf, kf, vf, wf))
+    state, ys = lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), state
+
+
+def wkv6_chunked(r, k, v, w, u, state, chunk: int = 0):
+    """Chunk-parallel WKV (exact; all exponents <= 0 so no overflow).
+
+    Per chunk of length C, with a_t = cumsum(log w) inclusive:
+      y_t   = (r_t*exp(a_{t-1})) @ S0 + sum_{s<t} A_ts v_s + (r_t·u·k_t) v_t
+      A_ts  = sum_i r_ti k_si exp(a_{t-1,i} - a_si)
+      S_out = exp(a_C)*S0 + sum_s (k_s exp(a_C - a_s))^T v_s
+    """
+    B, T, H, hd = r.shape
+    chunk = chunk or WKV_CHUNK             # module knob read at call time
+    assert T % chunk == 0, (T, chunk)
+    n = T // chunk
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    logw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-38))
+    uf = u.astype(jnp.float32)
+
+    def reshape_c(t):
+        return t.reshape(B, n, chunk, H, hd).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, lwc = (reshape_c(t) for t in (rf, kf, vf, logw))
+    # (n, B, H, C, hd)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+
+    def chunk_step(S, inputs):                         # noqa: ANN001
+        rr, kk, vv, lw = inputs                        # (B,H,C,hd)
+        a = jnp.cumsum(lw, axis=2)                     # inclusive
+        a_prev = a - lw                                # exclusive (a_{t-1})
+        a_end = a[:, :, -1:, :]                        # (B,H,1,hd)
+        re = rr * jnp.exp(a_prev)
+        y_inter = jnp.einsum("bhti,bhij->bhtj", re, S)
+        # pairwise intra-chunk decay matrix; valid (t>s) exponents are <=0,
+        # clamping kills inf*0=NaN on the causally-masked cells
+        E = jnp.exp(jnp.minimum(
+            a_prev[:, :, :, None, :] - a[:, :, None, :, :], 0.0))
+        A = jnp.einsum("bhti,bhsi,bhtsi->bhts", rr, kk, E)
+        A = A * causal[None, None]
+        y_intra = jnp.einsum("bhts,bhsj->bhtj", A, vv)
+        bonus = jnp.einsum("bhti,bhti->bht", rr * uf[None, :, None, :], kk)
+        y = y_inter + y_intra + bonus[..., None] * vv
+        k_out = kk * jnp.exp(a_end - a)
+        S = S * jnp.exp(a_end.squeeze(2))[..., :, None] + \
+            jnp.einsum("bhsi,bhsj->bhij", k_out, vv)
+        return S, y
+
+    step = jax.checkpoint(chunk_step) if WKV_CHUNK_REMAT else chunk_step
+    state, ys = lax.scan(step, state, (rc, kc, vc, lwc))
+    # (n,B,H,C,hd) -> (B,T,H,hd)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, T, H, hd)
+    return y.astype(r.dtype), state
+
+
+def wkv6(r, k, v, w, u, state, use_kernel: bool = True):
+    if use_kernel and q.current_impl() == "pallas":
+        from repro.kernels.wkv6 import ops as wkv_ops
+        return wkv_ops.wkv6(r, k, v, w, u, state)
+    T = r.shape[1]
+    if T > 1 and T % WKV_CHUNK == 0:
+        return wkv6_chunked(r, k, v, w, u, state)
+    return wkv6_scan(r, k, v, w, u, state)
+
+
+# --------------------------------------------------------------------------- #
+#  Mixing blocks
+# --------------------------------------------------------------------------- #
+def _ddlerp(tm, x, x_prev):
+    """Data-dependent token-shift interpolation (Finch)."""
+    dx = x_prev - x
+    xxx = x + q.emul(dx, tm["mu_x"])
+    lo = jnp.tanh(q.matmul(xxx, tm["lora_maa_A"]))
+    B_, S_, _ = lo.shape
+    lo = lo.reshape(B_, S_, 5, TM_LORA)
+    deltas = jnp.einsum("bsfr,frd->bsfd", lo,
+                        q.dequant(tm["lora_maa_B"]).astype(lo.dtype)
+                        if q.is_quantized(tm["lora_maa_B"])
+                        else tm["lora_maa_B"].astype(lo.dtype))
+    outs = []
+    for j, name in enumerate(("mu_w", "mu_k", "mu_v", "mu_r", "mu_g")):
+        mu_j = tm[name]
+        muv = q.dequant(mu_j).reshape(-1) if q.is_quantized(mu_j) else mu_j
+        outs.append(x + dx * (muv + deltas[:, :, j]).astype(x.dtype))
+    return outs
+
+
+def time_mix(cfg, tm, x, x_prev, state):
+    """x: (B,S,d) post-ln; x_prev: shifted x; state: (B,H,hd,hd).
+
+    TP plan (H is rarely divisible by the model axis, so the WKV itself
+    runs data-parallel only): r/k/v/g are column-parallel matmuls whose
+    outputs are explicitly gathered to (dp,·,·); w_o is row-parallel.
+    Without these constraints GSPMD falls back to replicating the d×d
+    projections (16x wasted FLOPs — see EXPERIMENTS.md §Perf)."""
+    B, S, d = x.shape
+    H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    xw, xk, xv, xr, xg = _ddlerp(tm, x, x_prev)
+
+    def proj(xin, wname):
+        y = q.matmul(xin, tm[wname])                    # col-parallel
+        if not TP_CONSTRAINTS:
+            return y
+        y = constrain(y, "dp", None, "tp")              # sharded compute
+        return constrain(y, "dp", None, None)           # then gather
+
+    r = proj(xr, "w_r").reshape(B, S, H, hd)
+    k = proj(xk, "w_k").reshape(B, S, H, hd)
+    v = proj(xv, "w_v").reshape(B, S, H, hd)
+    g = jax.nn.silu(proj(xg, "w_g"))
+
+    decay_base = q.dequant(tm["decay_w"]).reshape(-1) \
+        if q.is_quantized(tm["decay_w"]) else tm["decay_w"]
+    dlo = q.matmul(jnp.tanh(q.matmul(xw, tm["lora_decay_A"])),
+                   tm["lora_decay_B"])
+    wlog = -jnp.exp(jnp.clip(
+        decay_base.astype(jnp.float32) + dlo.astype(jnp.float32),
+        -8.0, 6.0))                                     # log decay <= 0
+    w = jnp.exp(wlog).reshape(B, S, H, hd)
+    if TP_CONSTRAINTS:
+        w = constrain(w, "dp", None, None, None)
+
+    u = q.dequant(tm["bonus"]) if q.is_quantized(tm["bonus"]) else tm["bonus"]
+    y, new_state = wkv6(r, k, v, w, u.reshape(H, hd), state)
+    y = y.reshape(B, S, d)
+    y = L.group_norm(y, tm["ln_x"]["g"], tm["ln_x"]["b"], H, 64e-5)
+    yg = y * g
+    if TP_CONSTRAINTS:
+        yg = constrain(yg, "dp", None, "tp")            # shard for row-par
+    return q.matmul(yg, tm["w_o"]), new_state
+
+
+def channel_mix(cfg, cm, x, x_prev):
+    """Megatron pattern: w_ck column-parallel, w_cv row-parallel."""
+    dx = x_prev - x
+    xk = x + q.emul(dx, cm["mu_ck"])
+    xr = x + q.emul(dx, cm["mu_cr"])
+    if not TP_CONSTRAINTS:
+        kk = jnp.square(jax.nn.relu(q.matmul(xk, cm["w_ck"])))
+        return jax.nn.sigmoid(q.matmul(xr, cm["w_cr"])) \
+            * q.matmul(kk, cm["w_cv"])
+    kk = jnp.square(jax.nn.relu(
+        constrain(q.matmul(xk, cm["w_ck"]), "dp", None, "tp")))
+    v = constrain(q.matmul(kk, cm["w_cv"]), "dp", None, None)
+    r = constrain(q.matmul(xr, cm["w_cr"]), "dp", None, "tp")
+    r = constrain(r, "dp", None, None)
+    return jax.nn.sigmoid(r) * v
+
+
+def _shift(x):
+    """Token shift: x_prev[t] = x[t-1], zeros at t=0."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _block_apply(cfg, blk, x, state=None, shifts=None):
+    """state: (B,H,hd,hd) or zeros; shifts: (tm_last, cm_last) (B,d) or None."""
+    B, S, d = x.shape
+    H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    xn = L.layer_norm(x, blk["ln1"]["g"], blk["ln1"]["b"], cfg.norm_eps)
+    if shifts is None:
+        x_prev = _shift(xn)
+        tm_last = xn[:, -1]
+    else:
+        x_prev = jnp.concatenate([shifts[0][:, None], xn[:, :-1]], axis=1)
+        tm_last = xn[:, -1]
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    h, new_state = time_mix(cfg, blk["tm"], xn, x_prev, state)
+    x = x + h
+
+    xn2 = L.layer_norm(x, blk["ln2"]["g"], blk["ln2"]["b"], cfg.norm_eps)
+    if shifts is None:
+        x_prev2 = _shift(xn2)
+        cm_last = xn2[:, -1]
+    else:
+        x_prev2 = jnp.concatenate([shifts[1][:, None], xn2[:, :-1]], axis=1)
+        cm_last = xn2[:, -1]
+    x = x + channel_mix(cfg, blk["cm"], xn2, x_prev2)
+    return x, new_state, (tm_last, cm_last)
+
+
+# --------------------------------------------------------------------------- #
+#  Public API (same surface as models.transformer)
+# --------------------------------------------------------------------------- #
+def forward(cfg, params, batch) -> Tuple[jax.Array, jax.Array]:
+    x = _embed(cfg, params, batch)
+    x = constrain(x, "dp", None, None)
+
+    def body(x, blk):
+        y, _, _ = _block_apply(cfg, blk, x)
+        return constrain(y, "dp", None, None), None
+
+    fn = body
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
+    x, _ = lax.scan(fn, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.float32(0.0)
+
+
+def _embed(cfg, params, batch):
+    if "embeds" in batch:
+        x = batch["embeds"].astype(jnp.dtype(cfg.compute_dtype))
+    else:
+        emb = q.dequant(params["embed"]) if q.is_quantized(params["embed"]) \
+            else params["embed"]
+        x = jnp.take(emb, batch["tokens"], axis=0).astype(
+            jnp.dtype(cfg.compute_dtype))
+    return L.layer_norm(x, params["ln0"]["g"], params["ln0"]["b"],
+                        cfg.norm_eps)
+
+
+def logits(cfg, params, hidden) -> jax.Array:
+    return constrain(q.matmul(hidden, params["lm_head"]), "dp", None, "tp")
+
+
+def init_cache(cfg, batch_size: int, max_len: int) -> Dict[str, Any]:
+    """RWKV cache is O(1) in sequence length: per-layer state + shift."""
+    H, hd, d, Lc = cfg.rwkv_n_heads, cfg.rwkv_head_dim, cfg.d_model, cfg.n_layers
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "state": jnp.zeros((Lc, batch_size, H, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((Lc, batch_size, d), dt),
+        "shift_cm": jnp.zeros((Lc, batch_size, d), dt),
+        "index": jnp.int32(0),
+    }
+
+
+def _cached_stack(cfg, params, cache, x):
+    def body(x, scanned):
+        blk, st, s_tm, s_cm = scanned
+        y, new_st, (tm_last, cm_last) = _block_apply(
+            cfg, blk, x, state=st, shifts=(s_tm, s_cm))
+        return y, (new_st, tm_last.astype(s_tm.dtype),
+                   cm_last.astype(s_cm.dtype))
+
+    x, (st, s_tm, s_cm) = lax.scan(
+        body, x, (params["blocks"], cache["state"],
+                  cache["shift_tm"], cache["shift_cm"]))
+    new_cache = dict(cache, state=st, shift_tm=s_tm, shift_cm=s_cm)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache
+
+
+def prefill(cfg, params, batch, cache) -> Tuple[jax.Array, Dict]:
+    x = _embed(cfg, params, batch)
+    x = constrain(x, "dp", None, None)
+    h, new_cache = _cached_stack(cfg, params, cache, x)
+    new_cache["index"] = jnp.int32(x.shape[1])
+    return logits(cfg, params, h[:, -1:, :])[:, 0, :], new_cache
+
+
+def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:
+    x = _embed(cfg, params, {"tokens": tokens})
+    x = constrain(x, "dp", None, None)
+    h, new_cache = _cached_stack(cfg, params, cache, x)
+    new_cache["index"] = cache["index"] + 1
+    return logits(cfg, params, h[:, 0:1, :])[:, 0, :], new_cache

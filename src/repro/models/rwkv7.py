@@ -1,0 +1,296 @@
+"""RWKV-7 "Goose": delta-rule state evolution with in-context learning rate.
+
+Used for the paper-fidelity quality benchmarks (RWKV7-0.1B/0.5B/1.5B in
+Tables 2/9).  State update (per head, state S with v-rows / k-cols):
+
+    S_t = S_{t-1} (diag(w_t) + a_t^T b_t) + v_t^T k_t
+    y_t = S_t r_t
+    a_t = -kappa_hat_t,  b_t = kappa_hat_t * iclr_t
+
+Sequential scan only: the chunked/kernel fast path targets RWKV-6 (the
+assigned arch); RWKV-7 runs at <=1.5B in quality benchmarks.  See
+``repro.kernels.wkv7`` for the Pallas decode kernel.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import quantized as q
+from repro.models import layers as L
+from repro.models.sharding import constrain
+
+DECAY_LORA = 64
+ICLR_LORA = 64
+V_LORA = 32
+GATE_LORA = 128
+
+
+def _block_init(cfg, key, frac: float):
+    d, ff = cfg.d_model, cfg.d_ff
+    H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 16)
+    ch = jnp.arange(d) / d
+    mu = lambda p: (1.0 - ch ** p).astype(dt)
+    lr = lambda k, i, o, s=1e-2: (jax.random.normal(k, (i, o)) * s).astype(dt)
+
+    return {
+        "ln1": {"g": jnp.ones((d,), dt), "b": jnp.zeros((d,), dt)},
+        "ln2": {"g": jnp.ones((d,), dt), "b": jnp.zeros((d,), dt)},
+        "tm": {
+            "mu_r": mu(0.5), "mu_w": mu(0.9), "mu_k": mu(0.7),
+            "mu_v": mu(0.6), "mu_a": mu(0.4), "mu_g": mu(0.8),
+            "decay_w": (-6.0 + 5.0 * (ch ** (0.85 + 1.0 * frac))).astype(dt),
+            "lora_decay_A": lr(ks[0], d, DECAY_LORA),
+            "lora_decay_B": lr(ks[1], DECAY_LORA, d),
+            "iclr_base": jnp.full((d,), -0.5, dt),
+            "lora_iclr_A": lr(ks[2], d, ICLR_LORA),
+            "lora_iclr_B": lr(ks[3], ICLR_LORA, d),
+            "v_base": jnp.full((d,), 0.5, dt),
+            "lora_v_A": lr(ks[4], d, V_LORA),
+            "lora_v_B": lr(ks[5], V_LORA, d),
+            "lora_gate_A": lr(ks[6], d, GATE_LORA),
+            "lora_gate_B": lr(ks[7], GATE_LORA, d, 1e-1),
+            "kappa_k": jnp.ones((d,), dt),
+            "adapt_k": jnp.full((d,), 0.5, dt),
+            "bonus_rk": (jax.random.normal(ks[8], (H, hd)) * 0.05).astype(dt),
+            "w_r": L.dense_init(ks[9], d, d, dt),
+            "w_k": L.dense_init(ks[10], d, d, dt),
+            "w_v": L.dense_init(ks[11], d, d, dt),
+            "w_o": L.dense_init(ks[12], d, d, dt,
+                                scale=(1 - frac) / math.sqrt(d)),
+            "ln_x": {"g": jnp.ones((d,), dt), "b": jnp.zeros((d,), dt)},
+        },
+        "cm": {
+            "mu_ck": mu(1.0),
+            "w_ck": L.dense_init(ks[13], d, ff, dt),
+            "w_cv": L.dense_init(ks[14], ff, d, dt,
+                                 scale=(1 - frac) / math.sqrt(ff)),
+        },
+    }
+
+
+def init(cfg, key) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.param_dtype)
+    kE, kB, kH = jax.random.split(key, 3)
+    fracs = jnp.linspace(0.0, 1.0, cfg.n_layers)
+    blocks = jax.vmap(lambda k, f: _block_init(cfg, k, f))(
+        jax.random.split(kB, cfg.n_layers), fracs)
+    return {
+        "embed": L.embed_init(kE, cfg.vocab_size, cfg.d_model, dt),
+        "ln0": {"g": jnp.ones((cfg.d_model,), dt),
+                "b": jnp.zeros((cfg.d_model,), dt)},
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": L.dense_init(kH, cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+# --------------------------------------------------------------------------- #
+#  WKV7 recurrence
+# --------------------------------------------------------------------------- #
+def wkv7_scan(r, w, k, v, a, b, state):
+    """r,w,k,v,a,b: (B,T,H,hd); state: (B,H,hd_v,hd_k) f32."""
+    fs = tuple(t.astype(jnp.float32).transpose(1, 0, 2, 3)
+               for t in (r, w, k, v, a, b))
+
+    def step(S, inp):
+        rt, wt, kt, vt, at, bt = inp                   # (B,H,hd)
+        sa = jnp.einsum("bhvk,bhk->bhv", S, at)        # S a^T
+        S = S * wt[..., None, :] + sa[..., :, None] * bt[..., None, :] \
+            + vt[..., :, None] * kt[..., None, :]
+        y = jnp.einsum("bhvk,bhk->bhv", S, rt)
+        return S, y
+
+    state, ys = lax.scan(step, state, fs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), state
+
+
+def _lora(x, base, A, B, act=jnp.tanh):
+    h = q.matmul(x, A)
+    if act is not None:
+        h = act(h)
+    out = q.matmul(h, B)
+    bb = q.dequant(base).reshape(-1) if q.is_quantized(base) else base
+    return out + bb.astype(out.dtype)
+
+
+def _l2norm_heads(x, H, hd):
+    shp = x.shape
+    xh = x.reshape(shp[:-1] + (H, hd)).astype(jnp.float32)
+    xh = xh / jnp.sqrt(jnp.sum(xh * xh, -1, keepdims=True) + 1e-12)
+    return xh.reshape(shp).astype(x.dtype)
+
+
+def time_mix(cfg, tm, x, x_prev, state, v_first, layer_is_first):
+    B, S, d = x.shape
+    H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    dx = x_prev - x
+    xr = x + q.emul(dx, tm["mu_r"])
+    xw = x + q.emul(dx, tm["mu_w"])
+    xk = x + q.emul(dx, tm["mu_k"])
+    xv = x + q.emul(dx, tm["mu_v"])
+    xa = x + q.emul(dx, tm["mu_a"])
+    xg = x + q.emul(dx, tm["mu_g"])
+
+    r = q.matmul(xr, tm["w_r"])
+    k = q.matmul(xk, tm["w_k"])
+    v = q.matmul(xv, tm["w_v"])
+
+    # decay: log-decay in (-inf, -0.02], computed in f32
+    dl = _lora(xw, tm["decay_w"], tm["lora_decay_A"], tm["lora_decay_B"])
+    logw = -0.606531 * jax.nn.sigmoid(dl.astype(jnp.float32)) - 0.02
+    w = jnp.exp(logw)
+
+    iclr = jax.nn.sigmoid(_lora(xa, tm["iclr_base"], tm["lora_iclr_A"],
+                                tm["lora_iclr_B"], act=None)
+                          .astype(jnp.float32)).astype(x.dtype)
+    g = jax.nn.sigmoid(q.matmul(xg, tm["lora_gate_A"]))
+    g = q.matmul(g, tm["lora_gate_B"])
+
+    # v residual mixing with the first layer's value stream
+    vmix = jax.nn.sigmoid(_lora(xv, tm["v_base"], tm["lora_v_A"],
+                                tm["lora_v_B"], act=None))
+    v_first_new = jnp.where(layer_is_first, v, v_first)
+    v = jnp.where(layer_is_first, v,
+                  v + (v_first_new - v) * vmix)
+
+    kappa = q.emul(k, tm["kappa_k"])
+    kappa_hat = _l2norm_heads(kappa, H, hd)
+    adapt = q.dequant(tm["adapt_k"]).reshape(-1) \
+        if q.is_quantized(tm["adapt_k"]) else tm["adapt_k"]
+    k = k * (1.0 + (iclr - 1.0) * adapt.astype(x.dtype))
+
+    shape4 = (B, S, H, hd)
+    a4 = (-kappa_hat).reshape(shape4)
+    b4 = (kappa_hat * iclr).reshape(shape4)
+    y, new_state = wkv7_scan(r.reshape(shape4), w.reshape(shape4),
+                             k.reshape(shape4), v.reshape(shape4),
+                             a4, b4, state)
+    y = y.reshape(B, S, d)
+    y = L.group_norm(y, tm["ln_x"]["g"], tm["ln_x"]["b"], H, 64e-5)
+    rk = q.dequant(tm["bonus_rk"]) if q.is_quantized(tm["bonus_rk"]) \
+        else tm["bonus_rk"]
+    corr = jnp.sum(r.reshape(shape4) * k.reshape(shape4)
+                   * rk.reshape(1, 1, H, hd), axis=-1, keepdims=True)
+    y = y + (corr * v.reshape(shape4)).reshape(B, S, d)
+    return q.matmul(y * g, tm["w_o"]), new_state, v_first_new
+
+
+def channel_mix(cfg, cm, x, x_prev):
+    xk = x + q.emul(x_prev - x, cm["mu_ck"])
+    kk = jnp.square(jax.nn.relu(q.matmul(xk, cm["w_ck"])))
+    return q.matmul(kk, cm["w_cv"])
+
+
+def _shift(x):
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _block_apply(cfg, blk, x, v_first, layer_is_first, state=None,
+                 shifts=None):
+    B, S, d = x.shape
+    H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    xn = L.layer_norm(x, blk["ln1"]["g"], blk["ln1"]["b"], cfg.norm_eps)
+    x_prev = _shift(xn) if shifts is None else \
+        jnp.concatenate([shifts[0][:, None], xn[:, :-1]], axis=1)
+    tm_last = xn[:, -1]
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    h, new_state, v_first = time_mix(cfg, blk["tm"], xn, x_prev, state,
+                                     v_first, layer_is_first)
+    x = x + h
+    xn2 = L.layer_norm(x, blk["ln2"]["g"], blk["ln2"]["b"], cfg.norm_eps)
+    x_prev2 = _shift(xn2) if shifts is None else \
+        jnp.concatenate([shifts[1][:, None], xn2[:, :-1]], axis=1)
+    cm_last = xn2[:, -1]
+    x = x + channel_mix(cfg, blk["cm"], xn2, x_prev2)
+    return x, new_state, v_first, (tm_last, cm_last)
+
+
+# --------------------------------------------------------------------------- #
+#  Public API
+# --------------------------------------------------------------------------- #
+def _embed(cfg, params, batch):
+    if "embeds" in batch:
+        x = batch["embeds"].astype(jnp.dtype(cfg.compute_dtype))
+    else:
+        emb = q.dequant(params["embed"]) if q.is_quantized(params["embed"]) \
+            else params["embed"]
+        x = jnp.take(emb, batch["tokens"], axis=0).astype(
+            jnp.dtype(cfg.compute_dtype))
+    return L.layer_norm(x, params["ln0"]["g"], params["ln0"]["b"],
+                        cfg.norm_eps)
+
+
+def forward(cfg, params, batch) -> Tuple[jax.Array, jax.Array]:
+    x = _embed(cfg, params, batch)
+    x = constrain(x, "dp", None, None)
+    B, S, d = x.shape
+    v0 = jnp.zeros((B, S, d), x.dtype)
+
+    def body(carry, scanned):
+        x, v_first = carry
+        blk, idx = scanned
+        y, _, v_first, _ = _block_apply(cfg, blk, x, v_first, idx == 0)
+        return (constrain(y, "dp", None, None), v_first), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    (x, _), _ = lax.scan(fn, (x, v0),
+                         (params["blocks"], jnp.arange(cfg.n_layers)))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.float32(0.0)
+
+
+def logits(cfg, params, hidden) -> jax.Array:
+    return constrain(q.matmul(hidden, params["lm_head"]), "dp", None, "tp")
+
+
+def init_cache(cfg, batch_size: int, max_len: int) -> Dict[str, Any]:
+    H, hd, d, Lc = cfg.rwkv_n_heads, cfg.rwkv_head_dim, cfg.d_model, cfg.n_layers
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "state": jnp.zeros((Lc, batch_size, H, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((Lc, batch_size, d), dt),
+        "shift_cm": jnp.zeros((Lc, batch_size, d), dt),
+        "index": jnp.int32(0),
+    }
+
+
+def _cached_stack(cfg, params, cache, x):
+    B, S, d = x.shape
+    v0 = jnp.zeros((B, S, d), x.dtype)
+
+    def body(carry, scanned):
+        x, v_first = carry
+        blk, idx, st, s_tm, s_cm = scanned
+        y, new_st, v_first, (tm_last, cm_last) = _block_apply(
+            cfg, blk, x, v_first, idx == 0, state=st, shifts=(s_tm, s_cm))
+        return (y, v_first), (new_st, tm_last.astype(s_tm.dtype),
+                              cm_last.astype(s_cm.dtype))
+
+    (x, _), (st, s_tm, s_cm) = lax.scan(
+        body, (x, v0), (params["blocks"], jnp.arange(cfg.n_layers),
+                        cache["state"], cache["shift_tm"], cache["shift_cm"]))
+    new_cache = dict(cache, state=st, shift_tm=s_tm, shift_cm=s_cm)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache
+
+
+def prefill(cfg, params, batch, cache) -> Tuple[jax.Array, Dict]:
+    x = _embed(cfg, params, batch)
+    h, new_cache = _cached_stack(cfg, params, cache, x)
+    new_cache["index"] = jnp.int32(x.shape[1])
+    return logits(cfg, params, h[:, -1:, :])[:, 0, :], new_cache
+
+
+def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:
+    x = _embed(cfg, params, {"tokens": tokens})
+    h, new_cache = _cached_stack(cfg, params, cache, x)
+    new_cache["index"] = cache["index"] + 1
+    return logits(cfg, params, h[:, 0:1, :])[:, 0, :], new_cache

@@ -1,0 +1,241 @@
+"""Sharding rules: logical axes -> mesh axes, and the param-spec builder.
+
+Logical axes used across the codebase:
+  "dp"  — batch/data parallel  -> ("pod", "data") or ("data",)
+  "tp"  — tensor parallel      -> ("model",)
+  "sp"  — sequence parallel    -> ("data",)  (long-context decode)
+
+``set_axis_map`` is called by launch/mesh.py; with no mesh active every
+constraint is a no-op so the same model code runs in CPU unit tests.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import quantized as qz
+
+_AXIS_MAP: Dict[str, Tuple[str, ...]] = {}
+_AXIS_SIZES: Dict[str, int] = {}
+
+
+def set_axis_map(mapping: Dict[str, Tuple[str, ...]],
+                 sizes: Optional[Dict[str, int]] = None) -> None:
+    global _AXIS_MAP, _AXIS_SIZES
+    _AXIS_MAP = dict(mapping)
+    _AXIS_SIZES = dict(sizes or {})
+
+
+def axis_map() -> Dict[str, Tuple[str, ...]]:
+    return dict(_AXIS_MAP)
+
+
+def logical_size(name: str) -> int:
+    """Mesh size behind a logical axis (1 when no mesh is active)."""
+    return _AXIS_SIZES.get(name, 1)
+
+
+def resolve(*logical) -> P:
+    """Translate logical axis names into a PartitionSpec."""
+    out = []
+    for ax in logical:
+        if ax is None:
+            out.append(None)
+        else:
+            phys = _AXIS_MAP.get(ax, ())
+            if not phys:
+                out.append(None)
+            else:
+                out.append(phys if len(phys) > 1 else phys[0])
+    return P(*out)
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint that degrades to a no-op without a mesh."""
+    if not _AXIS_MAP:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, resolve(*logical))
+    except (ValueError, RuntimeError):
+        return x
+
+
+# --------------------------------------------------------------------------- #
+#  Param specs: path-pattern rules
+# --------------------------------------------------------------------------- #
+# rule: (regex on '/'.join(path), logical spec WITHOUT the stacked-layer axis)
+_RULES = [
+    # embeddings / output head: vocab on tp
+    (r"embed$",                 ("tp", None)),
+    (r"lm_head$",               (None, "tp")),
+    (r"pos_embed$",             (None, None)),
+    # attention
+    (r"w[qkv]$",                (None, "tp")),
+    (r"wo$",                    ("tp", None)),
+    # MLA
+    (r"w_d(q|kv)$",             (None, None)),   # low-rank down: replicated
+    (r"w_kr$",                  (None, None)),
+    (r"w_u[qkv]$",              (None, "tp")),
+    # FFN
+    (r"w_(gate|in)$",           (None, "tp")),
+    (r"w_out$",                 ("tp", None)),
+    # MoE: experts on tp (expert parallelism)
+    (r"router$",                (None, None)),
+    (r"we_(gate|in|out)$",      ("tp", None, None)),
+    # mamba
+    (r"in_proj$",               (None, "tp")),
+    (r"conv_w$",                ("tp", None)),
+    (r"conv_b$",                ("tp",)),
+    (r"x_proj$",                ("tp", None)),
+    (r"dt_proj$",               (None, "tp")),
+    (r"dt_bias$",               ("tp",)),
+    (r"A_log$",                 ("tp", None)),
+    (r"D$",                     ("tp",)),
+    (r"out_proj$",              ("tp", None)),
+    # rwkv time/channel mix: square projections column-sharded; the tiny
+    # lora adapters are REPLICATED: computing them TP-sharded saves ~0
+    # FLOPs but costs a (B,S,d) all-reduce in backward (§Perf iteration 3)
+    (r"w_(r|k|v|g|o1)$",        (None, "tp")),
+    (r"w_o$",                   ("tp", None)),
+    (r"(decay_w|bonus)$",       (None,)),
+    (r"lora_.*_[AB]$",          (None, None)),
+]
+
+
+def _spec_for(path: str, ndim: int, stacked: bool) -> P:
+    for pat, logical in _RULES:
+        if re.search(pat, path):
+            spec = list(logical)
+            break
+    else:
+        spec = [None] * (ndim - (1 if stacked else 0))
+    if stacked:
+        spec = [None] + list(spec)
+    # pad/truncate to ndim
+    spec = (list(spec) + [None] * ndim)[:ndim]
+    return resolve(*spec)
+
+
+def _leaf_spec(path_str: str, leaf, stacked: bool):
+    """Spec for one leaf; quantized containers get matching field specs.
+
+    Packed bit-planes carry extra leading dims ((L?, E?, bits, ic/32, oc));
+    only the trailing (ic, oc)-like dims inherit the weight's spec.
+    """
+    if isinstance(leaf, (qz.SQTensor, qz.VQTensor)):
+        wspec = _spec_for(path_str, 2, stacked=False)     # (ic, oc) logical
+
+        def field_spec(arr, follow_weight: bool):
+            nd = arr.ndim
+            if follow_weight:
+                lead = nd - 2
+                return P(*([None] * lead + list(wspec)))
+            return P(*([None] * nd))
+
+        if isinstance(leaf, qz.SQTensor):
+            return qz.SQTensor(packed=field_spec(leaf.packed, True),
+                               scales=field_spec(leaf.scales, True),
+                               biases=field_spec(leaf.biases, True),
+                               shape=leaf.shape, bits=leaf.bits,
+                               group=leaf.group)
+        return qz.VQTensor(packed=field_spec(leaf.packed, True),
+                           codebook=field_spec(leaf.codebook, False),
+                           shape=leaf.shape, d=leaf.d, k=leaf.k)
+    return _spec_for(path_str, getattr(leaf, "ndim", 0), stacked)
+
+
+def param_specs(params, stacked_prefixes: Tuple[str, ...] = ("blocks",)):
+    """Pytree of PartitionSpec matching ``params``.
+
+    Leaves under any ``stacked_prefixes`` subtree carry a leading layer axis
+    (from scan-stacking) that is never sharded.
+    """
+    def visit(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        path_str = "/".join(str(k) for k in keys)
+        stacked = any(str(keys[0]).startswith(pfx) for pfx in stacked_prefixes
+                      if keys) if keys else False
+        return _leaf_spec(path_str, leaf, stacked)
+
+    return jax.tree_util.tree_map_with_path(
+        visit, params, is_leaf=lambda x: qz.is_quantized(x))
+
+
+def named_sharding_tree(mesh, spec_tree):
+    return jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s),
+                        spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def fsdp_specs(param_tree, param_spec_tree, dp_axes=("data",),
+               dp_size: int = 16, min_numel: int = 1 << 16):
+    """ZeRO-3/FSDP: additionally shard big weights over the data axis.
+
+    GSPMD inserts the per-layer all-gather (forward) / reduce-scatter
+    (backward) automatically; required when params/TP exceeds HBM
+    (jamba-398B, deepseek-236B, llama4-scout on 16-way TP)."""
+    import numpy as _np
+
+    def one_arr(shape, spec):
+        if not shape or int(_np.prod(shape)) < min_numel:
+            return spec if isinstance(spec, P) else P(*([None] * len(shape)))
+        parts = list(spec) if isinstance(spec, P) else [None] * len(shape)
+        parts = (parts + [None] * len(shape))[:len(shape)]
+        best = None
+        for i, dim in enumerate(shape):
+            if parts[i] is None and dim % dp_size == 0 and dim >= dp_size:
+                if best is None or shape[i] > shape[best]:
+                    best = i
+        if best is not None:
+            parts[best] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        return P(*parts)
+
+    def one(leaf, spec):
+        if qz.is_quantized(leaf):
+            fields = jax.tree.leaves(leaf)
+            specs = jax.tree.leaves(spec,
+                                    is_leaf=lambda x: isinstance(x, P))
+            new = [one_arr(tuple(f.shape), s)
+                   for f, s in zip(fields, specs)]
+            return jax.tree.unflatten(
+                jax.tree.structure(spec,
+                                   is_leaf=lambda x: isinstance(x, P)), new)
+        return one_arr(tuple(getattr(leaf, "shape", ())), spec)
+
+    return jax.tree.map(one, param_tree, param_spec_tree,
+                        is_leaf=qz.is_quantized)
+
+
+def opt_state_specs(param_tree, param_spec_tree, dp_axes=("data",),
+                    dp_size: int = 16):
+    """ZeRO-1-style optimizer-state sharding.
+
+    Adam m/v are f32 (4 bytes/param); sharding them over the data axis on
+    the first divisible un-sharded dim keeps per-chip optimizer memory at
+    ~params/dp.  Falls back to the param's own spec when no dim divides.
+    """
+    def _uses_dp(parts) -> bool:
+        for e in parts:
+            axes = e if isinstance(e, tuple) else (e,)
+            if any(a in dp_axes for a in axes if a):
+                return True
+        return False
+
+    def one(leaf, spec):
+        shape = getattr(leaf, "shape", ())
+        parts = list(spec) if isinstance(spec, P) else [None] * len(shape)
+        parts = (parts + [None] * len(shape))[:len(shape)]
+        if _uses_dp(parts):                 # already dp-sharded (FSDP)
+            return P(*parts)
+        for i, dim in enumerate(shape):
+            if parts[i] is None and dim % dp_size == 0 and dim >= dp_size:
+                parts[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                break
+        return P(*parts)
+
+    return jax.tree.map(one, param_tree, param_spec_tree,
+                        is_leaf=qz.is_quantized)

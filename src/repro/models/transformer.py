@@ -1,0 +1,245 @@
+"""Generic decoder LM: dense GQA / MLA / MoE / VLM-embedding-input families.
+
+Layers are scan-stacked: every block param has a leading (n_layers,) axis
+(``first_k_dense`` heterogeneous layers are kept in a separately stacked
+prefix).  The same module serves llama3/yi/granite (dense GQA),
+minicpm3/deepseek-v2 (MLA), llama4-scout/deepseek-v2 (MoE) and
+llava-next (embedding inputs, patch frontend stubbed).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import quantized as q
+from repro.models import layers as L
+from repro.models.sharding import constrain
+
+
+# --------------------------------------------------------------------------- #
+#  Init
+# --------------------------------------------------------------------------- #
+def _block_init(cfg, key, is_moe: bool):
+    ks = jax.random.split(key, 2)
+    dt = jnp.dtype(cfg.param_dtype)
+    attn = L.mla_init(cfg, ks[0]) if cfg.use_mla else L.gqa_init(cfg, ks[0])
+    ffn = L.moe_init(cfg, ks[1]) if is_moe else L.swiglu_init(cfg, ks[1])
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "attn": attn,
+        "ffn_norm": jnp.ones((cfg.d_model,), dt),
+        "ffn": ffn,
+    }
+
+
+def _layer_kinds(cfg) -> Tuple[int, bool]:
+    """(n_prefix_dense_layers, main_stack_is_moe)."""
+    n_pre = cfg.first_k_dense if cfg.n_experts else 0
+    main_moe = cfg.is_moe_layer(n_pre) if cfg.n_experts else False
+    # sanity: layers past the prefix must be homogeneous for scan-stacking
+    for i in range(n_pre, cfg.n_layers):
+        assert cfg.is_moe_layer(i) == main_moe or cfg.moe_every > 1, cfg.name
+    return n_pre, main_moe
+
+
+def init(cfg, key) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.param_dtype)
+    k_embed, k_blocks, k_head, k_pre = jax.random.split(key, 4)
+    n_pre, main_moe = _layer_kinds(cfg)
+    n_main = cfg.n_layers - n_pre
+
+    if cfg.moe_every > 1:
+        # alternating dense/MoE (jamba-style FFN pattern is handled by
+        # models/hybrid.py; here moe_every>1 means interleave in pairs)
+        raise NotImplementedError("use models.hybrid for interleaved MoE")
+
+    blocks = jax.vmap(lambda k: _block_init(cfg, k, main_moe))(
+        jax.random.split(k_blocks, n_main))
+    params: Dict[str, Any] = {
+        "embed": L.embed_init(k_embed, cfg.vocab_size, cfg.d_model, dt),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if n_pre:
+        params["blocks_pre"] = jax.vmap(
+            lambda k: _block_init(cfg, k, False))(
+            jax.random.split(k_pre, n_pre))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(
+            k_head, cfg.d_model, cfg.vocab_size, dt)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+#  Block application
+# --------------------------------------------------------------------------- #
+def _block_apply(cfg, blk, x, positions, is_moe: bool):
+    h, _ = (L.mla_apply if cfg.use_mla else L.gqa_apply)(
+        cfg, blk["attn"], L.rms_norm(x, blk["attn_norm"], cfg.norm_eps),
+        positions)
+    x = x + h
+    y, aux = L.ffn_apply(cfg, blk["ffn"],
+                         L.rms_norm(x, blk["ffn_norm"], cfg.norm_eps), is_moe)
+    return x + y, aux
+
+
+def _block_apply_cached(cfg, blk, x, positions, kv, cache_index, is_moe):
+    xn = L.rms_norm(x, blk["attn_norm"], cfg.norm_eps)
+    if cfg.use_mla:
+        if x.shape[1] == 1:
+            h, new_kv = L.mla_decode_absorbed(
+                cfg, blk["attn"], xn, positions,
+                cache=kv, cache_index=cache_index)
+        else:
+            h, new_kv = L.mla_apply(cfg, blk["attn"], xn, positions,
+                                    cache=kv, cache_index=cache_index)
+    else:
+        h, new_kv = L.gqa_apply(cfg, blk["attn"], xn, positions,
+                                cache=kv, cache_index=cache_index)
+    x = x + h
+    y, aux = L.ffn_apply(cfg, blk["ffn"],
+                         L.rms_norm(x, blk["ffn_norm"], cfg.norm_eps), is_moe)
+    return x + y, new_kv, aux
+
+
+# --------------------------------------------------------------------------- #
+#  Full-sequence forward (train)
+# --------------------------------------------------------------------------- #
+def embed_inputs(cfg, params, batch) -> jax.Array:
+    """Token embedding, or precomputed embeddings for stub frontends."""
+    if "embeds" in batch:                      # vlm/audio stub: (B,S,d)
+        return batch["embeds"].astype(jnp.dtype(cfg.compute_dtype))
+    emb = q.dequant(params["embed"]) if q.is_quantized(params["embed"]) \
+        else params["embed"]
+    x = jnp.take(emb, batch["tokens"], axis=0)
+    return x.astype(jnp.dtype(cfg.compute_dtype))
+
+
+def forward(cfg, params, batch) -> Tuple[jax.Array, jax.Array]:
+    """Returns (final hidden states (B,S,d), aux loss)."""
+    x = embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = constrain(x, "dp", None, None)
+
+    n_pre, main_moe = _layer_kinds(cfg)
+
+    def body(carry, blk, is_moe):
+        x, aux = carry
+        y, a = _block_apply(cfg, blk, x, positions, is_moe)
+        y = constrain(y, "dp", None, None)
+        return (y, aux + a), None
+
+    if n_pre:
+        pre_body = partial(body, is_moe=False)
+        if cfg.remat:
+            pre_body = jax.checkpoint(pre_body)
+        (x, aux0), _ = lax.scan(pre_body, (x, jnp.float32(0.0)),
+                                params["blocks_pre"])
+    else:
+        aux0 = jnp.float32(0.0)
+
+    main_body = partial(body, is_moe=main_moe)
+    if cfg.remat:
+        main_body = jax.checkpoint(main_body)
+    (x, aux), _ = lax.scan(main_body, (x, aux0), params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def lm_head_weight(cfg, params):
+    if cfg.tie_embeddings:
+        emb = q.dequant(params["embed"]) if q.is_quantized(params["embed"]) \
+            else params["embed"]
+        return emb.T
+    return params["lm_head"]
+
+
+def logits(cfg, params, hidden) -> jax.Array:
+    w = lm_head_weight(cfg, params)
+    out = q.matmul(hidden, w)
+    return constrain(out, "dp", None, "tp")
+
+
+# --------------------------------------------------------------------------- #
+#  Serving: cache + prefill + decode
+# --------------------------------------------------------------------------- #
+def init_cache(cfg, batch_size: int, max_len: int) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.compute_dtype)
+    n_pre, _ = _layer_kinds(cfg)
+    n_main = cfg.n_layers - n_pre
+
+    def mk(n):
+        if cfg.use_mla:
+            return (jnp.zeros((n, batch_size, max_len, cfg.kv_lora_rank), dt),
+                    jnp.zeros((n, batch_size, max_len, cfg.qk_rope_head_dim),
+                              dt))
+        kvd = cfg.kv_heads * cfg.hd
+        return (jnp.zeros((n, batch_size, max_len, kvd), dt),
+                jnp.zeros((n, batch_size, max_len, kvd), dt))
+
+    cache = {"kv": mk(n_main), "index": jnp.int32(0)}
+    if n_pre:
+        cache["kv_pre"] = mk(n_pre)
+    return cache
+
+
+def _cached_stack(cfg, params, cache, x, positions, cache_index):
+    n_pre, main_moe = _layer_kinds(cfg)
+    aux_total = jnp.float32(0.0)
+    new_cache = dict(cache)
+
+    def run(blocks, kv_stack, is_moe):
+        def body(carry, scanned):
+            x, aux = carry
+            blk, kv = scanned
+            y, new_kv, a = _block_apply_cached(
+                cfg, blk, x, positions, kv, cache_index, is_moe)
+            return (y, aux + a), new_kv
+
+        (y, aux), new_kv = lax.scan(body, (x, jnp.float32(0.0)),
+                                    (blocks, kv_stack))
+        return y, new_kv, aux
+
+    if n_pre:
+        x, nkv, a = run(params["blocks_pre"], cache["kv_pre"], False)
+        new_cache["kv_pre"] = nkv
+        aux_total += a
+    x, nkv, a = run(params["blocks"], cache["kv"], main_moe)
+    new_cache["kv"] = nkv
+    aux_total += a
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache, aux_total
+
+
+def prefill(cfg, params, batch, cache) -> Tuple[jax.Array, Dict]:
+    """Run the prompt through the model, filling the cache.
+
+    Returns (last-position logits (B,V), cache)."""
+    x = embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = constrain(x, "dp", None, None)
+    h, new_cache, _ = _cached_stack(cfg, params, cache, x, positions,
+                                    cache["index"] * 0)
+    new_cache["index"] = jnp.int32(S)
+    return logits(cfg, params, h[:, -1:, :])[:, 0, :], new_cache
+
+
+def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:
+    """One decode step. tokens: (B, 1) int32. Returns ((B,V) logits, cache).
+
+    ``cache['index']`` may be a scalar (lock-step) or (B,) per-slot."""
+    batch = {"tokens": tokens}
+    x = embed_inputs(cfg, params, batch)
+    idx = jnp.asarray(cache["index"])
+    positions = idx[:, None] if idx.ndim else jnp.reshape(idx, (1, 1))
+    x = constrain(x, "dp", None, None)
+    h, new_cache, _ = _cached_stack(cfg, params, cache, x, positions,
+                                    cache["index"])
+    new_cache["index"] = cache["index"] + 1
+    return logits(cfg, params, h[:, 0:1, :])[:, 0, :], new_cache

@@ -1,0 +1,143 @@
+"""Batched serving engine over (quantized) weights.
+
+Continuous batching over a fixed slot pool: requests occupy slots, decode
+steps run the whole pool each tick, finished/empty slots are refilled from
+the queue.  Works with every registry architecture: attention archs carry
+per-slot KV caches, RWKV/Mamba archs carry O(1) state (the paper's
+deployment story: quantized weights + constant-memory state = edge-sized
+serving).
+
+Prefill of a new request runs batch-1 into a scratch cache, then the
+slot's cache lines are written in-place (dynamic_update_slice on the
+batch axis), so long-running slots are never recomputed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry as R
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                   # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0             # 0 -> greedy
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+def _slot_write(cache_tree, slot_tree, slot_idx: int):
+    """Write batch-1 `slot_tree` into `cache_tree` at batch position."""
+    def upd(c, s):
+        if c.ndim == 0 or c.shape == ():
+            return c
+        # find the batch axis: slot caches are batch-1 at the same axis
+        for ax in range(c.ndim):
+            if s.shape[ax] == 1 and c.shape[ax] != s.shape[ax]:
+                idx = [0] * c.ndim
+                idx[ax] = slot_idx
+                return jax.lax.dynamic_update_slice(c, s.astype(c.dtype),
+                                                    tuple(idx))
+        return c
+    return jax.tree.map(upd, cache_tree, slot_tree)
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 512,
+                 seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.max_len = n_slots, max_len
+        self.key = jax.random.PRNGKey(seed)
+        self.cache = R.init_cache(cfg, n_slots, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, np.int32)
+        self.queue: List[Request] = []
+        self._uid = 0
+
+        self._decode = jax.jit(
+            lambda p, c, t: R.decode_step(cfg, p, c, t))
+        self._prefill = jax.jit(
+            lambda p, b, c: R.prefill(cfg, p, b, c))
+
+    # ------------------------------------------------------------------ #
+    def submit(self, prompt, max_new_tokens: int = 32,
+               temperature: float = 0.0) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
+                                  max_new_tokens, temperature))
+        return self._uid
+
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            scratch = R.init_cache(self.cfg, 1, self.max_len)
+            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+            logits, scratch = self._prefill(self.params, batch, scratch)
+            tok = self._sample(logits, req.temperature)[0]
+            req.out_tokens.append(int(tok))
+            # splice the prefilled cache into the pool at `slot`
+            idx = {k: v for k, v in scratch.items() if k != "index"}
+            pool = {k: v for k, v in self.cache.items() if k != "index"}
+            pool = _slot_write(pool, idx, slot)
+            self.cache = dict(pool, index=self.cache["index"])
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = len(req.prompt)
+
+    def _sample(self, logits, temperature: float):
+        if temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(
+            sub, logits / temperature, axis=-1))
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> int:
+        """One engine tick: admit, decode one token for every live slot."""
+        self._admit()
+        live = [s for s in range(self.n_slots)
+                if self.slot_req[s] is not None]
+        if not live:
+            return 0
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for s in live:
+            toks[s, 0] = self.slot_req[s].out_tokens[-1]
+        # per-slot positions: each slot decodes at its own cache index
+        self.cache = dict(self.cache, index=jnp.asarray(self.slot_pos))
+        logits, self.cache = self._decode(self.params,
+                                          self.cache,
+                                          jnp.asarray(toks))
+        nxt = self._sample(logits, 0.0)
+        emitted = 0
+        for s in live:
+            req = self.slot_req[s]
+            req.out_tokens.append(int(nxt[s]))
+            self.slot_pos[s] += 1
+            emitted += 1
+            if len(req.out_tokens) >= req.max_new_tokens \
+                    or self.slot_pos[s] >= self.max_len - 1:
+                req.done = True
+                self.slot_req[s] = None
+        return emitted
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        seen: Dict[int, Request] = {}
+        for _ in range(max_ticks):
+            for s in range(self.n_slots):
+                r = self.slot_req[s]
+                if r is not None:
+                    seen[r.uid] = r
+            if self.step() == 0 and not self.queue:
+                break
+        finished = [r for r in seen.values() if r.done]
+        return finished

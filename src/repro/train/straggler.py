@@ -1,0 +1,83 @@
+"""Straggler detection & mitigation hooks (host-level).
+
+On real pods the signals come from per-host step heartbeats; the monitor
+is deliberately host-side and framework-agnostic:
+
+  * EWMA + variance of step wall-time; a step slower than
+    ``ewma + z * std`` is flagged.
+  * Consecutive flags above a threshold trigger a mitigation callback —
+    in production: reshuffle data shards away from the slow host, drop
+    the host from the next allocation (elastic restore handles the mesh
+    change), or lower its microbatch count.
+  * ``should_checkpoint_now`` turns persistent degradation into an early
+    checkpoint so a preemption loses nothing.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+
+@dataclass
+class StragglerConfig:
+    alpha: float = 0.1           # EWMA coefficient
+    z_threshold: float = 3.0     # flag at ewma + z*std
+    warmup_steps: int = 5
+    consecutive_for_action: int = 3
+
+
+class StragglerMonitor:
+    def __init__(self, cfg: StragglerConfig = StragglerConfig(),
+                 on_straggler: Optional[Callable[[int, float], None]] = None):
+        self.cfg = cfg
+        self.on_straggler = on_straggler
+        self.ewma: Optional[float] = None
+        self.ewvar: float = 0.0
+        self.n: int = 0
+        self.consecutive: int = 0
+        self.flagged_steps: List[int] = []
+        self._t0: Optional[float] = None
+
+    def start_step(self) -> None:
+        self._t0 = time.monotonic()
+
+    def end_step(self, step: int, duration: Optional[float] = None) -> bool:
+        """Returns True if this step was flagged as a straggler."""
+        if duration is None:
+            if self._t0 is None:
+                return False
+            duration = time.monotonic() - self._t0
+        self.n += 1
+        if self.ewma is None:
+            self.ewma = duration
+            return False
+        a = self.cfg.alpha
+        delta = duration - self.ewma
+        flagged = False
+        if self.n > self.cfg.warmup_steps:
+            std = math.sqrt(max(self.ewvar, 1e-12))
+            if duration > self.ewma + self.cfg.z_threshold * std \
+                    and duration > 1.05 * self.ewma:
+                flagged = True
+        # only fold non-flagged steps into the baseline
+        if not flagged:
+            self.ewma += a * delta
+            self.ewvar = (1 - a) * (self.ewvar + a * delta * delta)
+            self.consecutive = 0
+        else:
+            self.flagged_steps.append(step)
+            self.consecutive += 1
+            if (self.consecutive >= self.cfg.consecutive_for_action
+                    and self.on_straggler):
+                self.on_straggler(step, duration)
+                self.consecutive = 0
+        return flagged
+
+    def should_checkpoint_now(self) -> bool:
+        return self.consecutive >= self.cfg.consecutive_for_action
+
+    def summary(self) -> str:
+        return (f"steps={self.n} ewma={self.ewma or 0:.4f}s "
+                f"flagged={len(self.flagged_steps)}")

@@ -1,0 +1,122 @@
+"""Train step: chunked-vocab cross-entropy, microbatch accumulation,
+AdamW update.  Compatible with every architecture in the registry.
+
+The LM head is applied in sequence chunks inside a scan so the full
+(B, S, vocab) logits tensor is never materialized — required for the
+202k-vocab archs at 4k sequy length (llama4-scout: 13 GB/device saved).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import registry as R
+from repro.train.optimizer import (AdamWConfig, OptState, adamw_update,
+                                   init_opt_state)
+
+AUX_LOSS_WEIGHT = 0.01
+LOSS_CHUNK = 512
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    step: jax.Array
+
+
+def init_train_state(cfg, key) -> TrainState:
+    params = R.init_params(cfg, key)
+    return TrainState(params=params, opt=init_opt_state(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def lm_loss(cfg, params, hidden, labels, chunk: int = LOSS_CHUNK):
+    """Mean CE over (B,S) with the head applied in sequence chunks."""
+    B, S, d = hidden.shape
+
+    def ce_sum(h, y):
+        lg = R.model_logits(cfg, params, h).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, y[..., None], -1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    if S % chunk or S <= chunk:
+        return ce_sum(hidden, labels) / (B * S)
+    nc = S // chunk
+    hs = hidden.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    ys = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def body(tot, xy):
+        h, y = xy
+        return tot + ce_sum(h, y), None
+
+    tot, _ = lax.scan(body, jnp.float32(0.0), (hs, ys))
+    return tot / (B * S)
+
+
+def loss_fn(cfg, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    hidden, aux = R.forward(cfg, params, batch)
+    ce = lm_loss(cfg, params, hidden, batch["labels"])
+    loss = ce + AUX_LOSS_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def _microbatches(batch, n: int):
+    def split(x):
+        B = x.shape[0]
+        return x.reshape(n, B // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, n_microbatches: int = 1,
+                    grad_transform=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``grad_transform(grads)`` hook: gradient compression etc. is applied
+    before the optimizer update (see train/compression.py).
+    """
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(cfg, p, b), has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def accumulate(params, batch):
+        mbs = _microbatches(batch, n_microbatches)
+
+        def body(carry, mb):
+            tot_loss, tot_metrics, acc = carry
+            loss, metrics, grads = single(params, mb)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            tot_metrics = jax.tree.map(jnp.add, tot_metrics, metrics)
+            return (tot_loss + loss, tot_metrics, acc), None
+
+        zeros_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zeros_m = {"ce": jnp.float32(0.0), "aux": jnp.float32(0.0)}
+        (loss, metrics, grads), _ = lax.scan(
+            body, (jnp.float32(0.0), zeros_m, zeros_g), mbs)
+        inv = 1.0 / n_microbatches
+        return (loss * inv,
+                jax.tree.map(lambda x: x * inv, metrics),
+                jax.tree.map(lambda g: g * inv, grads))
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        if n_microbatches > 1:
+            loss, metrics, grads = accumulate(state.params, batch)
+        else:
+            loss, metrics, grads = single(state.params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, state.params, grads, state.opt)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,5 @@
+import os
+
+# Tests run on the single real CPU device; the dry-run test spawns its own
+# subprocess with --xla_force_host_platform_device_count (never set here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

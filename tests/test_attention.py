@@ -1,0 +1,74 @@
+"""Attention variants: plain vs blockwise vs balanced-causal equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import (_balanced_causal_attention,
+                                 _blockwise_attention, _plain_attention,
+                                 attention)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B=2, S=64, H=4, KV=2, hd=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (B, S, H, hd)),
+            jax.random.normal(ks[1], (B, S, KV, hd)),
+            jax.random.normal(ks[2], (B, S, KV, hd)))
+
+
+@pytest.mark.parametrize("block", [8, 16, 32])
+def test_balanced_causal_matches_plain(block):
+    qh, kh, vh = _qkv()
+    ref = _plain_attention(qh, kh, vh, causal=True)
+    out = _balanced_causal_attention(qh, kh, vh, block=block)
+    assert float(jnp.abs(out - ref).max()) < 1e-4
+
+
+@pytest.mark.parametrize("qb,kb", [(8, 16), (16, 16), (32, 8)])
+def test_blockwise_matches_plain(qb, kb):
+    qh, kh, vh = _qkv(S=64)
+    for causal in (True, False):
+        ref = _plain_attention(qh, kh, vh, causal=causal)
+        out = _blockwise_attention(qh, kh, vh, causal=causal,
+                                   q_block=qb, kv_block=kb)
+        assert float(jnp.abs(out - ref).max()) < 1e-4, (qb, kb, causal)
+
+
+def test_dispatch_uses_balanced_for_large_causal():
+    qh, kh, vh = _qkv(S=64)
+    ref = _plain_attention(qh, kh, vh, causal=True)
+    out = attention(qh, kh, vh, causal=True, block_threshold=64,
+                    q_block=16, kv_block=16)
+    assert float(jnp.abs(out - ref).max()) < 1e-4
+
+
+def test_mha_and_gqa_groups():
+    # H == KV (MHA) and H = 4*KV (GQA) both match a reference softmax
+    for H, KV in [(4, 4), (8, 2)]:
+        qh, kh, vh = _qkv(H=H, KV=KV, seed=3)
+        out = _plain_attention(qh, kh, vh, causal=True)
+        # dense reference
+        B, S, _, hd = qh.shape
+        k_full = jnp.repeat(kh, H // KV, axis=2)
+        v_full = jnp.repeat(vh, H // KV, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qh, k_full) / np.sqrt(hd)
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        ref = jnp.einsum("bhqk,bkhd->bqhd", p, v_full)
+        assert float(jnp.abs(out - ref).max()) < 1e-4, (H, KV)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100),
+       offset=st.integers(0, 8))
+def test_vector_offset_matches_scalar(seed, offset):
+    """Per-batch (B,) q_offset == scalar offset when all entries equal."""
+    qh, kh, vh = _qkv(B=2, S=16, seed=seed)
+    a = _plain_attention(qh[:, :1], kh, vh, causal=True, q_offset=offset)
+    b = _plain_attention(qh[:, :1], kh, vh, causal=True,
+                         q_offset=jnp.array([offset, offset]))
+    assert np.allclose(np.asarray(a), np.asarray(b), atol=1e-6)

@@ -1,0 +1,157 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sq.rtn import rtn_quantize
+from repro.core.vq.gptvq import kmeans_vq_quantize
+from repro.kernels.qmm import ops as qmm_ops
+from repro.kernels.qmm.kernel import qmm_pallas
+from repro.kernels.qmm.ref import qmm_ref
+from repro.kernels.vqmm.kernel import vqmm_pallas
+from repro.kernels.vqmm.ref import vqmm_ref
+from repro.kernels.wkv6.kernel import wkv6_pallas
+from repro.kernels.wkv6.ref import wkv6_ref
+from repro.kernels.wkv7.kernel import wkv7_pallas
+from repro.kernels.wkv7.ref import wkv7_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("bits,group", [(2, 32), (3, 64), (3, 128), (4, 64)])
+@pytest.mark.parametrize("M,K,N", [(128, 512, 256), (64, 256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qmm_sweep(bits, group, M, K, N, dtype):
+    rng = np.random.default_rng(bits + M)
+    w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+    sq = rtn_quantize(w, bits, group)
+    x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32)) \
+        .astype(dtype)
+    ref = qmm_ref(x, sq.packed, sq.scales, sq.biases, bits=bits,
+                  group=group, K=K, N=N)
+    out = qmm_pallas(x, sq.packed, sq.scales, sq.biases, bits=bits,
+                     group=group, K=K, N=N, bm=min(128, M),
+                     interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    rel = float(jnp.abs(out.astype(jnp.float32)
+                        - ref.astype(jnp.float32)).max()
+                / (jnp.abs(ref.astype(jnp.float32)).max() + 1e-9))
+    assert rel < tol, rel
+
+
+def test_qmm_ops_padding_and_fallback():
+    rng = np.random.default_rng(9)
+    w = jnp.asarray(rng.standard_normal((512, 128)).astype(np.float32))
+    sq = rtn_quantize(w, 3, 64)
+    # M=5 forces padding; leading dims flattened
+    x = jnp.asarray(rng.standard_normal((5, 512)).astype(np.float32))
+    y = qmm_ops.qmm(x, sq)
+    ref = x @ sq.dequant().astype(jnp.float32)
+    # kernel dequants in f32; XLA path rounds w to f16 -> small delta
+    assert np.allclose(np.asarray(y), np.asarray(ref), atol=5e-2)
+    # non-tileable (K=96) silently falls back to XLA dequant
+    w2 = jnp.asarray(rng.standard_normal((96, 128)).astype(np.float32))
+    sq2 = rtn_quantize(w2, 3, 32)
+    x2 = jnp.asarray(rng.standard_normal((4, 96)).astype(np.float32))
+    y2 = qmm_ops.qmm(x2, sq2)
+    assert np.allclose(np.asarray(y2),
+                       np.asarray(x2 @ sq2.dequant()), atol=1e-4)
+
+
+@pytest.mark.parametrize("d,k", [(2, 6), (2, 7), (4, 8)])
+@pytest.mark.parametrize("M,K,N", [(128, 512, 128), (32, 256, 256)])
+def test_vqmm_sweep(d, k, M, K, N):
+    rng = np.random.default_rng(d * 10 + k)
+    w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+    vq = kmeans_vq_quantize(w, d, k, KEY, 4)
+    x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+    cb = vq.codebook.astype(jnp.float32)
+    ref = vqmm_ref(x, vq.packed, cb, k=k, d=d, K=K, N=N)
+    out = vqmm_pallas(x, vq.packed, cb, k=k, d=d, K=K, N=N,
+                      bm=min(128, M), interpret=True)
+    rel = float(jnp.abs(out - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert rel < 1e-5, rel
+
+
+@pytest.mark.parametrize("T,ct", [(64, 32), (128, 64), (256, 64)])
+@pytest.mark.parametrize("hd", [32, 64])
+def test_wkv6_kernel_sweep(T, ct, hd):
+    BH = 4
+    ks = jax.random.split(jax.random.PRNGKey(T + hd), 6)
+    r, k, v = (jax.random.normal(ks[i], (BH, T, hd)) for i in range(3))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (BH, T, hd)) * 0.5))
+    u = jax.random.normal(ks[4], (BH, hd))
+    s0 = jax.random.normal(ks[5], (BH, hd, hd)) * 0.3
+    yr, sr = wkv6_ref(r, k, v, w, u, s0)
+    yp, sp = wkv6_pallas(r, k, v, w, u, s0, ct=ct, interpret=True)
+    assert float(jnp.abs(yr - yp).max()) < 2e-3
+    assert float(jnp.abs(sr - sp).max()) < 2e-3
+
+
+def test_wkv6_extreme_decay_stable():
+    """All exponents <= 0: no overflow even for near-zero decay."""
+    BH, T, hd = 2, 64, 32
+    ks = jax.random.split(KEY, 5)
+    r, k, v = (jax.random.normal(ks[i], (BH, T, hd)) for i in range(3))
+    w = jnp.full((BH, T, hd), 1e-30)          # decays almost to zero
+    u = jax.random.normal(ks[3], (BH, hd))
+    s0 = jnp.zeros((BH, hd, hd))
+    yp, sp = wkv6_pallas(r, k, v, w, u, s0, ct=32, interpret=True)
+    assert np.isfinite(np.asarray(yp)).all()
+    assert np.isfinite(np.asarray(sp)).all()
+
+
+@pytest.mark.parametrize("T,ct", [(64, 32), (128, 128)])
+def test_wkv7_kernel_sweep(T, ct):
+    BH, hd = 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(T), 7)
+    r, w_, k, v = (jax.random.normal(ks[i], (BH, T, hd)) * 0.5
+                   for i in range(4))
+    w = jnp.exp(-jnp.exp(w_))
+    kap = jax.random.normal(ks[4], (BH, T, hd))
+    kap = kap / jnp.linalg.norm(kap, axis=-1, keepdims=True)
+    eta = jax.nn.sigmoid(jax.random.normal(ks[5], (BH, T, hd)))
+    a, b = -kap, kap * eta
+    s0 = jax.random.normal(ks[6], (BH, hd, hd)) * 0.1
+    yr, sr = wkv7_ref(r, w, k, v, a, b, s0)
+    yp, sp = wkv7_pallas(r, w, k, v, a, b, s0, ct=ct, interpret=True)
+    assert float(jnp.abs(yr - yp).max()) < 2e-3
+    assert float(jnp.abs(sr - sp).max()) < 2e-3
+
+
+def test_model_chunked_wkv6_matches_scan():
+    from repro.models.rwkv6 import wkv6_chunked, wkv6_scan
+    B, T, H, hd = 2, 96, 3, 16
+    ks = jax.random.split(KEY, 6)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, hd)) for i in range(3))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, hd)) * 0.5))
+    u = jax.random.normal(ks[4], (H, hd))
+    s0 = jax.random.normal(ks[5], (B, H, hd, hd))
+    y1, s1 = wkv6_scan(r, k, v, w, u, s0)
+    y2, s2 = wkv6_chunked(r, k, v, w, u, s0, chunk=32)
+    assert float(jnp.abs(y1 - y2).max()) < 1e-3
+    assert float(jnp.abs(s1 - s2).max()) < 1e-3
+
+
+def test_pallas_impl_end_to_end():
+    """Quantized RWKV6 forward: pallas impl == xla impl."""
+    import dataclasses
+    from repro.configs import ARCHS, reduced
+    from repro.core import quantized as qz
+    from repro.core.hybrid import quantize_tree
+    from repro.core.policy import DATAFREE_3_275
+    from repro.models import registry as R
+
+    cfg = dataclasses.replace(
+        reduced(ARCHS["rwkv6-3b"]), n_layers=2, d_model=256, n_heads=8,
+        rwkv_head_dim=32, d_ff=512, vocab_size=512)
+    p = R.init_params(cfg, KEY)
+    qp, _ = quantize_tree(p, DATAFREE_3_275, KEY)
+    batch = R.make_inputs(cfg, "prefill", 2, 64, KEY)
+    with qz.use_impl("xla"):
+        h0, _ = R.forward(cfg, qp, batch)
+    with qz.use_impl("pallas"):
+        h1, _ = R.forward(cfg, qp, batch)
+    rel = float(jnp.abs(h0 - h1).max() / (jnp.abs(h0).max() + 1e-9))
+    assert rel < 5e-3, rel

@@ -1,0 +1,38 @@
+"""Bit-plane packing round-trips (unit + hypothesis property)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 5, 7, 8, 12])
+@pytest.mark.parametrize("n,cols", [(32, 4), (37, 5), (64, 1), (1, 3)])
+def test_roundtrip(bits, n, cols):
+    rng = np.random.default_rng(bits * 100 + n)
+    codes = rng.integers(0, 2 ** bits, (n, cols))
+    packed = packing.pack(jnp.asarray(codes), bits)
+    assert packed.dtype == jnp.uint32
+    assert packed.shape == (bits, -(-n // 32), cols)
+    out = packing.unpack(packed, bits, n)
+    assert np.array_equal(np.asarray(out), codes)
+
+
+def test_storage_exact_bits():
+    """Bit-planes store exactly b bits/code for 32-multiple lengths."""
+    for bits in (2, 3, 4, 6):
+        codes = np.zeros((256, 8), np.int32)
+        packed = packing.pack(jnp.asarray(codes), bits)
+        stored_bits = packed.size * 32
+        assert stored_bits == bits * codes.size
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(1, 12), n=st.integers(1, 100), cols=st.integers(1, 4),
+       seed=st.integers(0, 2 ** 16))
+def test_roundtrip_property(bits, n, cols, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 2 ** bits, (n, cols))
+    out = packing.unpack(packing.pack(jnp.asarray(codes), bits), bits, n)
+    assert np.array_equal(np.asarray(out), codes)

@@ -1,0 +1,105 @@
+"""Coarse/fine proxy behaviour (paper §3.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import proxy
+
+
+def _uniformish(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(np.sort(rng.uniform(-1, 1, n)) + 0.0)
+
+
+def _clustered(n, seed=0):
+    """Two tight clusters: very non-uniform intervals."""
+    rng = np.random.default_rng(seed)
+    half = n // 2
+    return jnp.asarray(np.concatenate([
+        rng.normal(-5, 1e-3, half), rng.normal(5, 1e-3, n - half)]))
+
+
+def _uniform_with_outliers(n, seed=0):
+    """Mild local outliers (paper Fig. 3b): ~10% past the bulk range."""
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(-1, 1, n)
+    w[:3] = [1.1, -1.1, 1.15]
+    return jnp.asarray(w)
+
+
+def test_pc_orders_uniform_vs_clustered():
+    pu = float(proxy.coarse_proxy(_uniformish(4096)))
+    pc = float(proxy.coarse_proxy(_clustered(4096)))
+    assert pu < pc, (pu, pc)
+
+
+def test_pc_near_zero_for_perfect_grid():
+    w = jnp.linspace(-1, 1, 4096)          # perfectly uniform intervals
+    assert float(proxy.coarse_proxy(w)) < 1e-3
+
+
+def test_pf_detects_outliers_pc_does_not():
+    """Fig. 3(b) scenario: uniform body + a few huge outliers."""
+    base = _uniformish(4096, 1)
+    out = _uniform_with_outliers(4096, 1)
+    pc_base = float(proxy.coarse_proxy(base))
+    pc_out = float(proxy.coarse_proxy(out))
+    pf_base = float(proxy.fine_proxy(base))
+    pf_out = float(proxy.fine_proxy(out))
+    # the outliers barely move P_c (entropy of the whole system) ...
+    assert pc_out < pc_base + 0.5
+    # ... but explode P_f (n^k-scaled central moments)
+    assert pf_out > pf_base * 1000
+
+
+def test_decision_rule_eq18():
+    assert proxy.decide(0.1, 1.0, tau_c=1.0, tau_f=10.0) == "sq"
+    assert proxy.decide(0.1, 50.0, tau_c=1.0, tau_f=10.0) == "vq"
+    assert proxy.decide(5.0, 1.0, tau_c=1.0, tau_f=10.0) == "vq"
+
+
+def test_threshold_calibration_hits_fraction():
+    rng = np.random.default_rng(0)
+    pcs = {f"w{i}": float(rng.uniform(0, 3)) for i in range(100)}
+    pfs = {f"w{i}": float(rng.uniform(0, 100)) for i in range(100)}
+    th = proxy.calibrate_thresholds(pcs, pfs, sq_fraction=0.9)
+    n_sq = sum(proxy.decide(pcs[k], pfs[k], th.tau_c, th.tau_f) == "sq"
+               for k in pcs)
+    assert 85 <= n_sq <= 92, n_sq
+
+
+def test_proxies_joint_matches_individual():
+    w = _uniform_with_outliers(2048, 3)
+    pc, pf = proxy.proxies(w)
+    assert np.isclose(float(pc), float(proxy.coarse_proxy(w)), rtol=1e-4)
+    assert np.isclose(float(pf), float(proxy.fine_proxy(w)), rtol=1e-4)
+
+
+def test_ablation_proxies_run_and_order():
+    uni, clu = _uniformish(2048), _clustered(2048)
+    for name, fn in proxy.ABLATION_PROXIES.items():
+        assert fn(uni) < fn(clu), name
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(0.1, 100.0),
+       shift=st.floats(-10.0, 10.0))
+def test_pc_affine_invariant(seed, scale, shift):
+    """G' is normalized, so P_c is invariant to w -> a*w + b (a>0)."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 1, 512))
+    p1 = float(proxy.coarse_proxy(w))
+    p2 = float(proxy.coarse_proxy(w * scale + shift))
+    assert np.isclose(p1, p2, rtol=5e-2, atol=5e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_pc_permutation_invariant(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 1, 512)
+    p1 = float(proxy.coarse_proxy(jnp.asarray(w)))
+    p2 = float(proxy.coarse_proxy(jnp.asarray(rng.permutation(w))))
+    assert np.isclose(p1, p2, rtol=1e-5, atol=1e-5)

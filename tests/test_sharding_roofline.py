@@ -1,0 +1,132 @@
+"""Sharding rules, spec sanitation, HLO cost parser, roofline math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import hlo_cost
+from repro.launch.roofline import (Roofline, model_flops_decode,
+                                   model_flops_train, parse_collectives)
+from repro.models import sharding as shd
+
+
+def test_param_specs_rules():
+    from repro.configs import ARCHS, reduced
+    from repro.models import registry as R
+    cfg = reduced(ARCHS["llama3-8b"], n_layers=2)
+    params = R.init_params(cfg, jax.random.PRNGKey(0))
+    shd.set_axis_map({"dp": ("data",), "tp": ("model",)})
+    try:
+        specs = shd.param_specs(params)
+        flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+        by_path = {"/".join(str(getattr(k, "key", k)) for k in p): s
+                   for p, s in flat}
+        assert by_path["embed"] == P("model", None)
+        assert by_path["lm_head"] == P(None, "model")
+        # stacked block weights: leading layer axis never sharded
+        wq = [s for pth, s in by_path.items() if pth.endswith("wq")][0]
+        assert wq[0] is None and wq[2] == "model"
+    finally:
+        shd.set_axis_map({})
+
+
+def test_quantized_container_specs():
+    from repro.core.sq.rtn import rtn_quantize
+    shd.set_axis_map({"dp": ("data",), "tp": ("model",)})
+    try:
+        w = jnp.zeros((256, 128))
+        sq = rtn_quantize(w, 3, 64)
+        specs = shd.param_specs({"blocks": {"wq": sq}})
+        pk = specs["blocks"]["wq"].packed
+        # packed bit-planes: (bits, ic/32, oc) -> (None, None, 'model')
+        assert pk == P(None, None, "model")
+    finally:
+        shd.set_axis_map({})
+
+
+def test_hlo_cost_counts_matmul_flops():
+    @jax.jit
+    def f(a, b):
+        return a @ b
+
+    M, K, N = 64, 128, 32
+    txt = f.lower(jnp.zeros((M, K)), jnp.zeros((K, N))).compile().as_text()
+    cost = hlo_cost.module_cost(txt)
+    assert cost.flops == 2 * M * K * N, cost.flops
+
+
+def test_hlo_cost_multiplies_scan_trip_count():
+    n_iters = 13
+    M = 32
+
+    @jax.jit
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=n_iters)
+        return y
+
+    txt = f.lower(jnp.zeros((M, M)), jnp.zeros((M, M))).compile().as_text()
+    cost = hlo_cost.module_cost(txt)
+    expect = 2 * M * M * M * n_iters
+    assert abs(cost.flops - expect) / expect < 0.01, (cost.flops, expect)
+
+
+def test_hlo_cost_bytes_reasonable():
+    @jax.jit
+    def f(a):
+        return a * 2.0 + 1.0           # one fused elementwise op
+
+    n = 1 << 20
+    txt = f.lower(jnp.zeros((n,), jnp.float32)).compile().as_text()
+    cost = hlo_cost.module_cost(txt)
+    # read + write of 4MB, modulo small constants
+    assert 0.9 * 8e6 < cost.bytes < 3 * 8e6, cost.bytes
+
+
+def test_collective_regex_parse():
+    hlo = """
+ENTRY %main (p: f32[16,128]) -> f32[16,128] {
+  %p = f32[16,128]{1,0} parameter(0)
+  %ar = f32[16,128]{1,0} all-reduce(%p), replica_groups={}, to_apply=%add
+  %ag = f32[32,128]{1,0} all-gather(%ar), dimensions={0}
+  ROOT %cp = f32[32,128]{1,0} collective-permute(%ag), source_target_pairs={{0,1}}
+}
+"""
+    stats = parse_collectives(hlo)
+    assert stats.bytes_by_kind["all-reduce"] == 16 * 128 * 4
+    assert stats.bytes_by_kind["all-gather"] == 32 * 128 * 4
+    assert stats.bytes_by_kind["collective-permute"] == 32 * 128 * 4
+    cost = hlo_cost.module_cost(hlo)
+    assert cost.coll["all-reduce"] == 16 * 128 * 4
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(flops=197e12, hbm_bytes=819e9 * 2, coll_bytes=50e9 * 0.5,
+                 model_flops=197e12 * 256 * 0.5, chips=256)
+    assert np.isclose(r.t_compute, 1.0)
+    assert np.isclose(r.t_memory, 2.0)
+    assert np.isclose(r.t_collective, 0.5)
+    assert r.bottleneck == "memory"
+    assert np.isclose(r.useful_flops_frac, 0.5)
+    assert np.isclose(r.mfu_bound, 0.25)     # 0.5 useful / 2s bound
+
+
+def test_model_flops_moe_uses_active():
+    from repro.configs import ARCHS
+    cfg = ARCHS["deepseek-v2-236b"]
+    t = model_flops_train(cfg, 1000)
+    assert t == 6.0 * cfg.n_active_params() * 1000
+    assert cfg.n_active_params() < cfg.n_params() / 5
+
+
+def test_sanitize_specs_relocates():
+    import os
+    # local import to avoid polluting device count
+    from repro.launch.dryrun import sanitize_specs
+    mesh = jax.make_mesh((1,), ("model",))   # size-1 axis: all divisible
+
+    sds = jax.ShapeDtypeStruct((49155, 128), jnp.bfloat16)
+    out = sanitize_specs(sds, P("model", None), mesh)
+    assert out == P("model", None)           # divisible by 1

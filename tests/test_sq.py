@@ -1,0 +1,119 @@
+"""Scalar quantization: RTN / GPTQ / AWQ / rotation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sq.awq import apply_awq, awq_quantize
+from repro.core.sq.gptq import gptq_quantize, hessian_from_acts
+from repro.core.sq.rotation import orthogonal_matrix, rotate_quantize
+from repro.core.sq.rtn import rtn_quantize, rtn_quantize_1d
+
+
+def _w(ic=128, oc=64, seed=0):
+    return jnp.asarray(np.random.default_rng(seed)
+                       .standard_normal((ic, oc)).astype(np.float32))
+
+
+def _corr_acts(ic=128, n=512, seed=1):
+    """Correlated activations (GPTQ's win case)."""
+    rng = np.random.default_rng(seed)
+    base = rng.standard_normal((n, 8)).astype(np.float32)
+    mix = rng.standard_normal((8, ic)).astype(np.float32)
+    return jnp.asarray(base @ mix + 0.1 * rng.standard_normal((n, ic))
+                       .astype(np.float32))
+
+
+def test_rtn_error_bound():
+    w = _w()
+    for bits, group in [(3, 64), (4, 32), (8, 128)]:
+        sq = rtn_quantize(w, bits, group)
+        err = jnp.abs(sq.dequant().astype(jnp.float32) - w)
+        # error <= scale/2 + f16 representation slack
+        max_scale = float(sq.scales.astype(jnp.float32).max())
+        assert float(err.max()) <= 0.51 * max_scale + 1e-2
+
+
+def test_rtn_bpw_accounting():
+    sq = rtn_quantize(_w(256, 64), 3, 128)
+    assert abs(float(sq.bpw_nominal()) - 3.25) < 1e-6
+    assert abs(float(sq.bpw_stored()) - 3.25) < 1e-6
+
+
+def test_rtn_1d():
+    w = jnp.asarray(np.random.default_rng(2).uniform(-1, 1, 96)
+                    .astype(np.float32))
+    sq = rtn_quantize_1d(w, 4, 32)
+    assert sq.shape == (96, 1)
+    assert float(jnp.abs(sq.dequant().reshape(-1) - w).max()) < 0.1
+
+
+def test_gptq_identity_hessian_equals_rtn():
+    w = _w(128, 32, seed=3)
+    a = gptq_quantize(w, None, 3, 64)
+    b = rtn_quantize(w, 3, 64)
+    assert np.allclose(np.asarray(a.dequant()), np.asarray(b.dequant()),
+                       atol=2e-3)
+
+
+def test_gptq_beats_rtn_on_correlated_acts():
+    w = _w(128, 64, seed=4)
+    x = _corr_acts(128)
+    H = hessian_from_acts(x)
+    g = gptq_quantize(w, H, 3, 64)
+    r = rtn_quantize(w, 3, 64)
+
+    def out_mse(sq):
+        return float(jnp.mean((x @ w - x @ sq.dequant()
+                               .astype(jnp.float32)) ** 2))
+
+    assert out_mse(g) < out_mse(r) * 0.9, (out_mse(g), out_mse(r))
+
+
+def test_awq_beats_rtn_on_skewed_channels():
+    rng = np.random.default_rng(5)
+    w = _w(128, 64, seed=5)
+    # a few channels carry 30x larger activations
+    scale = np.ones(128, np.float32)
+    scale[:8] = 30.0
+    x = jnp.asarray(rng.standard_normal((256, 128)).astype(np.float32)
+                    * scale)
+    am = jnp.mean(jnp.abs(x), axis=0)
+    r = awq_quantize(w, am, 3, 64)
+    rtn = rtn_quantize(w, 3, 64)
+    mse_awq = float(jnp.mean((x @ w - apply_awq(x, r)) ** 2))
+    mse_rtn = float(jnp.mean((x @ w - x @ rtn.dequant()
+                              .astype(jnp.float32)) ** 2))
+    assert mse_awq < mse_rtn, (mse_awq, mse_rtn)
+
+
+def test_rotation_orthogonal_and_reconstructs():
+    for n in (64, 96):                       # power-of-2 and not
+        Q = orthogonal_matrix(n)
+        assert np.allclose(np.asarray(Q @ Q.T), np.eye(n), atol=1e-4)
+    w = _w(64, 32, seed=6)
+    r = rotate_quantize(w, 4, 32)
+    # effective dequant approximates w
+    err = float(jnp.abs(r.dequant_effective() - w).max())
+    assert err < 0.5
+
+
+def test_rotation_flop_overhead_documented():
+    from repro.core.sq.rotation import flop_overhead
+    # square projection: rotation doubles the matmul FLOPs (paper's >99%)
+    assert flop_overhead(4096, 4096) == 1.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(bits=st.sampled_from([2, 3, 4, 8]), seed=st.integers(0, 100))
+def test_rtn_dequant_within_grid_property(bits, seed):
+    w = _w(64, 16, seed=seed)
+    sq = rtn_quantize(w, bits, 32)
+    wd = np.asarray(sq.dequant().astype(jnp.float32))
+    wg = np.asarray(w).reshape(2, 32, 16)
+    lo = wg.min(1) - 1e-2
+    hi = wg.max(1) + 1e-2
+    wd_g = wd.reshape(2, 32, 16)
+    assert (wd_g >= lo[:, None] - 1e-6).all()
+    assert (wd_g <= hi[:, None] + 1e-6).all()

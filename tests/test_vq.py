@@ -1,0 +1,111 @@
+"""Vector quantization: k-means / GPTVQ / element-wise codebook (§3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sq.gptq import hessian_from_acts
+from repro.core.vq.elementwise import clipped_mean, elementwise_vq
+from repro.core.vq.gptvq import gptvq_quantize, kmeans_vq_quantize
+from repro.core.vq.kmeans import cluster_loss, kmeans, relative_cluster_loss
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_kmeans_recovers_clusters():
+    rng = np.random.default_rng(0)
+    centers = rng.standard_normal((4, 2)).astype(np.float32) * 5
+    pts = np.concatenate([c + 0.05 * rng.standard_normal((100, 2))
+                          for c in centers]).astype(np.float32)
+    cb, assign = kmeans(jnp.asarray(pts), 4, KEY, 30)
+    loss = float(cluster_loss(jnp.asarray(pts), cb, assign))
+    assert loss < 0.02, loss
+
+
+def test_weighted_kmeans_prioritizes_heavy_points():
+    """Centroids must sit closer to high-weight vectors."""
+    rng = np.random.default_rng(1)
+    pts = np.concatenate([np.full((50, 1), -1.0), np.full((50, 1), 1.0),
+                          rng.uniform(3, 5, (8, 1))]).astype(np.float32)
+    w = np.ones((108,), np.float32)
+    w[-8:] = 100.0
+    cb, assign = kmeans(jnp.asarray(pts), 2, KEY, 30,
+                        weights=jnp.asarray(w))
+    # one centroid should be pulled into the heavy [3,5] region
+    assert float(jnp.max(cb)) > 2.5
+
+
+def test_cluster_loss_uniform_vs_gaussian():
+    """Paper Table 1: uniform weights cluster worse than clustered ones."""
+    rng = np.random.default_rng(2)
+    uni = jnp.asarray(rng.uniform(-1, 1, 4096).astype(np.float32))
+    gau = jnp.asarray(np.concatenate([rng.normal(-2, .05, 2048),
+                                      rng.normal(2, .05, 2048)])
+                      .astype(np.float32))
+    lu = relative_cluster_loss(uni, 8, KEY)
+    lg = relative_cluster_loss(gau, 8, KEY)
+    assert lu > lg, (lu, lg)
+
+
+def test_gptvq_beats_plain_kmeans_on_output_mse():
+    rng = np.random.default_rng(3)
+    base = rng.standard_normal((512, 8)).astype(np.float32)
+    mix = rng.standard_normal((8, 64)).astype(np.float32)
+    x = jnp.asarray(base @ mix)
+    w = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    H = hessian_from_acts(x)
+    g = gptvq_quantize(w, H, 2, 6, KEY, 15)
+    p = kmeans_vq_quantize(w, 2, 6, KEY, 15)
+
+    def mse(vq):
+        return float(jnp.mean((x @ w - x @ vq.dequant()
+                               .astype(jnp.float32)) ** 2))
+
+    assert mse(g) < mse(p), (mse(g), mse(p))
+
+
+def test_vq_bpw_nominal():
+    w = jnp.asarray(np.random.default_rng(4)
+                    .standard_normal((256, 128)).astype(np.float32))
+    vq = kmeans_vq_quantize(w, 2, 7, KEY, 5)
+    # 7/2 = 3.5 + codebook overhead (128*2 f16 over 32k weights)
+    assert 3.5 < float(vq.bpw_nominal()) < 3.7
+
+
+def test_clipped_mean_robust_to_outliers():
+    """Fig. 4: percentile clipping recovers the true channel mean."""
+    rng = np.random.default_rng(5)
+    acts = rng.normal(2.0, 0.5, (500, 64)).astype(np.float32)
+    acts[::211] = 500.0                       # ~0.5% outlier rows
+    raw = np.asarray(jnp.mean(jnp.asarray(acts), axis=0))
+    clip = np.asarray(clipped_mean(jnp.asarray(acts), 99.0))
+    assert abs(clip.mean() - 2.0) < 0.2
+    assert abs(raw.mean() - 2.0) > 1.0
+
+
+def test_elementwise_x2_weighting_reduces_weighted_error():
+    """Eq. 19: X²-weighted codebook beats unweighted on X-weighted loss."""
+    rng = np.random.default_rng(6)
+    n = 512
+    mu = jnp.asarray(rng.uniform(0, 1, n).astype(np.float32))
+    # activations concentrated on the first quarter of channels
+    xbar = np.full(n, 0.05, np.float32)
+    xbar[:n // 4] = 4.0
+    acts = jnp.asarray(rng.normal(0, 1, (64, n)).astype(np.float32) * xbar)
+    q_w = elementwise_vq(mu, acts, 4, 4, KEY)
+    q_u = elementwise_vq(mu, None, 4, 4, KEY)
+    W = jnp.asarray(xbar ** 2)
+
+    def werr(q):
+        dmu = q.dequant().reshape(-1)
+        return float(jnp.sum(W * (dmu - mu) ** 2))
+
+    assert werr(q_w) < werr(q_u), (werr(q_w), werr(q_u))
+
+
+def test_elementwise_shapes():
+    mu = jnp.asarray(np.random.default_rng(7).uniform(-1, 1, 128)
+                     .astype(np.float32))
+    q = elementwise_vq(mu, None, 4, 5, KEY)
+    assert q.shape == (128, 1)
+    assert q.dequant().shape == (128, 1)
