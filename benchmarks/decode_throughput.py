@@ -1,0 +1,208 @@
+"""Decode fast-path benchmark: tokens/sec, weight-bytes/token, host syncs.
+
+Tracks the serving-side mechanism behind the paper's Table 4 claim: RWKV
+decode is bandwidth-bound, so per-token weight traffic ≈ time.  Three
+measurements on a reduced RWKV6 with the paper's 3.275-bpw hybrid policy:
+
+  1. WEIGHT BYTES — analytic per-token decode weight traffic of the
+     quantized model under each execution path, vs the bf16 baseline.
+     The skinny-M GEMV kernels read packed planes + scale/bias (or
+     codebook) only, so SQ layers must come in at ``bits/16`` of bf16
+     (+ the per-group scale/bias epsilon); the XLA dequant path
+     re-materializes the full weight every token.
+  2. THROUGHPUT — wall-clock tokens/sec of ``ServeEngine`` for the
+     on-device fast path vs the host loop (and the pallas decode path in
+     interpret mode on CPU, which checks plumbing, not speed — TPU
+     carries the perf claim).
+  3. HOST SYNCS — device→host pulls per generated token (fast path:
+     completion checks only).
+
+Emits ``BENCH_decode.json`` at the repo root so the perf trajectory is
+tracked PR-over-PR, plus the usual CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.decode_throughput
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Timer, csv_row
+from repro.configs import ARCHS, reduced
+from repro.core import quantized as qz
+from repro.core.hybrid import quantize_tree
+from repro.core.policy import DATAFREE_3_275
+from repro.kernels.qmv import ops as qmv_ops
+from repro.kernels.vqmv import ops as vqmv_ops
+from repro.models import registry as R
+from repro.serve.engine import ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_decode.json")
+
+N_SLOTS = 4
+MAX_LEN = 64
+N_REQ = 4
+NEW_TOKENS = 8
+SQ_EPSILON = 0.05      # scale/bias overhead allowance on the bits/16 bound
+
+
+def decode_cfg():
+    """Reduced RWKV6 whose projections tile on the decode GEMV kernels."""
+    cfg = reduced(ARCHS["rwkv6-3b"], d_model=256, n_layers=2, d_ff=512,
+                  vocab_size=128, n_heads=8)
+    return dataclasses.replace(cfg, rwkv_head_dim=32, head_dim=0,
+                               name="bench-decode-rwkv6")
+
+
+# --------------------------------------------------------------------------- #
+#  Analytic per-token decode weight traffic
+# --------------------------------------------------------------------------- #
+def _leaf_bytes(leaf, impl: str):
+    """(quant_bytes, bf16_bytes, kernel_hit) for one quantized leaf."""
+    ic, oc = leaf.shape
+    lead = 1
+    for s in leaf.packed.shape[:-3]:
+        lead *= s
+    numel = lead * ic * oc
+    bf16 = 2 * numel
+    if isinstance(leaf, qz.SQTensor):
+        stored = (leaf.packed.size * 4 + leaf.scales.nbytes
+                  + leaf.biases.nbytes)
+        hit = impl == "pallas" and qmv_ops.tileable(
+            ic, oc, leaf.bits, leaf.group)
+        dtype_b = leaf.scales.dtype.itemsize
+    else:
+        stored = leaf.packed.size * 4 + leaf.codebook.nbytes
+        # per-layer books: the codebook may carry leading stack dims
+        n_books = leaf.codebook.shape[-3]
+        hit = (impl == "pallas" and oc > 1
+               and vqmv_ops.tileable(ic, oc, leaf.d, n_books))
+        dtype_b = leaf.codebook.dtype.itemsize
+    if hit:
+        return stored, bf16, True
+    # XLA fallback: reads the packed form, then materializes the full
+    # dequantized weight (write) and feeds it to the matmul (read)
+    return stored + 2 * numel * dtype_b, bf16, False
+
+
+def decode_weight_bytes(qparams, impl: str):
+    """Per-token decode weight traffic over all quantized matmul weights."""
+    tot_q = tot_bf16 = 0
+    sq_kernel_q = sq_kernel_bf16 = 0
+    n_kernel = n_fallback = 0
+    for leaf in jax.tree.leaves(qparams, is_leaf=qz.is_quantized):
+        if not qz.is_quantized(leaf):
+            continue
+        qb, fb, hit = _leaf_bytes(leaf, impl)
+        tot_q += qb
+        tot_bf16 += fb
+        if hit:
+            n_kernel += 1
+            if isinstance(leaf, qz.SQTensor):
+                sq_kernel_q += qb
+                sq_kernel_bf16 += fb
+        else:
+            n_fallback += 1
+    return {"quant_bytes": int(tot_q), "bf16_bytes": int(tot_bf16),
+            "ratio": tot_q / max(tot_bf16, 1),
+            "sq_kernel_ratio": (sq_kernel_q / sq_kernel_bf16
+                                if sq_kernel_bf16 else None),   # JSON-safe
+            "n_kernel_leaves": n_kernel, "n_fallback_leaves": n_fallback}
+
+
+# --------------------------------------------------------------------------- #
+#  Engine throughput
+# --------------------------------------------------------------------------- #
+def _drive(cfg, params, fast_path: bool, impl: str,
+           ticks_per_sync: int = 1):
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=5 + (i % 3))
+               .astype(np.int32) for i in range(N_REQ)]
+    # warm start: compile prefill (per prompt length) and decode outside
+    # the timed region
+    eng = ServeEngine(cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                      fast_path=fast_path, impl=impl,
+                      ticks_per_sync=ticks_per_sync)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=4)
+    eng.run_until_drained()
+    eng = ServeEngine(cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                      fast_path=fast_path, impl=impl,
+                      ticks_per_sync=ticks_per_sync)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=NEW_TOKENS)
+    t0 = time.time()
+    done = eng.run_until_drained()
+    dt = time.time() - t0
+    n_tok = sum(len(r.out_tokens) for r in done)
+    assert len(done) == N_REQ, (len(done), N_REQ)
+    return {"tokens": n_tok, "seconds": dt,
+            "tokens_per_sec": n_tok / dt,
+            "host_syncs": eng.host_syncs,
+            "host_syncs_per_token": eng.host_syncs / max(n_tok, 1)}
+
+
+def run(print_csv=print):
+    t = Timer()
+    cfg = decode_cfg()
+    params = R.init_params(cfg, KEY)
+    qp, report = quantize_tree(params, DATAFREE_3_275, KEY)
+    qp_decode = R.prepare_decode_params(cfg, qp)
+
+    # 1. analytic weight traffic (fused decode layout, as served)
+    by_impl = {impl: decode_weight_bytes(qp_decode, impl)
+               for impl in ("xla", "pallas")}
+    sq_ratio = by_impl["pallas"]["sq_kernel_ratio"]
+    assert sq_ratio is not None, "no SQ layer hit the decode GEMV kernel"
+    bound = DATAFREE_3_275.sq_bits / 16 + SQ_EPSILON
+    for impl, r in by_impl.items():
+        print_csv(csv_row(
+            f"decode/weight_bytes/{impl}", t.lap() * 1e6,
+            f"quant_mb={r['quant_bytes']/2**20:.3f};"
+            f"ratio_vs_bf16={r['ratio']:.4f};"
+            f"kernel_leaves={r['n_kernel_leaves']};"
+            f"fallback_leaves={r['n_fallback_leaves']}"))
+    print_csv(csv_row(
+        "decode/weight_bytes/sq_bound", t.lap() * 1e6,
+        f"sq_kernel_ratio={sq_ratio:.4f};bound={bound:.4f};"
+        f"pass={sq_ratio <= bound}"))
+
+    # 2+3. engine throughput & host syncs
+    engines = {}
+    for tag, fast, impl, tps in (
+            ("slow_xla", False, "xla", 1),
+            ("fast_xla", True, "xla", 1),
+            ("fast_xla_sync4", True, "xla", 4),
+            ("fast_pallas_interpret", True, "pallas", 1)):
+        engines[tag] = _drive(cfg, qp, fast, impl, tps)
+        r = engines[tag]
+        print_csv(csv_row(
+            f"decode/engine/{tag}", r["seconds"] / max(r["tokens"], 1) * 1e6,
+            f"tokens_per_sec={r['tokens_per_sec']:.2f};"
+            f"host_syncs_per_token={r['host_syncs_per_token']:.3f}"))
+
+    out = {
+        "model": cfg.name,
+        "policy_bpw": float(report.mean_bpw),
+        "n_slots": N_SLOTS, "new_tokens": NEW_TOKENS,
+        "weight_bytes_per_token": by_impl,
+        "sq_kernel_ratio": {"value": float(sq_ratio),
+                            "bound_bits_over_16_plus_eps": float(bound),
+                            "pass": bool(sq_ratio <= bound)},
+        "engines": engines,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+    print_csv(csv_row("decode/json", t.lap() * 1e6,
+                      f"path={os.path.relpath(OUT_JSON)}"))
+
+
+if __name__ == "__main__":
+    run()

@@ -20,13 +20,14 @@ def main() -> None:
                     help="comma-separated subset, e.g. table1,fig5")
     args = ap.parse_args()
 
-    from benchmarks import (fig5_sq_proportion, roofline_report,
-                            table1_cluster_loss, table2_quant_quality,
-                            table4_speed_memory, table5_hybrid_ablation,
-                            table6_proxy_ablation, table7_codebook_ablation,
-                            table12_tau_sensitivity)
+    from benchmarks import (decode_throughput, fig5_sq_proportion,
+                            roofline_report, table1_cluster_loss,
+                            table2_quant_quality, table4_speed_memory,
+                            table5_hybrid_ablation, table6_proxy_ablation,
+                            table7_codebook_ablation, table12_tau_sensitivity)
 
     sections = {
+        "decode": decode_throughput.run,
         "table1": table1_cluster_loss.run,
         "table2": table2_quant_quality.run,
         "table4": table4_speed_memory.run,

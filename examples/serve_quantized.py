@@ -52,6 +52,9 @@ def main():
               f"-> {r.out_tokens[:8]}...")
     print(f"served {len(done)} requests "
           f"(RWKV state is O(1) per slot — no KV growth)")
+    n_tok = sum(len(r.out_tokens) for r in done)
+    print(f"on-device decode loop: {eng.host_syncs} host syncs for "
+          f"{n_tok} tokens ({eng.host_syncs / max(n_tok, 1):.2f}/token)")
 
 
 if __name__ == "__main__":

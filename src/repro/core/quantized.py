@@ -11,6 +11,28 @@ Two execution paths per container:
   * ``pallas`` — fused dequant-matmul kernels under ``repro.kernels``
                  (TPU target; validated in interpret mode on CPU).
 
+Dispatch rules (``matmul``):
+  * plain array           -> jnp.matmul (plus calibration capture).
+  * quantized, impl=xla   -> dequant to the activation dtype, jnp.matmul.
+    This is the reference semantics: every other path must agree with it
+    to kernel tolerance.
+  * quantized, impl=pallas, effective M > DECODE_M_MAX
+                          -> prefill-shaped qmm/vqmm kernels, grid
+                             (M/bm, N/bn, K/bk).
+  * quantized, impl=pallas, effective M <= DECODE_M_MAX (decode: M is
+    the number of active serving slots)
+                          -> skinny-M output-stationary qmv/vqmv GEMV
+                             kernels, grid (N/bn, K/bk), M padded only
+                             to the sublane (8).  Per token these read
+                             ~bits/16 of the bf16 weight bytes.
+  * shapes a kernel cannot tile (tiny reduced-test matrices, N not a
+    lane multiple, multi-book VQ) silently fall back to the xla path
+    inside the ops wrappers.
+
+``matmul_fused`` additionally runs P same-shaped stacked SQ weights
+(e.g. RWKV r/k/v/g, stacked once offline by
+``models.rwkv6.fuse_rkvg``) in a single kernel launch at decode shapes.
+
 The containers keep the original weight's logical shape/sharding semantics:
 codes are packed along the *input-channel* axis (axis 0), so a weight
 sharded on its output axis keeps the same PartitionSpec.
@@ -28,6 +50,11 @@ import jax.numpy as jnp
 from repro.core import packing
 
 _IMPL = "xla"  # module-level default; see use_impl()
+
+# Activations with prod(leading dims) at or below the kernels' skinny-M
+# capacity (kernels.qmv/vqmv ops.DECODE_M_MAX = f32 sublane = 8) ride
+# the decode GEMV schedule; the threshold is read off the ops modules so
+# there is a single source of truth.
 
 
 @contextmanager
@@ -249,6 +276,14 @@ def capture_stats():
         _CAPTURE = prev
 
 
+def _eff_m(x: jax.Array) -> int:
+    """Effective matmul M: product of leading (non-ic) activation dims."""
+    m = 1
+    for s in x.shape[:-1]:
+        m *= s
+    return m
+
+
 def matmul(x: jax.Array, w, out_dtype=None) -> jax.Array:
     """x @ w  with w a plain array / SQTensor / VQTensor.
 
@@ -256,12 +291,18 @@ def matmul(x: jax.Array, w, out_dtype=None) -> jax.Array:
     """
     if isinstance(w, SQTensor):
         if _IMPL == "pallas":
+            from repro.kernels.qmv import ops as qmv_ops
+            if _eff_m(x) <= qmv_ops.DECODE_M_MAX:
+                return qmv_ops.qmv(x, w)
             from repro.kernels.qmm import ops as qmm_ops
             return qmm_ops.qmm(x, w)
         wd = w.dequant().astype(x.dtype)
         return jnp.matmul(x, wd)
     if isinstance(w, VQTensor):
         if _IMPL == "pallas":
+            from repro.kernels.vqmv import ops as vqmv_ops
+            if _eff_m(x) <= vqmv_ops.DECODE_M_MAX:
+                return vqmv_ops.vqmv(x, w)
             from repro.kernels.vqmm import ops as vqmm_ops
             return vqmm_ops.vqmm(x, w)
         wd = w.dequant().astype(x.dtype)
@@ -270,6 +311,37 @@ def matmul(x: jax.Array, w, out_dtype=None) -> jax.Array:
             and not isinstance(x, jax.core.Tracer):
         _CAPTURE.record_matmul(w, x)
     return jnp.matmul(x, w.astype(x.dtype) if w.dtype != x.dtype else w)
+
+
+def matmul_fused(xs: jax.Array, w) -> jax.Array:
+    """Batched matmul against P stacked same-shaped SQ weights.
+
+    xs: (P, ..., ic); ``w`` an SQTensor whose array fields carry a
+    leading projection axis P (see ``models.rwkv6.fuse_rkvg``); returns
+    (P, ..., oc).  At decode shapes under the pallas impl all P
+    projections run in ONE skinny-M kernel launch; at prefill shapes
+    each projection goes through the regular ``matmul`` dispatch.  The
+    xla path is bitwise identical to P separate ``matmul`` calls.
+    """
+    assert isinstance(w, SQTensor), type(w)
+    P = xs.shape[0]
+    assert w.packed.shape[0] == P, (w.packed.shape, P)
+    m = 1
+    for s in xs.shape[1:-1]:
+        m *= s
+    if _IMPL == "pallas":
+        from repro.kernels.qmv import ops as qmv_ops
+        if m <= qmv_ops.DECODE_M_MAX:
+            return qmv_ops.qmv_fused(xs, w)
+    return jnp.stack([matmul(xs[p], _fused_slice(w, p))
+                      for p in range(P)])
+
+
+def _fused_slice(w: "SQTensor", p: int) -> "SQTensor":
+    """Per-projection view of a fused (leading-P) SQTensor."""
+    return SQTensor(packed=w.packed[p], scales=w.scales[p],
+                    biases=w.biases[p], shape=w.shape, bits=w.bits,
+                    group=w.group)
 
 
 def expert_einsum(pattern: str, x: jax.Array, w) -> jax.Array:

@@ -1,0 +1,170 @@
+"""Pallas TPU kernel: skinny-M fused group-dequant (SQ) GEMV.
+
+    y = x @ dequant(planes, scales, biases)        with M <= 8
+
+Decode-phase matmuls have M = active slots (<= 8 rows): the qmm kernel
+handles them by padding M to a full tile and running the prefill-shaped
+(M/bm, N/bn, K/bk) schedule.  This kernel is *output-stationary* over a
+2-D grid (N/bn, K/bk) with K innermost: M is padded only to the f32
+sublane (8), ``bn`` is wide (weight words arrive in long contiguous
+lanes), and the (8, bn) f32 accumulator lives in VMEM scratch across the
+whole K sweep.  Per decoded token the kernel therefore reads exactly the
+packed planes + per-group scale/bias once — ``bits/16`` of the bf16
+baseline's weight bytes, the bandwidth mechanism behind the paper's
+Table 4 speedup.
+
+A fused multi-projection variant (:func:`qmv_fused_pallas`) runs P
+same-shaped weights (e.g. RWKV r/k/v/g projections) in ONE kernel launch
+over grid (P, N/bn, K/bk), amortizing launch overhead and the activation
+pipeline across projections; the activation may be shared (one x for all
+P) or stacked per projection (RWKV ddlerp produces a distinct mix per
+projection).
+
+Constraints: 32 | bk, group | bk, 128 | bn, M <= 8 (ops layer pads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# one bit-plane unpack convention across prefill and decode kernels
+from repro.kernels.qmm.kernel import LANES, _unpack_planes
+
+SUBLANE = 8          # f32 sublane: the only M padding the GEMV pays for
+
+
+def _dequant_tile(words, s, b, *, bits, group, bk, dtype):
+    codes = _unpack_planes(words, bits, bk)                    # (bk, bn)
+    s = s.astype(jnp.float32)                                  # (bk/g, bn)
+    b = b.astype(jnp.float32)
+    gpb = max(bk // group, 1)
+    bn = codes.shape[1]
+    sf = jnp.broadcast_to(s.reshape(gpb, 1, bn),
+                          (gpb, bk // gpb, bn)).reshape(bk, bn)
+    bf = jnp.broadcast_to(b.reshape(gpb, 1, bn),
+                          (gpb, bk // gpb, bn)).reshape(bk, bn)
+    return (codes.astype(jnp.float32) * sf + bf).astype(dtype)
+
+
+def _qmv_kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *,
+                bits: int, group: int, bk: int, nk: int):
+    k = pl.program_id(1)                       # grid (N/bn, K/bk), K inner
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _dequant_tile(w_ref[...], s_ref[...], b_ref[...], bits=bits,
+                      group=group, bk=bk, dtype=x_ref.dtype)
+    acc_ref[...] += jnp.dot(x_ref[...], w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def qmv_pallas(x: jax.Array, packed: jax.Array, scales: jax.Array,
+               biases: jax.Array, *, bits: int, group: int,
+               K: int, N: int, bn: int = 0, bk: int = 0,
+               interpret: bool = False) -> jax.Array:
+    """x: (M<=8, K); packed: (bits, K/32, N) uint32; scales: (K/group, N)."""
+    M = x.shape[0]
+    assert M <= SUBLANE, M
+    if M != SUBLANE:
+        x = jnp.pad(x, ((0, SUBLANE - M), (0, 0)))
+    if bk == 0:
+        bk = max(group, 256)
+    if bn == 0:
+        bn = next(b for b in (512, 256, 128) if N % b == 0)
+    assert K % bk == 0 and bk % LANES == 0, (K, bk)
+    assert bk % group == 0, (bk, group)
+    assert N % bn == 0 and bn % 128 == 0, (N, bn)
+    nk = K // bk
+
+    y = pl.pallas_call(
+        functools.partial(_qmv_kernel, bits=bits, group=group, bk=bk, nk=nk),
+        grid=(N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((SUBLANE, bk), lambda j, k: (0, k)),
+            pl.BlockSpec((bits, bk // LANES, bn), lambda j, k: (0, k, j)),
+            pl.BlockSpec((bk // group, bn), lambda j, k: (k, j)),
+            pl.BlockSpec((bk // group, bn), lambda j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((SUBLANE, bn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((SUBLANE, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((SUBLANE, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, packed, scales, biases)
+    return y[:M]
+
+
+# --------------------------------------------------------------------------- #
+#  Fused multi-projection variant
+# --------------------------------------------------------------------------- #
+def _qmv_fused_kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *,
+                      bits: int, group: int, bk: int, nk: int):
+    k = pl.program_id(2)                       # grid (P, N/bn, K/bk)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _dequant_tile(w_ref[0], s_ref[0], b_ref[0],
+                      bits=bits, group=group, bk=bk, dtype=x_ref.dtype)
+    acc_ref[...] += jnp.dot(x_ref[0], w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def qmv_fused_pallas(x: jax.Array, packed: jax.Array, scales: jax.Array,
+                     biases: jax.Array, *, bits: int, group: int,
+                     K: int, N: int, bn: int = 0, bk: int = 0,
+                     interpret: bool = False) -> jax.Array:
+    """P stacked projections of one decode activation, single launch.
+
+    x: (M<=8, K) shared or (P, M<=8, K) per-projection;
+    packed: (P, bits, K/32, N); scales/biases: (P, K/group, N).
+    Returns (P, M, N).
+    """
+    P = packed.shape[0]
+    if x.ndim == 2:
+        x = jnp.broadcast_to(x[None], (P,) + x.shape)
+    assert x.shape[0] == P, (x.shape, P)
+    M = x.shape[1]
+    assert M <= SUBLANE, M
+    if M != SUBLANE:
+        x = jnp.pad(x, ((0, 0), (0, SUBLANE - M), (0, 0)))
+    if bk == 0:
+        bk = max(group, 256)
+    if bn == 0:
+        bn = next(b for b in (512, 256, 128) if N % b == 0)
+    assert K % bk == 0 and bk % LANES == 0, (K, bk)
+    assert bk % group == 0, (bk, group)
+    assert N % bn == 0 and bn % 128 == 0, (N, bn)
+    nk = K // bk
+
+    y = pl.pallas_call(
+        functools.partial(_qmv_fused_kernel, bits=bits, group=group,
+                          bk=bk, nk=nk),
+        grid=(P, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((1, SUBLANE, bk), lambda p, j, k: (p, 0, k)),
+            pl.BlockSpec((1, bits, bk // LANES, bn),
+                         lambda p, j, k: (p, 0, k, j)),
+            pl.BlockSpec((1, bk // group, bn), lambda p, j, k: (p, k, j)),
+            pl.BlockSpec((1, bk // group, bn), lambda p, j, k: (p, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, SUBLANE, bn), lambda p, j, k: (p, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((P, SUBLANE, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((SUBLANE, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, packed, scales, biases)
+    return y[:, :M]

@@ -1,0 +1,70 @@
+"""jit'd wrappers: skinny-M SQTensor GEMV through the Pallas qmv kernels.
+
+``qmv`` is the decode-shape entry point that ``core/quantized.matmul``
+dispatches to when the effective M (product of leading activation dims)
+is at most :data:`DECODE_M_MAX`.  Shapes the kernel cannot tile fall back
+to the XLA dequant path, mirroring qmm's contract.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qmv.kernel import SUBLANE, qmv_fused_pallas, qmv_pallas
+
+_INTERPRET = not any(d.platform == "tpu" for d in jax.devices())
+
+DECODE_M_MAX = SUBLANE     # rows the GEMV schedule handles without tiling M
+
+
+def tileable(K: int, N: int, bits: int, group: int) -> bool:
+    """True when the qmv kernel covers an (K, N) SQ weight."""
+    bk = max(group, 256)
+    return K % bk == 0 and bk % group == 0 and N % 128 == 0
+
+
+def qmv(x: jax.Array, w) -> jax.Array:
+    """x: (..., K) @ SQTensor(K, N) -> (..., N), M = prod(lead) <= 8."""
+    K, N = w.shape
+    lead = x.shape[:-1]
+    M = 1
+    for s in lead:
+        M *= s
+    assert M <= DECODE_M_MAX, (M, DECODE_M_MAX)
+    x2 = x.reshape(M, K)
+    if not tileable(K, N, w.bits, w.group):
+        return jnp.matmul(x2, w.dequant().astype(x.dtype)).reshape(
+            lead + (N,))
+    y = qmv_pallas(x2, w.packed, w.scales, w.biases,
+                   bits=w.bits, group=w.group, K=K, N=N,
+                   interpret=_INTERPRET)
+    return y.reshape(lead + (N,))
+
+
+def qmv_fused(x: jax.Array, w, shared: bool = False) -> jax.Array:
+    """x: (P, ..., K) (or (..., K) with ``shared=True``) -> (P, ..., N).
+
+    ``w`` is an SQTensor whose arrays carry a leading projection axis:
+    packed (P, bits, K/32, N), scales/biases (P, K/group, N); ``w.shape``
+    stays the per-projection (K, N).  ``shared=True`` decodes one
+    activation against all P weights without copying it P times.
+    """
+    K, N = w.shape
+    P = w.packed.shape[0]
+    if not shared:
+        assert x.shape[0] == P, (x.shape, P)
+    lead = x.shape[:-1] if shared else x.shape[1:-1]
+    M = 1
+    for s in lead:
+        M *= s
+    assert M <= DECODE_M_MAX, (M, DECODE_M_MAX)
+    x2 = x.reshape((M, K) if shared else (P, M, K))
+    if not tileable(K, N, w.bits, w.group):
+        wd = w.dequant().astype(x.dtype)                       # (P, K, N)
+        pat = "mk,pkn->pmn" if shared else "pmk,pkn->pmn"
+        y = jnp.einsum(pat, x2, wd)
+        return y.reshape((P,) + lead + (N,))
+    y = qmv_fused_pallas(x2, w.packed, w.scales, w.biases,
+                         bits=w.bits, group=w.group, K=K, N=N,
+                         interpret=_INTERPRET)
+    return y.reshape((P,) + lead + (N,))

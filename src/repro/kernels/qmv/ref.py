@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the qmv kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+
+def qmv_ref(x, packed, scales, biases, *, bits: int, group: int,
+            K: int, N: int) -> jax.Array:
+    codes = packing.unpack(packed, bits, K)                    # (K, N)
+    s = jnp.repeat(scales.astype(jnp.float32), group, axis=0)[:K]
+    b = jnp.repeat(biases.astype(jnp.float32), group, axis=0)[:K]
+    w = (codes.astype(jnp.float32) * s + b).astype(x.dtype)
+    return jnp.matmul(x, w)
+
+
+def qmv_fused_ref(x, packed, scales, biases, *, bits: int, group: int,
+                  K: int, N: int) -> jax.Array:
+    """x: (M,K) or (P,M,K); packed: (P,bits,K/32,N) -> (P,M,N)."""
+    P = packed.shape[0]
+    if x.ndim == 2:
+        x = jnp.broadcast_to(x[None], (P,) + x.shape)
+    return jnp.stack([
+        qmv_ref(x[p], packed[p], scales[p], biases[p],
+                bits=bits, group=group, K=K, N=N)
+        for p in range(P)])

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: skinny-M fused codebook-dequant (VQ) GEMV.
+
+    y = x @ codebook-expand(planes, codebook)      with M <= 8
+
+Output-stationary decode schedule, same rationale as ``kernels/qmv``:
+grid (N/bn, K/bk) with K innermost, M padded only to the f32 sublane (8),
+wide ``bn``, (8, bn) f32 VMEM accumulator held across the K sweep.  The
+codebook (2^k × d, a few KiB) is pinned whole in VMEM via a
+constant-index BlockSpec; index planes stream HBM→VMEM, so per decoded
+token the kernel reads ``k/(16·d)`` of the bf16 baseline's weight bytes.
+
+Constraints: 32·d | bk, 128 | bn, single codebook (n_books == 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# one index-plane unpack convention across prefill and decode kernels
+from repro.kernels.vqmm.kernel import LANES, _unpack_idx
+
+SUBLANE = 8
+
+
+def _vqmv_kernel(x_ref, i_ref, cb_ref, o_ref, acc_ref, *,
+                 k: int, d: int, bk: int, nk: int):
+    kk = pl.program_id(1)                      # grid (N/bn, K/bk), K inner
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bkv = bk // d
+    idx = _unpack_idx(i_ref[...], k, bkv)                      # (bkv, bn)
+    cb = cb_ref[0]                                             # (2^k, d) VMEM
+    vecs = cb[idx]                                             # (bkv, bn, d)
+    bn = idx.shape[1]
+    w = vecs.transpose(0, 2, 1).reshape(bk, bn).astype(x_ref.dtype)
+    acc_ref[...] += jnp.dot(x_ref[...], w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def vqmv_pallas(x: jax.Array, packed: jax.Array, codebook: jax.Array, *,
+                k: int, d: int, K: int, N: int, bn: int = 0,
+                bk: int = 0, interpret: bool = False) -> jax.Array:
+    """x: (M<=8, K); packed: (k, (K/d)/32, N); codebook: (1, 2^k, d)."""
+    M = x.shape[0]
+    assert M <= SUBLANE, M
+    if M != SUBLANE:
+        x = jnp.pad(x, ((0, SUBLANE - M), (0, 0)))
+    if bk == 0:
+        bk = 256 if K % 256 == 0 else K
+    if bn == 0:
+        bn = next(b for b in (512, 256, 128) if N % b == 0)
+    assert K % bk == 0 and bk % (LANES * d) == 0, (K, bk, d)
+    assert N % bn == 0 and bn % 128 == 0, (N, bn)
+    nk = K // bk
+    nK = 2 ** k
+
+    y = pl.pallas_call(
+        functools.partial(_vqmv_kernel, k=k, d=d, bk=bk, nk=nk),
+        grid=(N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((SUBLANE, bk), lambda j, kk: (0, kk)),
+            pl.BlockSpec((k, bk // d // LANES, bn),
+                         lambda j, kk: (0, kk, j)),
+            pl.BlockSpec((1, nK, d), lambda j, kk: (0, 0, 0)),  # pinned
+        ],
+        out_specs=pl.BlockSpec((SUBLANE, bn), lambda j, kk: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((SUBLANE, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((SUBLANE, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, packed, codebook)
+    return y[:M]

@@ -1,0 +1,35 @@
+"""jit'd wrapper: skinny-M VQTensor GEMV through the Pallas vqmv kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vqmv.kernel import LANES, SUBLANE, vqmv_pallas
+
+_INTERPRET = not any(d.platform == "tpu" for d in jax.devices())
+
+DECODE_M_MAX = SUBLANE
+
+
+def tileable(K: int, N: int, d: int, n_books: int) -> bool:
+    """True when the vqmv kernel covers a (K, N) VQ weight."""
+    bk = 256 if K % 256 == 0 else K
+    return (n_books == 1 and K % bk == 0 and bk % (LANES * d) == 0
+            and N % 128 == 0)
+
+
+def vqmv(x: jax.Array, w) -> jax.Array:
+    """x: (..., K) @ VQTensor(K, N) -> (..., N), M = prod(lead) <= 8."""
+    K, N = w.shape
+    lead = x.shape[:-1]
+    M = 1
+    for s in lead:
+        M *= s
+    assert M <= DECODE_M_MAX, (M, DECODE_M_MAX)
+    x2 = x.reshape(M, K)
+    if not tileable(K, N, w.d, w.n_books):
+        return jnp.matmul(x2, w.dequant().astype(x.dtype)).reshape(
+            lead + (N,))
+    y = vqmv_pallas(x2, w.packed, w.codebook.astype(jnp.float32),
+                    k=w.k, d=w.d, K=K, N=N, interpret=_INTERPRET)
+    return y.reshape(lead + (N,))

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the vqmv kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+
+def vqmv_ref(x, packed, codebook, *, k: int, d: int, K: int,
+             N: int) -> jax.Array:
+    idx = packing.unpack(packed, k, K // d)                    # (K/d, N)
+    vecs = codebook[0][idx]                                    # (K/d, N, d)
+    w = vecs.transpose(0, 2, 1).reshape(K, N).astype(x.dtype)
+    return jnp.matmul(x, w)

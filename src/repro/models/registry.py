@@ -55,6 +55,14 @@ def decode_step(cfg, params, cache, tokens):
     return module_for(cfg).decode_step(cfg, params, cache, tokens)
 
 
+def prepare_decode_params(cfg, params):
+    """Optional per-family decode-optimized weight layout (identity when
+    the family defines none).  The transformed tree remains valid for
+    prefill/forward as well."""
+    fn = getattr(module_for(cfg), "prepare_decode_params", None)
+    return fn(params) if fn is not None else params
+
+
 # --------------------------------------------------------------------------- #
 #  Abstract inputs for the dry-run (no allocation)
 # --------------------------------------------------------------------------- #

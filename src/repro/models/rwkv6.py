@@ -223,17 +223,26 @@ def time_mix(cfg, tm, x, x_prev, state):
     H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
     xw, xk, xv, xr, xg = _ddlerp(tm, x, x_prev)
 
-    def proj(xin, wname):
-        y = q.matmul(xin, tm[wname])                    # col-parallel
+    def tp_gather(y):
         if not TP_CONSTRAINTS:
             return y
         y = constrain(y, "dp", None, "tp")              # sharded compute
         return constrain(y, "dp", None, None)           # then gather
 
-    r = proj(xr, "w_r").reshape(B, S, H, hd)
-    k = proj(xk, "w_k").reshape(B, S, H, hd)
-    v = proj(xv, "w_v").reshape(B, S, H, hd)
-    g = jax.nn.silu(proj(xg, "w_g"))
+    if "w_rkvg" in tm:
+        # fused decode layout (fuse_rkvg): the four projections of this
+        # token's ddlerp mixes run as one stacked GEMV kernel launch
+        ys = q.matmul_fused(jnp.stack([xr, xk, xv, xg]), tm["w_rkvg"])
+        yr, yk, yv, yg = (tp_gather(ys[p]) for p in range(4))
+    else:
+        yr = tp_gather(q.matmul(xr, tm["w_r"]))         # col-parallel
+        yk = tp_gather(q.matmul(xk, tm["w_k"]))
+        yv = tp_gather(q.matmul(xv, tm["w_v"]))
+        yg = tp_gather(q.matmul(xg, tm["w_g"]))
+    r = yr.reshape(B, S, H, hd)
+    k = yk.reshape(B, S, H, hd)
+    v = yv.reshape(B, S, H, hd)
+    g = jax.nn.silu(yg)
 
     decay_base = q.dequant(tm["decay_w"]).reshape(-1) \
         if q.is_quantized(tm["decay_w"]) else tm["decay_w"]
@@ -382,3 +391,43 @@ def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:
     h, new_cache = _cached_stack(cfg, params, cache, x)
     new_cache["index"] = cache["index"] + 1
     return logits(cfg, params, h[:, 0:1, :])[:, 0, :], new_cache
+
+
+# --------------------------------------------------------------------------- #
+#  Decode-time weight layout
+# --------------------------------------------------------------------------- #
+_RKVG = ("w_r", "w_k", "w_v", "w_g")
+
+
+def fuse_rkvg(params):
+    """Stack quantized r/k/v/g projections for single-launch decode GEMV.
+
+    Returns a new param tree where each block's four SQ projection
+    containers are replaced by one ``w_rkvg`` SQTensor whose arrays carry
+    a projection axis after the layer axis: packed (L, 4, bits, ic/32,
+    oc).  The stack is materialized ONCE here (host-side, outside jit) so
+    the decode step never copies weight bytes; ``time_mix`` detects the
+    fused key.  No-op when the projections are not uniformly SQ-quantized.
+    """
+    tm = params.get("blocks", {}).get("tm", {})
+    ws = [tm.get(n) for n in _RKVG]
+    if not all(isinstance(w, q.SQTensor) for w in ws):
+        return params
+    w0 = ws[0]
+    if not all((w.shape, w.bits, w.group) == (w0.shape, w0.bits, w0.group)
+               for w in ws):
+        return params
+    fused = q.SQTensor(
+        packed=jnp.stack([w.packed for w in ws], axis=1),
+        scales=jnp.stack([w.scales for w in ws], axis=1),
+        biases=jnp.stack([w.biases for w in ws], axis=1),
+        shape=w0.shape, bits=w0.bits, group=w0.group)
+    new_tm = {k: v for k, v in tm.items() if k not in _RKVG}
+    new_tm["w_rkvg"] = fused
+    blocks = dict(params["blocks"], tm=new_tm)
+    return dict(params, blocks=blocks)
+
+
+def prepare_decode_params(params):
+    """Registry hook: decode-optimized weight layout (see fuse_rkvg)."""
+    return fuse_rkvg(params)

@@ -7,21 +7,42 @@ per-slot KV caches, RWKV/Mamba archs carry O(1) state (the paper's
 deployment story: quantized weights + constant-memory state = edge-sized
 serving).
 
-Prefill of a new request runs batch-1 into a scratch cache, then the
-slot's cache lines are written in-place (dynamic_update_slice on the
-batch axis), so long-running slots are never recomputed.
+Two decode loops:
+
+* **fast path** (default) — one jitted decode+sample tick over
+  device-resident token/position/output buffers.  Per-request sampling
+  (greedy or temperature) happens inside the tick; the host only
+  synchronizes at admission and at completion checks (``host_syncs``
+  counts the device→host pulls).  Weights go through
+  ``registry.prepare_decode_params`` (e.g. RWKV r/k/v/g projections
+  stacked for the single-launch fused GEMV kernel), and under
+  ``impl='pallas'`` the decode-shaped matmuls ride the skinny-M
+  qmv/vqmv kernels.  Greedy outputs are bit-identical to the slow path.
+* **slow path** (``fast_path=False``) — the original host loop that
+  round-trips every token through NumPy; kept as the reference
+  implementation and for A/B measurement.
+
+Prefill of new requests is batched: queued prompts of equal length are
+admitted in one prefill call, then each slot's cache lines are written
+in-place (dynamic_update_slice on the batch axis).  The batch axis of
+every cache leaf is discovered structurally at engine construction
+(comparing ``init_cache`` shapes at two batch sizes), so single-slot
+pools splice correctly too.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from functools import partial
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quantized as qz
 from repro.models import registry as R
+
+_NO_BATCH_AX = -1      # sentinel: leaf has no batch axis (e.g. cache index)
 
 
 @dataclass
@@ -34,38 +55,116 @@ class Request:
     done: bool = False
 
 
-def _slot_write(cache_tree, slot_tree, slot_idx: int):
-    """Write batch-1 `slot_tree` into `cache_tree` at batch position."""
-    def upd(c, s):
-        if c.ndim == 0 or c.shape == ():
+def _batch_axes(cfg, max_len: int):
+    """Per-cache-leaf batch axis, found structurally (no heuristics)."""
+    s1 = jax.eval_shape(lambda: R.init_cache(cfg, 1, max_len))
+    s2 = jax.eval_shape(lambda: R.init_cache(cfg, 2, max_len))
+
+    def ax(a, b):
+        for i, (u, v) in enumerate(zip(a.shape, b.shape)):
+            if u != v:
+                return i
+        return _NO_BATCH_AX
+    return jax.tree.map(ax, s1, s2)
+
+
+def _slot_write(cache_tree, scratch_tree, axes_tree, slot: int, row: int):
+    """Write batch-row ``row`` of ``scratch_tree`` into pool slot ``slot``."""
+    def upd(c, s, ax):
+        if ax == _NO_BATCH_AX:
             return c
-        # find the batch axis: slot caches are batch-1 at the same axis
-        for ax in range(c.ndim):
-            if s.shape[ax] == 1 and c.shape[ax] != s.shape[ax]:
-                idx = [0] * c.ndim
-                idx[ax] = slot_idx
-                return jax.lax.dynamic_update_slice(c, s.astype(c.dtype),
-                                                    tuple(idx))
-        return c
-    return jax.tree.map(upd, cache_tree, slot_tree)
+        line = jax.lax.dynamic_slice_in_dim(s, row, 1, axis=ax)
+        idx = [0] * c.ndim
+        idx[ax] = slot
+        return jax.lax.dynamic_update_slice(c, line.astype(c.dtype),
+                                            tuple(idx))
+    return jax.tree.map(upd, cache_tree, scratch_tree, axes_tree)
+
+
+def _choose_tokens(logits, temps, key):
+    """Per-row next token: argmax where temp<=0, else categorical(t)."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    tsafe = jnp.where(temps > 0, temps, 1.0)
+    sampled = jax.random.categorical(
+        key, logits / tsafe[:, None], axis=-1).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)
+
+
+def _tick(cfg, impl: str, max_len: int, params, cache, tok, pos, tcount,
+          live, temps, maxnew, out, key):
+    """One fused decode+sample step; everything stays on device.
+
+    tok (n,1) int32 last token per slot; pos (n,) cache index; tcount (n,)
+    tokens emitted per request; live (n,) bool; temps (n,) f32 per-request
+    temperature (<=0 greedy); maxnew (n,) int32; out (n, max_len) emitted
+    token ring.  Dead slots decode garbage rows that are masked out —
+    batch rows are computed independently, so live rows are bit-identical
+    to the host loop.
+    """
+    with qz.use_impl(impl):
+        logits, cache = R.decode_step(cfg, params, dict(cache, index=pos),
+                                      tok)
+    key, sub = jax.random.split(key)
+    nxt = _choose_tokens(logits, temps, sub)
+    rows = jnp.arange(tok.shape[0])
+    col = jnp.clip(tcount, 0, out.shape[1] - 1)
+    out = out.at[rows, col].set(jnp.where(live, nxt, out[rows, col]))
+    tok = jnp.where(live[:, None], nxt[:, None], tok)
+    pos = jnp.where(live, pos + 1, pos)
+    tcount = jnp.where(live, tcount + 1, tcount)
+    live = live & (tcount < maxnew) & (pos < max_len - 1)
+    return cache, tok, pos, tcount, live, out, key
 
 
 class ServeEngine:
     def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 512,
-                 seed: int = 0):
+                 seed: int = 0, fast_path: bool = True, impl: str = "auto",
+                 ticks_per_sync: int = 1):
+        if impl == "auto":
+            impl = "pallas" if any(d.platform == "tpu"
+                                   for d in jax.devices()) else "xla"
+        assert impl in ("xla", "pallas"), impl
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_len = n_slots, max_len
+        self.fast_path, self.impl = fast_path, impl
+        self.ticks_per_sync = max(1, ticks_per_sync)
         self.key = jax.random.PRNGKey(seed)
         self.cache = R.init_cache(cfg, n_slots, max_len)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)
         self.queue: List[Request] = []
         self._uid = 0
+        self.host_syncs = 0           # device->host pulls (perf counter)
+        self._axes = _batch_axes(cfg, max_len)
 
-        self._decode = jax.jit(
-            lambda p, c, t: R.decode_step(cfg, p, c, t))
-        self._prefill = jax.jit(
-            lambda p, b, c: R.prefill(cfg, p, b, c))
+        self._dparams = R.prepare_decode_params(cfg, params) \
+            if fast_path else params
+
+        def _with_impl(fn):
+            def wrapped(*a):
+                with qz.use_impl(impl):
+                    return fn(*a)
+            return wrapped
+
+        self._decode = jax.jit(_with_impl(
+            lambda p, c, t: R.decode_step(cfg, p, c, t)))
+        self._prefill = jax.jit(_with_impl(
+            lambda p, b, c: R.prefill(cfg, p, b, c)))
+        self._tick = jax.jit(partial(_tick, cfg, impl, max_len))
+
+        if fast_path:
+            # per-slot cache index from the start (keeps the tick jit
+            # cache stable: decode always sees a (n_slots,) index)
+            self.cache = dict(self.cache,
+                              index=jnp.zeros((n_slots,), jnp.int32))
+            self._tok = jnp.zeros((n_slots, 1), jnp.int32)
+            self._pos = jnp.zeros((n_slots,), jnp.int32)
+            self._tcount = jnp.zeros((n_slots,), jnp.int32)
+            self._live = jnp.zeros((n_slots,), bool)
+            self._temps = jnp.zeros((n_slots,), jnp.float32)
+            self._maxnew = jnp.zeros((n_slots,), jnp.int32)
+            self._out = jnp.zeros((n_slots, max_len), jnp.int32)
+            self._dkey = jax.random.PRNGKey(seed + 1)
 
     # ------------------------------------------------------------------ #
     def submit(self, prompt, max_new_tokens: int = 32,
@@ -75,7 +174,51 @@ class ServeEngine:
                                   max_new_tokens, temperature))
         return self._uid
 
+    # ------------------------------------------------------------------ #
+    #  Admission
+    # ------------------------------------------------------------------ #
+    def _free_slots(self) -> List[int]:
+        return [s for s in range(self.n_slots) if self.slot_req[s] is None]
+
     def _admit(self) -> None:
+        if self.fast_path:
+            self._admit_batched()
+        else:
+            self._admit_host()
+
+    def _admit_batched(self) -> None:
+        """Batched prefill admission: equal-length prompts share one call."""
+        while self.queue and self._free_slots():
+            free = self._free_slots()
+            L0 = len(self.queue[0].prompt)
+            take = [i for i, r in enumerate(self.queue)
+                    if len(r.prompt) == L0][:len(free)]
+            reqs = [self.queue[i] for i in take]
+            for i in sorted(take, reverse=True):
+                self.queue.pop(i)
+            nb = len(reqs)
+            scratch = R.init_cache(self.cfg, nb, self.max_len)
+            batch = {"tokens": jnp.asarray(
+                np.stack([r.prompt for r in reqs]))}
+            logits, scratch = self._prefill(self._dparams, batch, scratch)
+            temps = jnp.asarray([r.temperature for r in reqs], jnp.float32)
+            self.key, sub = jax.random.split(self.key)
+            first = _choose_tokens(logits, temps, sub)
+            for b, req in enumerate(reqs):
+                s = free[b]
+                self.cache = _slot_write(self.cache, scratch, self._axes,
+                                         s, b)
+                self.slot_req[s] = req
+                self.slot_pos[s] = len(req.prompt)
+                self._tok = self._tok.at[s, 0].set(first[b])
+                self._out = self._out.at[s, 0].set(first[b])
+                self._pos = self._pos.at[s].set(len(req.prompt))
+                self._tcount = self._tcount.at[s].set(1)
+                self._live = self._live.at[s].set(True)
+                self._temps = self._temps.at[s].set(req.temperature)
+                self._maxnew = self._maxnew.at[s].set(req.max_new_tokens)
+
+    def _admit_host(self) -> None:
         for slot in range(self.n_slots):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
@@ -84,15 +227,17 @@ class ServeEngine:
             batch = {"tokens": jnp.asarray(req.prompt[None, :])}
             logits, scratch = self._prefill(self.params, batch, scratch)
             tok = self._sample(logits, req.temperature)[0]
+            self.host_syncs += 1
             req.out_tokens.append(int(tok))
             # splice the prefilled cache into the pool at `slot`
-            idx = {k: v for k, v in scratch.items() if k != "index"}
-            pool = {k: v for k, v in self.cache.items() if k != "index"}
-            pool = _slot_write(pool, idx, slot)
-            self.cache = dict(pool, index=self.cache["index"])
+            self.cache = _slot_write(self.cache, scratch, self._axes,
+                                     slot, 0)
             self.slot_req[slot] = req
             self.slot_pos[slot] = len(req.prompt)
 
+    # ------------------------------------------------------------------ #
+    #  Sampling (host path)
+    # ------------------------------------------------------------------ #
     def _sample(self, logits, temperature: float):
         if temperature <= 0.0:
             return np.asarray(jnp.argmax(logits, axis=-1))
@@ -100,23 +245,82 @@ class ServeEngine:
         return np.asarray(jax.random.categorical(
             sub, logits / temperature, axis=-1))
 
+    def _sample_slots(self, logits, temps: np.ndarray):
+        """Per-slot sampling honoring each request's temperature.
+
+        All-greedy batches skip the key split (keeps the seed RNG stream
+        untouched, so greedy runs are bit-reproducible)."""
+        if not (temps > 0).any():
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(_choose_tokens(
+            logits, jnp.asarray(temps, jnp.float32), sub))
+
+    # ------------------------------------------------------------------ #
+    #  Decode ticks
     # ------------------------------------------------------------------ #
     def step(self) -> int:
-        """One engine tick: admit, decode one token for every live slot."""
+        """One engine tick: admit, decode one token for every live slot.
+
+        The fast path runs ``ticks_per_sync`` jitted ticks before the
+        completion-check pull; the return value is then an upper bound on
+        tokens emitted (exact at the default of 1).
+        """
         self._admit()
+        if self.fast_path:
+            return self._step_device()
+        return self._step_host()
+
+    def _step_device(self) -> int:
+        live_before = sum(r is not None for r in self.slot_req)
+        if live_before == 0:
+            return 0
+        ticks = 0
+        for _ in range(self.ticks_per_sync):
+            (self.cache, self._tok, self._pos, self._tcount, self._live,
+             self._out, self._dkey) = self._tick(
+                self._dparams, self.cache, self._tok, self._pos,
+                self._tcount, self._live, self._temps, self._maxnew,
+                self._out, self._dkey)
+            ticks += 1
+        self._harvest()
+        return live_before * ticks
+
+    def _harvest(self) -> None:
+        """Completion check: one pull of the live mask + counters."""
+        live, tcount, pos = jax.device_get(
+            (self._live, self._tcount, self._pos))
+        self.host_syncs += 1
+        finished = [s for s in range(self.n_slots)
+                    if self.slot_req[s] is not None and not live[s]]
+        self.slot_pos[:] = pos
+        if not finished:
+            return
+        out = np.asarray(self._out)          # one pull for all completions
+        self.host_syncs += 1
+        for s in finished:
+            req = self.slot_req[s]
+            req.out_tokens = [int(t) for t in out[s, :tcount[s]]]
+            req.done = True
+            self.slot_req[s] = None
+
+    def _step_host(self) -> int:
         live = [s for s in range(self.n_slots)
                 if self.slot_req[s] is not None]
         if not live:
             return 0
         toks = np.zeros((self.n_slots, 1), np.int32)
+        temps = np.zeros((self.n_slots,), np.float32)
         for s in live:
             toks[s, 0] = self.slot_req[s].out_tokens[-1]
+            temps[s] = self.slot_req[s].temperature
         # per-slot positions: each slot decodes at its own cache index
         self.cache = dict(self.cache, index=jnp.asarray(self.slot_pos))
         logits, self.cache = self._decode(self.params,
                                           self.cache,
                                           jnp.asarray(toks))
-        nxt = self._sample(logits, 0.0)
+        nxt = self._sample_slots(logits, temps)
+        self.host_syncs += 1
         emitted = 0
         for s in live:
             req = self.slot_req[s]
@@ -133,6 +337,10 @@ class ServeEngine:
         finished: List[Request] = []
         seen: Dict[int, Request] = {}
         for _ in range(max_ticks):
+            # queued requests are tracked before step() admits them, so
+            # even a request that finishes within one step is returned
+            for r in self.queue:
+                seen[r.uid] = r
             for s in range(self.n_slots):
                 r = self.slot_req[s]
                 if r is not None:
