@@ -16,6 +16,12 @@ measurements on a reduced RWKV6 with the paper's 3.275-bpw hybrid policy:
      carries the perf claim).
   3. HOST SYNCS — device→host pulls per generated token (fast path:
      completion checks only).
+  4. BURSTY TRACE — 32 mixed-length requests (prompt lengths spanning
+     four power-of-two buckets) arriving in bursts, served by the
+     elastic-pool bucketed-admission fast path: tokens/sec, per-request
+     queue wait (ticks), jit-recompile counts (decode-tick pool sizes +
+     prefill (rows, bucket) shapes) and pool resizes, with greedy
+     outputs asserted bit-identical to the slow host loop.
 
 Emits ``BENCH_decode.json`` at the repo root so the perf trajectory is
 tracked PR-over-PR, plus the usual CSV rows.
@@ -149,6 +155,61 @@ def _drive(cfg, params, fast_path: bool, impl: str,
             "host_syncs_per_token": eng.host_syncs / max(n_tok, 1)}
 
 
+# --------------------------------------------------------------------------- #
+#  Bursty mixed-length trace
+# --------------------------------------------------------------------------- #
+BURSTY_N_REQ = 32
+BURSTY_NEW_TOKENS = 4
+BURSTY_MAX_LEN = 64
+BURSTY_N_SLOTS = 8
+
+
+def _bursty_trace(cfg):
+    """(prompts, arrival_ticks) spanning >= 4 prompt-length buckets."""
+    rng = np.random.default_rng(11)
+    lens = [int(x) for x in rng.integers(2, 41, size=BURSTY_N_REQ)]
+    lens[:4] = [3, 12, 20, 36]          # force buckets 8/16/32/64
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in lens]
+    arrivals = sorted(int(a) for a in rng.integers(0, 10, size=BURSTY_N_REQ))
+    return prompts, arrivals
+
+
+def _drive_bursty(cfg, params, fast_path: bool, impl: str):
+    prompts, arrivals = _bursty_trace(cfg)
+    eng = ServeEngine(cfg, params, n_slots=BURSTY_N_SLOTS,
+                      max_len=BURSTY_MAX_LEN, fast_path=fast_path,
+                      impl=impl)
+    i = steps = 0
+    t0 = time.time()
+    while True:
+        while i < len(prompts) and arrivals[i] <= eng.tick_no:
+            eng.submit(prompts[i], max_new_tokens=BURSTY_NEW_TOKENS)
+            i += 1
+        emitted = eng.step()
+        steps += 1
+        assert steps < 5_000
+        if i >= len(prompts) and emitted == 0 and not eng.queue:
+            break
+    dt = time.time() - t0
+    assert len(eng.completed) == BURSTY_N_REQ, len(eng.completed)
+    n_tok = sum(len(r.out_tokens) for r in eng.completed)
+    waits = [r.queue_wait for r in eng.completed]
+    buckets = sorted({eng._bucket(len(p)) for p in prompts})
+    return {
+        "tokens": n_tok, "seconds": dt, "tokens_per_sec": n_tok / dt,
+        "steps": steps,
+        "host_syncs_per_token": eng.host_syncs / max(n_tok, 1),
+        "queue_wait_ticks": {"mean": float(np.mean(waits)),
+                             "p50": float(np.median(waits)),
+                             "max": int(max(waits))},
+        "jit_recompiles": eng.jit_recompiles,
+        "pool_resizes": eng.pool_resizes,
+        "length_buckets": buckets,
+        "outputs": {r.uid: r.out_tokens for r in eng.completed},
+    }
+
+
 def run(print_csv=print):
     t = Timer()
     cfg = decode_cfg()
@@ -188,6 +249,24 @@ def run(print_csv=print):
             f"tokens_per_sec={r['tokens_per_sec']:.2f};"
             f"host_syncs_per_token={r['host_syncs_per_token']:.3f}"))
 
+    # 4. bursty mixed-length trace: elastic pools + bucketed admission
+    bursty = {}
+    for tag, fast, impl in (("slow_xla", False, "xla"),
+                            ("fast_xla", True, "xla")):
+        bursty[tag] = _drive_bursty(cfg, qp, fast, impl)
+    assert bursty["fast_xla"]["outputs"] == bursty["slow_xla"]["outputs"], \
+        "bursty fast path diverged from the slow loop"
+    for tag, r in bursty.items():
+        r["greedy_bit_identical"] = True
+        del r["outputs"]                 # checked above; keep JSON small
+        print_csv(csv_row(
+            f"decode/bursty/{tag}",
+            r["seconds"] / max(r["tokens"], 1) * 1e6,
+            f"tokens_per_sec={r['tokens_per_sec']:.2f};"
+            f"queue_wait_mean={r['queue_wait_ticks']['mean']:.2f};"
+            f"recompiles={sum(r['jit_recompiles'].values())};"
+            f"pool_resizes={r['pool_resizes']}"))
+
     out = {
         "model": cfg.name,
         "policy_bpw": float(report.mean_bpw),
@@ -197,6 +276,10 @@ def run(print_csv=print):
                             "bound_bits_over_16_plus_eps": float(bound),
                             "pass": bool(sq_ratio <= bound)},
         "engines": engines,
+        "bursty": dict(bursty,
+                       n_requests=BURSTY_N_REQ,
+                       n_slots=BURSTY_N_SLOTS,
+                       new_tokens=BURSTY_NEW_TOKENS),
     }
     with open(OUT_JSON, "w") as f:
         json.dump(out, f, indent=2)

@@ -4,7 +4,17 @@ Trains a small model, quantizes it to ~3.3 bpw, and runs the batched
 serving engine over byte-tokenized prompts (greedy decoding).
 
     PYTHONPATH=src python examples/serve_quantized.py
+
+``--bursty`` switches the steady 6-request demo for a bursty
+mixed-length trace (24 requests whose prompt lengths span several
+power-of-two buckets, arriving in bursts): the engine pads prompts to
+length buckets for batched prefill and grows/shrinks its elastic decode
+pool with the load, reporting queue waits, pool resizes and jit
+retraces.
+
+    PYTHONPATH=src python examples/serve_quantized.py --bursty
 """
+import argparse
 import dataclasses
 
 import jax
@@ -21,7 +31,7 @@ from repro.train.optimizer import AdamWConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
 
-def main():
+def _train_and_quantize():
     cfg = dataclasses.replace(reduced(ARCHS["rwkv6-3b"]),
                               n_layers=3, vocab_size=256)
     print("training a tiny RWKV-6 ...")
@@ -38,11 +48,13 @@ def main():
     print(" ", report.summary())
     print(f"  {qz.param_bytes(state.params)/1e6:.1f} MB -> "
           f"{qz.param_bytes(qparams)/1e6:.1f} MB")
+    return cfg, qparams
 
+
+def steady(cfg, qparams):
     print("serving with continuous batching (4 slots, 6 requests) ...")
     eng = ServeEngine(cfg, qparams, n_slots=4, max_len=96)
     corpus = SyntheticCorpus(CorpusConfig(vocab_size=256))
-    rng = np.random.default_rng(0)
     for i in range(6):
         prompt = corpus.batch(i, 1, 12)["tokens"][0]
         eng.submit(prompt, max_new_tokens=16)
@@ -55,6 +67,48 @@ def main():
     n_tok = sum(len(r.out_tokens) for r in done)
     print(f"on-device decode loop: {eng.host_syncs} host syncs for "
           f"{n_tok} tokens ({eng.host_syncs / max(n_tok, 1):.2f}/token)")
+
+
+def bursty(cfg, qparams):
+    print("serving a bursty mixed-length trace "
+          "(elastic pools, bucketed prefill) ...")
+    rng = np.random.default_rng(0)
+    lens = [int(x) for x in rng.integers(3, 60, size=24)]
+    arrivals = sorted(int(a) for a in rng.integers(0, 8, size=24))
+    prompts = [rng.integers(0, 256, size=n).astype(np.int32) for n in lens]
+    eng = ServeEngine(cfg, qparams, n_slots=16, max_len=96)
+    i = 0
+    while True:
+        while i < len(prompts) and arrivals[i] <= eng.tick_no:
+            eng.submit(prompts[i], max_new_tokens=8)
+            i += 1
+        if eng.step() == 0 and i >= len(prompts) and not eng.queue:
+            break
+    done = eng.completed
+    n_tok = sum(len(r.out_tokens) for r in done)
+    waits = [r.queue_wait for r in done]
+    buckets = sorted({eng._bucket(n) for n in lens})
+    print(f"served {len(done)} requests / {n_tok} tokens")
+    print(f"  prompt-length buckets used: {buckets}")
+    print(f"  queue wait (ticks): mean {np.mean(waits):.2f} "
+          f"max {max(waits)}")
+    print(f"  pool resizes: {eng.pool_resizes} "
+          f"(final pool {eng.pool} of max {eng.n_slots})")
+    print(f"  jit retraces: {eng.jit_recompiles}")
+    print(f"  host syncs/token: {eng.host_syncs / max(n_tok, 1):.2f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bursty", action="store_true",
+                    help="bursty mixed-length arrival trace instead of "
+                         "the steady 6-request demo")
+    args = ap.parse_args()
+    cfg, qparams = _train_and_quantize()
+    if args.bursty:
+        bursty(cfg, qparams)
+    else:
+        steady(cfg, qparams)
 
 
 if __name__ == "__main__":

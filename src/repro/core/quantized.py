@@ -23,15 +23,21 @@ Dispatch rules (``matmul``):
     the number of active serving slots)
                           -> skinny-M output-stationary qmv/vqmv GEMV
                              kernels, grid (N/bn, K/bk), M padded only
-                             to the sublane (8).  Per token these read
+                             to the next f32 sublane multiple (8/16/24/
+                             32 — the elastic pool sizes are
+                             M-bucketed).  Per token these read
                              ~bits/16 of the bf16 weight bytes.
   * shapes a kernel cannot tile (tiny reduced-test matrices, N not a
     lane multiple, multi-book VQ) silently fall back to the xla path
     inside the ops wrappers.
 
-``matmul_fused`` additionally runs P same-shaped stacked SQ weights
-(e.g. RWKV r/k/v/g, stacked once offline by
-``models.rwkv6.fuse_rkvg``) in a single kernel launch at decode shapes.
+``matmul_fused`` additionally runs P same-shaped stacked weights
+(e.g. RWKV r/k/v/g, stacked once offline by ``models.rwkv6.fuse_rkvg``)
+in a single kernel launch at decode shapes.  Both container types fuse
+(qmv_fused / vqmv_fused), and a :class:`FusedHybrid` wrapper covers the
+proxy-mixed case where some projections went to SQ and the rest to VQ:
+each quantizer group launches once, so a layer whose r/k/v/g split 3 SQ
++ 1 VQ still runs two launches instead of four.
 
 The containers keep the original weight's logical shape/sharding semantics:
 codes are packed along the *input-channel* axis (axis 0), so a weight
@@ -52,9 +58,10 @@ from repro.core import packing
 _IMPL = "xla"  # module-level default; see use_impl()
 
 # Activations with prod(leading dims) at or below the kernels' skinny-M
-# capacity (kernels.qmv/vqmv ops.DECODE_M_MAX = f32 sublane = 8) ride
-# the decode GEMV schedule; the threshold is read off the ops modules so
-# there is a single source of truth.
+# capacity (kernels.qmv/vqmv ops.DECODE_M_MAX = 4 sublanes = 32, the
+# widest elastic serving pool) ride the decode GEMV schedule; the
+# threshold is read off the ops modules so there is a single source of
+# truth.
 
 
 @contextmanager
@@ -197,6 +204,30 @@ QTensor = (SQTensor, VQTensor)
 
 
 # --------------------------------------------------------------------------- #
+#  Mixed-quantizer projection stack (proxy-split r/k/v/g fusion)
+# --------------------------------------------------------------------------- #
+@jax.tree_util.register_dataclass
+@dataclass
+class FusedHybrid:
+    """P same-shaped projections split between an SQ and a VQ stack.
+
+    ``sq``/``vq`` are SQTensor/VQTensor whose array fields carry a
+    leading projection axis (either may be ``None`` when empty);
+    ``sq_idx``/``vq_idx`` record which original projection positions each
+    stack holds, so ``matmul_fused`` can reassemble outputs in order.
+    """
+    sq: Optional[SQTensor]
+    vq: Optional[VQTensor]
+    sq_idx: tuple = dataclasses.field(metadata=dict(static=True))
+    vq_idx: tuple = dataclasses.field(metadata=dict(static=True))
+    shape: tuple = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_proj(self) -> int:
+        return len(self.sq_idx) + len(self.vq_idx)
+
+
+# --------------------------------------------------------------------------- #
 #  Dispatch
 # --------------------------------------------------------------------------- #
 def is_quantized(w) -> bool:
@@ -314,34 +345,54 @@ def matmul(x: jax.Array, w, out_dtype=None) -> jax.Array:
 
 
 def matmul_fused(xs: jax.Array, w) -> jax.Array:
-    """Batched matmul against P stacked same-shaped SQ weights.
+    """Batched matmul against P stacked same-shaped quantized weights.
 
-    xs: (P, ..., ic); ``w`` an SQTensor whose array fields carry a
-    leading projection axis P (see ``models.rwkv6.fuse_rkvg``); returns
-    (P, ..., oc).  At decode shapes under the pallas impl all P
-    projections run in ONE skinny-M kernel launch; at prefill shapes
+    xs: (P, ..., ic); ``w`` an SQTensor or VQTensor whose array fields
+    carry a leading projection axis P (see ``models.rwkv6.fuse_rkvg``),
+    or a :class:`FusedHybrid` splitting the P projections between the two
+    quantizers; returns (P, ..., oc).  At decode shapes under the pallas
+    impl each stack runs in ONE skinny-M kernel launch; at prefill shapes
     each projection goes through the regular ``matmul`` dispatch.  The
     xla path is bitwise identical to P separate ``matmul`` calls.
     """
-    assert isinstance(w, SQTensor), type(w)
+    if isinstance(w, FusedHybrid):
+        order = list(w.sq_idx) + list(w.vq_idx)
+        parts = []
+        if w.sq is not None:
+            parts.append(matmul_fused(xs[jnp.array(w.sq_idx)], w.sq))
+        if w.vq is not None:
+            parts.append(matmul_fused(xs[jnp.array(w.vq_idx)], w.vq))
+        ys = parts[0] if len(parts) == 1 else \
+            jnp.concatenate(parts, axis=0)
+        inv = [order.index(p) for p in range(len(order))]      # static perm
+        return ys[jnp.array(inv)] if inv != list(range(len(order))) else ys
+    assert isinstance(w, QTensor), type(w)
     P = xs.shape[0]
     assert w.packed.shape[0] == P, (w.packed.shape, P)
     m = 1
     for s in xs.shape[1:-1]:
         m *= s
     if _IMPL == "pallas":
-        from repro.kernels.qmv import ops as qmv_ops
-        if m <= qmv_ops.DECODE_M_MAX:
-            return qmv_ops.qmv_fused(xs, w)
+        if isinstance(w, SQTensor):
+            from repro.kernels.qmv import ops as qmv_ops
+            if m <= qmv_ops.DECODE_M_MAX:
+                return qmv_ops.qmv_fused(xs, w)
+        else:
+            from repro.kernels.vqmv import ops as vqmv_ops
+            if m <= vqmv_ops.DECODE_M_MAX:
+                return vqmv_ops.vqmv_fused(xs, w)
     return jnp.stack([matmul(xs[p], _fused_slice(w, p))
                       for p in range(P)])
 
 
-def _fused_slice(w: "SQTensor", p: int) -> "SQTensor":
-    """Per-projection view of a fused (leading-P) SQTensor."""
-    return SQTensor(packed=w.packed[p], scales=w.scales[p],
-                    biases=w.biases[p], shape=w.shape, bits=w.bits,
-                    group=w.group)
+def _fused_slice(w, p: int):
+    """Per-projection view of a fused (leading-P) SQ/VQTensor."""
+    if isinstance(w, SQTensor):
+        return SQTensor(packed=w.packed[p], scales=w.scales[p],
+                        biases=w.biases[p], shape=w.shape, bits=w.bits,
+                        group=w.group)
+    return VQTensor(packed=w.packed[p], codebook=w.codebook[p],
+                    shape=w.shape, d=w.d, k=w.k)
 
 
 def expert_einsum(pattern: str, x: jax.Array, w) -> jax.Array:

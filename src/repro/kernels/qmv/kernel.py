@@ -20,7 +20,13 @@ pipeline across projections; the activation may be shared (one x for all
 P) or stacked per projection (RWKV ddlerp produces a distinct mix per
 projection).
 
-Constraints: 32 | bk, group | bk, 128 | bn, M <= 8 (ops layer pads).
+Both entry points are M-bucketed for the elastic serving pools: M is
+padded to the next f32 sublane multiple (8, 16, 24, 32) up to
+:data:`M_MAX`, so decode ticks over pool sizes {1, 4, 8, 16, 32} all ride
+the same output-stationary schedule instead of falling off a cliff onto
+the prefill-shaped qmm at M > 8.
+
+Constraints: 32 | bk, group | bk, 128 | bn, M <= 32 (ops layer pads).
 """
 from __future__ import annotations
 
@@ -35,6 +41,12 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.qmm.kernel import LANES, _unpack_planes
 
 SUBLANE = 8          # f32 sublane: the only M padding the GEMV pays for
+M_MAX = 4 * SUBLANE  # widest decode pool the GEMV schedule serves (32)
+
+
+def _pad_m(M: int) -> int:
+    """Next sublane multiple >= M (the M-bucket the kernel runs at)."""
+    return -(-M // SUBLANE) * SUBLANE
 
 
 def _dequant_tile(words, s, b, *, bits, group, bk, dtype):
@@ -72,11 +84,12 @@ def qmv_pallas(x: jax.Array, packed: jax.Array, scales: jax.Array,
                biases: jax.Array, *, bits: int, group: int,
                K: int, N: int, bn: int = 0, bk: int = 0,
                interpret: bool = False) -> jax.Array:
-    """x: (M<=8, K); packed: (bits, K/32, N) uint32; scales: (K/group, N)."""
+    """x: (M<=32, K); packed: (bits, K/32, N) uint32; scales: (K/group, N)."""
     M = x.shape[0]
-    assert M <= SUBLANE, M
-    if M != SUBLANE:
-        x = jnp.pad(x, ((0, SUBLANE - M), (0, 0)))
+    assert M <= M_MAX, M
+    mp = _pad_m(M)
+    if M != mp:
+        x = jnp.pad(x, ((0, mp - M), (0, 0)))
     if bk == 0:
         bk = max(group, 256)
     if bn == 0:
@@ -90,14 +103,14 @@ def qmv_pallas(x: jax.Array, packed: jax.Array, scales: jax.Array,
         functools.partial(_qmv_kernel, bits=bits, group=group, bk=bk, nk=nk),
         grid=(N // bn, nk),
         in_specs=[
-            pl.BlockSpec((SUBLANE, bk), lambda j, k: (0, k)),
+            pl.BlockSpec((mp, bk), lambda j, k: (0, k)),
             pl.BlockSpec((bits, bk // LANES, bn), lambda j, k: (0, k, j)),
             pl.BlockSpec((bk // group, bn), lambda j, k: (k, j)),
             pl.BlockSpec((bk // group, bn), lambda j, k: (k, j)),
         ],
-        out_specs=pl.BlockSpec((SUBLANE, bn), lambda j, k: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((SUBLANE, N), x.dtype),
-        scratch_shapes=[pltpu.VMEM((SUBLANE, bn), jnp.float32)],
+        out_specs=pl.BlockSpec((mp, bn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((mp, bn), jnp.float32)],
         interpret=interpret,
     )(x, packed, scales, biases)
     return y[:M]
@@ -130,7 +143,7 @@ def qmv_fused_pallas(x: jax.Array, packed: jax.Array, scales: jax.Array,
                      interpret: bool = False) -> jax.Array:
     """P stacked projections of one decode activation, single launch.
 
-    x: (M<=8, K) shared or (P, M<=8, K) per-projection;
+    x: (M<=32, K) shared or (P, M<=32, K) per-projection;
     packed: (P, bits, K/32, N); scales/biases: (P, K/group, N).
     Returns (P, M, N).
     """
@@ -139,9 +152,10 @@ def qmv_fused_pallas(x: jax.Array, packed: jax.Array, scales: jax.Array,
         x = jnp.broadcast_to(x[None], (P,) + x.shape)
     assert x.shape[0] == P, (x.shape, P)
     M = x.shape[1]
-    assert M <= SUBLANE, M
-    if M != SUBLANE:
-        x = jnp.pad(x, ((0, 0), (0, SUBLANE - M), (0, 0)))
+    assert M <= M_MAX, M
+    mp = _pad_m(M)
+    if M != mp:
+        x = jnp.pad(x, ((0, 0), (0, mp - M), (0, 0)))
     if bk == 0:
         bk = max(group, 256)
     if bn == 0:
@@ -156,15 +170,15 @@ def qmv_fused_pallas(x: jax.Array, packed: jax.Array, scales: jax.Array,
                           bk=bk, nk=nk),
         grid=(P, N // bn, nk),
         in_specs=[
-            pl.BlockSpec((1, SUBLANE, bk), lambda p, j, k: (p, 0, k)),
+            pl.BlockSpec((1, mp, bk), lambda p, j, k: (p, 0, k)),
             pl.BlockSpec((1, bits, bk // LANES, bn),
                          lambda p, j, k: (p, 0, k, j)),
             pl.BlockSpec((1, bk // group, bn), lambda p, j, k: (p, k, j)),
             pl.BlockSpec((1, bk // group, bn), lambda p, j, k: (p, k, j)),
         ],
-        out_specs=pl.BlockSpec((1, SUBLANE, bn), lambda p, j, k: (p, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((P, SUBLANE, N), x.dtype),
-        scratch_shapes=[pltpu.VMEM((SUBLANE, bn), jnp.float32)],
+        out_specs=pl.BlockSpec((1, mp, bn), lambda p, j, k: (p, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((P, mp, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((mp, bn), jnp.float32)],
         interpret=interpret,
     )(x, packed, scales, biases)
     return y[:, :M]

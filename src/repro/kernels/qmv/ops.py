@@ -10,11 +10,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.qmv.kernel import SUBLANE, qmv_fused_pallas, qmv_pallas
+from repro.kernels.qmv.kernel import M_MAX, qmv_fused_pallas, qmv_pallas
 
 _INTERPRET = not any(d.platform == "tpu" for d in jax.devices())
 
-DECODE_M_MAX = SUBLANE     # rows the GEMV schedule handles without tiling M
+DECODE_M_MAX = M_MAX   # rows the M-bucketed GEMV schedule serves (32)
 
 
 def tileable(K: int, N: int, bits: int, group: int) -> bool:
@@ -24,7 +24,7 @@ def tileable(K: int, N: int, bits: int, group: int) -> bool:
 
 
 def qmv(x: jax.Array, w) -> jax.Array:
-    """x: (..., K) @ SQTensor(K, N) -> (..., N), M = prod(lead) <= 8."""
+    """x: (..., K) @ SQTensor(K, N) -> (..., N), M = prod(lead) <= 32."""
     K, N = w.shape
     lead = x.shape[:-1]
     M = 1

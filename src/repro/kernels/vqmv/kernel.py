@@ -1,15 +1,24 @@
 """Pallas TPU kernel: skinny-M fused codebook-dequant (VQ) GEMV.
 
-    y = x @ codebook-expand(planes, codebook)      with M <= 8
+    y = x @ codebook-expand(planes, codebook)      with M <= 32
 
 Output-stationary decode schedule, same rationale as ``kernels/qmv``:
-grid (N/bn, K/bk) with K innermost, M padded only to the f32 sublane (8),
-wide ``bn``, (8, bn) f32 VMEM accumulator held across the K sweep.  The
+grid (N/bn, K/bk) with K innermost, M padded to the next f32 sublane
+multiple (8, 16, 24, 32 — the elastic serving pools are M-bucketed),
+wide ``bn``, (M, bn) f32 VMEM accumulator held across the K sweep.  The
 codebook (2^k × d, a few KiB) is pinned whole in VMEM via a
 constant-index BlockSpec; index planes stream HBM→VMEM, so per decoded
 token the kernel reads ``k/(16·d)`` of the bf16 baseline's weight bytes.
 
-Constraints: 32·d | bk, 128 | bn, single codebook (n_books == 1).
+A fused multi-projection variant (:func:`vqmv_fused_pallas`) runs P
+same-shaped VQ weights (e.g. RWKV r/k/v/g projections that the proxy
+assigned to vector quantization) in ONE kernel launch over grid
+(P, N/bn, K/bk) — the VQ counterpart of ``qmv_fused_pallas``.  Each
+projection carries its own codebook, pinned per grid-p step; the
+activation may be shared (one x for all P) or stacked per projection.
+
+Constraints: 32·d | bk, 128 | bn, single codebook per projection
+(n_books == 1), M <= 32 (ops layer pads).
 """
 from __future__ import annotations
 
@@ -22,8 +31,17 @@ from jax.experimental.pallas import tpu as pltpu
 
 # one index-plane unpack convention across prefill and decode kernels
 from repro.kernels.vqmm.kernel import LANES, _unpack_idx
+# one M-bucketing policy across the SQ and VQ decode GEMVs
+from repro.kernels.qmv.kernel import M_MAX, SUBLANE, _pad_m
 
-SUBLANE = 8
+
+def _expand_tile(idx_words, cb, *, k: int, d: int, bk: int, dtype):
+    """Unpack one (bk, bn) weight tile from index planes + codebook."""
+    bkv = bk // d
+    idx = _unpack_idx(idx_words, k, bkv)                       # (bkv, bn)
+    vecs = cb[idx]                                             # (bkv, bn, d)
+    bn = idx.shape[1]
+    return vecs.transpose(0, 2, 1).reshape(bk, bn).astype(dtype)
 
 
 def _vqmv_kernel(x_ref, i_ref, cb_ref, o_ref, acc_ref, *,
@@ -34,12 +52,8 @@ def _vqmv_kernel(x_ref, i_ref, cb_ref, o_ref, acc_ref, *,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    bkv = bk // d
-    idx = _unpack_idx(i_ref[...], k, bkv)                      # (bkv, bn)
-    cb = cb_ref[0]                                             # (2^k, d) VMEM
-    vecs = cb[idx]                                             # (bkv, bn, d)
-    bn = idx.shape[1]
-    w = vecs.transpose(0, 2, 1).reshape(bk, bn).astype(x_ref.dtype)
+    w = _expand_tile(i_ref[...], cb_ref[0], k=k, d=d, bk=bk,
+                     dtype=x_ref.dtype)
     acc_ref[...] += jnp.dot(x_ref[...], w,
                             preferred_element_type=jnp.float32)
 
@@ -51,11 +65,12 @@ def _vqmv_kernel(x_ref, i_ref, cb_ref, o_ref, acc_ref, *,
 def vqmv_pallas(x: jax.Array, packed: jax.Array, codebook: jax.Array, *,
                 k: int, d: int, K: int, N: int, bn: int = 0,
                 bk: int = 0, interpret: bool = False) -> jax.Array:
-    """x: (M<=8, K); packed: (k, (K/d)/32, N); codebook: (1, 2^k, d)."""
+    """x: (M<=32, K); packed: (k, (K/d)/32, N); codebook: (1, 2^k, d)."""
     M = x.shape[0]
-    assert M <= SUBLANE, M
-    if M != SUBLANE:
-        x = jnp.pad(x, ((0, SUBLANE - M), (0, 0)))
+    assert M <= M_MAX, M
+    mp = _pad_m(M)
+    if M != mp:
+        x = jnp.pad(x, ((0, mp - M), (0, 0)))
     if bk == 0:
         bk = 256 if K % 256 == 0 else K
     if bn == 0:
@@ -69,14 +84,79 @@ def vqmv_pallas(x: jax.Array, packed: jax.Array, codebook: jax.Array, *,
         functools.partial(_vqmv_kernel, k=k, d=d, bk=bk, nk=nk),
         grid=(N // bn, nk),
         in_specs=[
-            pl.BlockSpec((SUBLANE, bk), lambda j, kk: (0, kk)),
+            pl.BlockSpec((mp, bk), lambda j, kk: (0, kk)),
             pl.BlockSpec((k, bk // d // LANES, bn),
                          lambda j, kk: (0, kk, j)),
             pl.BlockSpec((1, nK, d), lambda j, kk: (0, 0, 0)),  # pinned
         ],
-        out_specs=pl.BlockSpec((SUBLANE, bn), lambda j, kk: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((SUBLANE, N), x.dtype),
-        scratch_shapes=[pltpu.VMEM((SUBLANE, bn), jnp.float32)],
+        out_specs=pl.BlockSpec((mp, bn), lambda j, kk: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((mp, bn), jnp.float32)],
         interpret=interpret,
     )(x, packed, codebook)
     return y[:M]
+
+
+# --------------------------------------------------------------------------- #
+#  Fused multi-projection variant
+# --------------------------------------------------------------------------- #
+def _vqmv_fused_kernel(x_ref, i_ref, cb_ref, o_ref, acc_ref, *,
+                       k: int, d: int, bk: int, nk: int):
+    kk = pl.program_id(2)                      # grid (P, N/bn, K/bk)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _expand_tile(i_ref[0], cb_ref[0, 0], k=k, d=d, bk=bk,
+                     dtype=x_ref.dtype)
+    acc_ref[...] += jnp.dot(x_ref[0], w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def vqmv_fused_pallas(x: jax.Array, packed: jax.Array, codebook: jax.Array,
+                      *, k: int, d: int, K: int, N: int, bn: int = 0,
+                      bk: int = 0, interpret: bool = False) -> jax.Array:
+    """P stacked VQ projections of one decode activation, single launch.
+
+    x: (M<=32, K) shared or (P, M<=32, K) per-projection;
+    packed: (P, k, (K/d)/32, N); codebook: (P, 1, 2^k, d).
+    Returns (P, M, N).
+    """
+    P = packed.shape[0]
+    if x.ndim == 2:
+        x = jnp.broadcast_to(x[None], (P,) + x.shape)
+    assert x.shape[0] == P, (x.shape, P)
+    M = x.shape[1]
+    assert M <= M_MAX, M
+    mp = _pad_m(M)
+    if M != mp:
+        x = jnp.pad(x, ((0, 0), (0, mp - M), (0, 0)))
+    if bk == 0:
+        bk = 256 if K % 256 == 0 else K
+    if bn == 0:
+        bn = next(b for b in (512, 256, 128) if N % b == 0)
+    assert K % bk == 0 and bk % (LANES * d) == 0, (K, bk, d)
+    assert N % bn == 0 and bn % 128 == 0, (N, bn)
+    nk = K // bk
+    nK = 2 ** k
+
+    y = pl.pallas_call(
+        functools.partial(_vqmv_fused_kernel, k=k, d=d, bk=bk, nk=nk),
+        grid=(P, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((1, mp, bk), lambda p, j, kk: (p, 0, kk)),
+            pl.BlockSpec((1, k, bk // d // LANES, bn),
+                         lambda p, j, kk: (p, 0, kk, j)),
+            pl.BlockSpec((1, 1, nK, d), lambda p, j, kk: (p, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, mp, bn), lambda p, j, kk: (p, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((P, mp, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((mp, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, packed, codebook)
+    return y[:, :M]

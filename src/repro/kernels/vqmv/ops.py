@@ -1,14 +1,23 @@
-"""jit'd wrapper: skinny-M VQTensor GEMV through the Pallas vqmv kernel."""
+"""jit'd wrappers: skinny-M VQTensor GEMV through the Pallas vqmv kernels.
+
+``vqmv`` is the decode-shape entry point that ``core/quantized.matmul``
+dispatches to when the effective M (product of leading activation dims)
+is at most :data:`DECODE_M_MAX`; ``vqmv_fused`` runs P stacked same-shape
+VQ projections (RWKV r/k/v/g) in one launch — the VQ counterpart of
+``qmv.ops.qmv_fused``.  Shapes the kernels cannot tile fall back to the
+XLA dequant path, mirroring qmm/vqmm's contract.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.vqmv.kernel import LANES, SUBLANE, vqmv_pallas
+from repro.kernels.vqmv.kernel import (LANES, M_MAX, vqmv_fused_pallas,
+                                       vqmv_pallas)
 
 _INTERPRET = not any(d.platform == "tpu" for d in jax.devices())
 
-DECODE_M_MAX = SUBLANE
+DECODE_M_MAX = M_MAX   # rows the M-bucketed GEMV schedule serves (32)
 
 
 def tileable(K: int, N: int, d: int, n_books: int) -> bool:
@@ -19,7 +28,7 @@ def tileable(K: int, N: int, d: int, n_books: int) -> bool:
 
 
 def vqmv(x: jax.Array, w) -> jax.Array:
-    """x: (..., K) @ VQTensor(K, N) -> (..., N), M = prod(lead) <= 8."""
+    """x: (..., K) @ VQTensor(K, N) -> (..., N), M = prod(lead) <= 32."""
     K, N = w.shape
     lead = x.shape[:-1]
     M = 1
@@ -33,3 +42,31 @@ def vqmv(x: jax.Array, w) -> jax.Array:
     y = vqmv_pallas(x2, w.packed, w.codebook.astype(jnp.float32),
                     k=w.k, d=w.d, K=K, N=N, interpret=_INTERPRET)
     return y.reshape(lead + (N,))
+
+
+def vqmv_fused(x: jax.Array, w, shared: bool = False) -> jax.Array:
+    """x: (P, ..., K) (or (..., K) with ``shared=True``) -> (P, ..., N).
+
+    ``w`` is a VQTensor whose arrays carry a leading projection axis:
+    packed (P, k, (K/d)/32, N), codebook (P, 1, 2^k, d); ``w.shape``
+    stays the per-projection (K, N).  ``shared=True`` decodes one
+    activation against all P weights without copying it P times.
+    """
+    K, N = w.shape
+    P = w.packed.shape[0]
+    if not shared:
+        assert x.shape[0] == P, (x.shape, P)
+    lead = x.shape[:-1] if shared else x.shape[1:-1]
+    M = 1
+    for s in lead:
+        M *= s
+    assert M <= DECODE_M_MAX, (M, DECODE_M_MAX)
+    x2 = x.reshape((M, K) if shared else (P, M, K))
+    if not tileable(K, N, w.d, w.codebook.shape[-3]):
+        wd = w.dequant().astype(x.dtype)                       # (P, K, N)
+        pat = "mk,pkn->pmn" if shared else "pmk,pkn->pmn"
+        y = jnp.einsum(pat, x2, wd)
+        return y.reshape((P,) + lead + (N,))
+    y = vqmv_fused_pallas(x2, w.packed, w.codebook.astype(jnp.float32),
+                          k=w.k, d=w.d, K=K, N=N, interpret=_INTERPRET)
+    return y.reshape((P,) + lead + (N,))

@@ -13,3 +13,14 @@ def vqmv_ref(x, packed, codebook, *, k: int, d: int, K: int,
     vecs = codebook[0][idx]                                    # (K/d, N, d)
     w = vecs.transpose(0, 2, 1).reshape(K, N).astype(x.dtype)
     return jnp.matmul(x, w)
+
+
+def vqmv_fused_ref(x, packed, codebook, *, k: int, d: int, K: int,
+                   N: int) -> jax.Array:
+    """x: (M,K) or (P,M,K); packed: (P,k,(K/d)/32,N) -> (P,M,N)."""
+    P = packed.shape[0]
+    if x.ndim == 2:
+        x = jnp.broadcast_to(x[None], (P,) + x.shape)
+    return jnp.stack([
+        vqmv_ref(x[p], packed[p], codebook[p], k=k, d=d, K=K, N=N)
+        for p in range(P)])

@@ -21,6 +21,10 @@ from repro.models import layers as L
 from repro.models import mamba
 from repro.models.sharding import constrain
 
+# prefill accepts batch["lengths"]: attention K/V rows zeroed at pads,
+# mamba pad steps run with dt = 0 and a per-row conv-state gather
+SUPPORTS_RAGGED_PREFILL = True
+
 
 def _period_layout(cfg):
     P = cfg.attn_every
@@ -72,11 +76,13 @@ def _take(tree, i):
     return jax.tree.map(lambda t: t[i], tree)
 
 
-def _period_apply(cfg, p, x, positions, *, caches=None, cache_index=None):
+def _period_apply(cfg, p, x, positions, *, caches=None, cache_index=None,
+                  mask=None, lengths=None):
     """One period (unrolled sublayers).
 
     caches: None (train) or dict with 'kv' (pair), 'ssm' (n_mamba,B,di,ds),
-    'conv' (n_mamba,B,dc-1,di). Returns (x, aux, new_caches).
+    'conv' (n_mamba,B,dc-1,di). ``mask``/``lengths`` carry a right-padded
+    mixed-length prefill. Returns (x, aux, new_caches).
     """
     mixers, ffns = _period_layout(cfg)
     aux = jnp.float32(0.0)
@@ -94,7 +100,8 @@ def _period_apply(cfg, p, x, positions, *, caches=None, cache_index=None):
             else:
                 h, new_kv = L.gqa_apply(cfg, p["attn"], xn, positions,
                                         cache=caches["kv"],
-                                        cache_index=cache_index)
+                                        cache_index=cache_index,
+                                        kv_mask=mask)
         else:
             mp = _take(p["mamba"], mi)
             if caches is None:
@@ -102,7 +109,8 @@ def _period_apply(cfg, p, x, positions, *, caches=None, cache_index=None):
             else:
                 h, ns, nc = mamba.apply(
                     cfg, mp, xn, ssm_state=caches["ssm"][mi],
-                    conv_state=caches["conv"][mi])
+                    conv_state=caches["conv"][mi], mask=mask,
+                    lengths=lengths)
                 new_ssm.append(ns)
                 new_conv.append(nc)
             mi += 1
@@ -177,14 +185,15 @@ def init_cache(cfg, batch_size: int, max_len: int) -> Dict[str, Any]:
     }
 
 
-def _cached_stack(cfg, params, cache, x, positions, cache_index):
+def _cached_stack(cfg, params, cache, x, positions, cache_index,
+                  mask=None, lengths=None):
     def body(carry, scanned):
         x, aux = carry
         blk, kv_k, kv_v, ssm, conv = scanned
         y, a, ncaches = _period_apply(
             cfg, blk, x, positions,
             caches={"kv": (kv_k, kv_v), "ssm": ssm, "conv": conv},
-            cache_index=cache_index)
+            cache_index=cache_index, mask=mask, lengths=lengths)
         return (y, aux + a), ncaches
 
     (x, aux), ncaches = lax.scan(
@@ -203,9 +212,11 @@ def prefill(cfg, params, batch, cache) -> Tuple[jax.Array, Dict]:
     S = x.shape[1]
     positions = jnp.arange(S, dtype=jnp.int32)
     x = constrain(x, "dp", None, None)
-    h, new_cache = _cached_stack(cfg, params, cache, x, positions, 0)
-    new_cache["index"] = jnp.int32(S)
-    return logits(cfg, params, h[:, -1:, :])[:, 0, :], new_cache
+    lengths, mask, last_idx = L.ragged_args(batch, S)
+    h, new_cache = _cached_stack(cfg, params, cache, x, positions, 0,
+                                 mask=mask, lengths=lengths)
+    new_cache["index"] = jnp.int32(S) if lengths is None else lengths
+    return logits(cfg, params, L.last_real(h, last_idx))[:, 0, :], new_cache
 
 
 def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:

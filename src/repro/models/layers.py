@@ -19,6 +19,35 @@ from repro.core import quantized as q
 
 Params = Dict[str, Any]
 
+
+# --------------------------------------------------------------------------- #
+#  Ragged (right-padded mixed-length) prefill support
+# --------------------------------------------------------------------------- #
+def ragged_args(batch, S: int):
+    """(lengths, mask, last_idx) for a right-padded prefill batch.
+
+    ``batch['lengths']`` ((B,) int32, true prompt lengths) is optional;
+    returns (None, None, None) when absent so equal-length prefill keeps
+    its original (bitwise) code path.  ``mask`` is (B, S) bool over valid
+    positions; ``last_idx`` is (B, 1, 1) for take_along_axis gathers of
+    each row's last real position.
+    """
+    lengths = batch.get("lengths")
+    if lengths is None:
+        return None, None, None
+    lengths = jnp.asarray(lengths, jnp.int32)
+    mask = jnp.arange(S, dtype=jnp.int32)[None, :] < lengths[:, None]
+    last_idx = (lengths - 1)[:, None, None]
+    return lengths, mask, last_idx
+
+
+def last_real(h, last_idx):
+    """h: (B, S, d) -> (B, 1, d) at each row's last real position."""
+    if last_idx is None:
+        return h[:, -1:, :]
+    return jnp.take_along_axis(h, last_idx, axis=1)
+
+
 # --------------------------------------------------------------------------- #
 #  Init helpers
 # --------------------------------------------------------------------------- #
@@ -336,10 +365,14 @@ def gqa_init(cfg, key) -> Params:
 
 
 def gqa_apply(cfg, p: Params, x, positions, *, cache=None, cache_index=None,
-              causal=True, kv_source=None):
+              causal=True, kv_source=None, kv_mask=None):
     """Full-sequence (cache=None) or cached decode/prefill attention.
 
     kv_source: cross-attention source (whisper); keys/values from it.
+    kv_mask: (B, S) bool over valid positions of a right-padded prefill;
+    K/V at padded positions are written as zeros so the cache matches an
+    unpadded prefill exactly (real queries never attend them: padding is
+    on the right and masking is causal).
     Returns (out, new_kv) where new_kv is the updated flattened K,V pair
     (or None when cache is None).
     """
@@ -355,6 +388,9 @@ def gqa_apply(cfg, p: Params, x, positions, *, cache=None, cache_index=None,
     if kv_source is None and cfg.use_rope:                      # self-attn rope
         qh = apply_rope(qh, positions, cfg.rope_theta)
         kh = apply_rope(kh, positions, cfg.rope_theta)
+    if kv_mask is not None:
+        kh = jnp.where(kv_mask[:, :, None, None], kh, 0.0)
+        vh = jnp.where(kv_mask[:, :, None, None], vh, 0.0)
 
     new_kv = None
     if cache is not None:
@@ -398,8 +434,12 @@ def mla_init(cfg, key) -> Params:
     return p
 
 
-def mla_apply(cfg, p: Params, x, positions, *, cache=None, cache_index=None):
-    """MLA attention.  Cache stores the latent c_kv + rope-k only."""
+def mla_apply(cfg, p: Params, x, positions, *, cache=None, cache_index=None,
+              kv_mask=None):
+    """MLA attention.  Cache stores the latent c_kv + rope-k only.
+
+    ``kv_mask`` zeroes the latent/rope cache writes at right-padded
+    prefill positions (see ``gqa_apply``)."""
     B, S, d = x.shape
     H = cfg.n_heads
     nope, rope, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -417,6 +457,9 @@ def mla_apply(cfg, p: Params, x, positions, *, cache=None, cache_index=None):
     c_kv = rms_norm(q.matmul(x, p["w_dkv"]), p["kv_norm"], cfg.norm_eps)
     k_rope = q.matmul(x, p["w_kr"]).reshape(B, S, 1, rope)
     k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    if kv_mask is not None:
+        c_kv = jnp.where(kv_mask[:, :, None], c_kv, 0.0)
+        k_rope = jnp.where(kv_mask[:, :, None, None], k_rope, 0.0)
 
     q_offset = 0
     new_cache = None

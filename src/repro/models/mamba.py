@@ -44,10 +44,13 @@ def init(cfg, key) -> Dict[str, Any]:
     }
 
 
-def _causal_conv(x, w, b, conv_state=None):
+def _causal_conv(x, w, b, conv_state=None, lengths=None):
     """Depthwise causal conv. x: (B,S,di), w: (di,dc).
 
     conv_state: (B, dc-1, di) previous inputs (decode), or None (zero pad).
+    lengths: (B,) true lengths of a right-padded batch — the outgoing
+    conv state is then gathered per row at the window ending at each
+    row's last real position (position t maps to padded-row t + dc-1).
     Returns (y, new_conv_state)."""
     B, S, di = x.shape
     dc = w.shape[1]
@@ -55,7 +58,13 @@ def _causal_conv(x, w, b, conv_state=None):
         xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
     else:
         xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
-    new_state = xp[:, -(dc - 1):, :] if dc > 1 else None
+    if dc <= 1:
+        new_state = None
+    elif lengths is None:
+        new_state = xp[:, -(dc - 1):, :]
+    else:
+        win = lengths[:, None] + jnp.arange(dc - 1, dtype=jnp.int32)[None]
+        new_state = jnp.take_along_axis(xp, win[:, :, None], axis=1)
     wf = q.dequant(w) if q.is_quantized(w) else w
     y = lax.conv_general_dilated(
         xp, wf.astype(x.dtype).T[:, None, :],        # (dc, 1, di)
@@ -96,16 +105,22 @@ def _ssm_chunked(da, dbx, C, h0, chunk: int = SSM_CHUNK):
     return y, h
 
 
-def apply(cfg, p: Dict, x, *, ssm_state=None, conv_state=None):
+def apply(cfg, p: Dict, x, *, ssm_state=None, conv_state=None, mask=None,
+          lengths=None):
     """Full-sequence (states None) or stateful decode.
 
+    ``mask``/``lengths`` describe a right-padded mixed-length prefill:
+    padded steps run with dt = 0 (state multiplier exp(0·A) = 1, input
+    contribution 0 — an exact no-op on the SSM state) and the conv state
+    window is gathered at each row's true last position.
     Returns (out (B,S,d), new_ssm_state, new_conv_state)."""
     B, S, d = x.shape
     di, ds, dr = cfg.d_inner, cfg.mamba_d_state, cfg.dt_rank
 
     xz = q.matmul(x, p["in_proj"])
     x_in, z = jnp.split(xz, 2, axis=-1)
-    x_in, new_conv = _causal_conv(x_in, p["conv_w"], p["conv_b"], conv_state)
+    x_in, new_conv = _causal_conv(x_in, p["conv_w"], p["conv_b"], conv_state,
+                                  lengths=lengths)
     x_in = jax.nn.silu(x_in)
 
     dbc = q.matmul(x_in, p["x_proj"])
@@ -114,6 +129,8 @@ def apply(cfg, p: Dict, x, *, ssm_state=None, conv_state=None):
         if q.is_quantized(p["dt_bias"]) else p["dt_bias"]
     dt = jax.nn.softplus(q.matmul(dt, p["dt_proj"]).astype(jnp.float32)
                          + dtb.astype(jnp.float32))            # (B,S,di)
+    if mask is not None:
+        dt = jnp.where(mask[:, :, None], dt, 0.0)  # pad step: exact no-op
     A_log = q.dequant(p["A_log"]) if q.is_quantized(p["A_log"]) else p["A_log"]
     A = -jnp.exp(A_log.astype(jnp.float32))                    # (di,ds)
 

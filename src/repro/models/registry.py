@@ -55,6 +55,14 @@ def decode_step(cfg, params, cache, tokens):
     return module_for(cfg).decode_step(cfg, params, cache, tokens)
 
 
+def supports_ragged_prefill(cfg) -> bool:
+    """True when the family's ``prefill`` accepts ``batch['lengths']``
+    (right-padded mixed-length prompts with exact state/cache masking).
+    The serving engine uses this to decide between bucketed mixed-length
+    admission and equal-length grouping."""
+    return getattr(module_for(cfg), "SUPPORTS_RAGGED_PREFILL", False)
+
+
 def prepare_decode_params(cfg, params):
     """Optional per-family decode-optimized weight layout (identity when
     the family defines none).  The transformed tree remains valid for

@@ -33,6 +33,10 @@ WKV_CHUNK = 32     # chunk length for the parallel form
 WKV_CHUNK_REMAT = True
 TP_CONSTRAINTS = True
 
+# prefill accepts batch["lengths"] for right-padded mixed-length prompts
+# (pad steps are made exact no-ops: decay w := 1, k := 0 — see time_mix)
+SUPPORTS_RAGGED_PREFILL = True
+
 
 # --------------------------------------------------------------------------- #
 #  Init
@@ -211,8 +215,14 @@ def _ddlerp(tm, x, x_prev):
     return outs
 
 
-def time_mix(cfg, tm, x, x_prev, state):
+def time_mix(cfg, tm, x, x_prev, state, mask=None):
     """x: (B,S,d) post-ln; x_prev: shifted x; state: (B,H,hd,hd).
+
+    ``mask`` (B,S) bool marks valid positions of a right-padded prefill
+    batch: padded steps run with decay w = 1 and k = 0, so the WKV state
+    passes through them unchanged — after S padded steps the state equals
+    the state after each row's true length (outputs at padded positions
+    are garbage and discarded by the caller).
 
     TP plan (H is rarely divisible by the model axis, so the WKV itself
     runs data-parallel only): r/k/v/g are column-parallel matmuls whose
@@ -252,6 +262,10 @@ def time_mix(cfg, tm, x, x_prev, state):
         decay_base.astype(jnp.float32) + dlo.astype(jnp.float32),
         -8.0, 6.0))                                     # log decay <= 0
     w = jnp.exp(wlog).reshape(B, S, H, hd)
+    if mask is not None:
+        m4 = mask[:, :, None, None]
+        w = jnp.where(m4, w, 1.0)          # pad step: state decays by 1
+        k = jnp.where(m4, k, 0.0)          # ... and accumulates nothing
     if TP_CONSTRAINTS:
         w = constrain(w, "dp", None, None, None)
 
@@ -287,29 +301,38 @@ def _shift(x):
     return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
 
 
-def _block_apply(cfg, blk, x, state=None, shifts=None):
-    """state: (B,H,hd,hd) or zeros; shifts: (tm_last, cm_last) (B,d) or None."""
+def _last_real(xn, last_idx):
+    """Per-row xn at the last *real* position: (B,S,d) -> (B,d)."""
+    return L.last_real(xn, last_idx)[:, 0]
+
+
+def _block_apply(cfg, blk, x, state=None, shifts=None, mask=None,
+                 last_idx=None):
+    """state: (B,H,hd,hd) or zeros; shifts: (tm_last, cm_last) (B,d) or None.
+
+    ``mask``/``last_idx`` carry the right-padded mixed-length prefill:
+    padded steps leave the WKV state untouched and the shift registers
+    are read at each row's true last position.
+    """
     B, S, d = x.shape
     H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
     xn = L.layer_norm(x, blk["ln1"]["g"], blk["ln1"]["b"], cfg.norm_eps)
     if shifts is None:
         x_prev = _shift(xn)
-        tm_last = xn[:, -1]
     else:
         x_prev = jnp.concatenate([shifts[0][:, None], xn[:, :-1]], axis=1)
-        tm_last = xn[:, -1]
+    tm_last = _last_real(xn, last_idx)
     if state is None:
         state = jnp.zeros((B, H, hd, hd), jnp.float32)
-    h, new_state = time_mix(cfg, blk["tm"], xn, x_prev, state)
+    h, new_state = time_mix(cfg, blk["tm"], xn, x_prev, state, mask=mask)
     x = x + h
 
     xn2 = L.layer_norm(x, blk["ln2"]["g"], blk["ln2"]["b"], cfg.norm_eps)
     if shifts is None:
         x_prev2 = _shift(xn2)
-        cm_last = xn2[:, -1]
     else:
         x_prev2 = jnp.concatenate([shifts[1][:, None], xn2[:, :-1]], axis=1)
-        cm_last = xn2[:, -1]
+    cm_last = _last_real(xn2, last_idx)
     x = x + channel_mix(cfg, blk["cm"], xn2, x_prev2)
     return x, new_state, (tm_last, cm_last)
 
@@ -361,11 +384,12 @@ def init_cache(cfg, batch_size: int, max_len: int) -> Dict[str, Any]:
     }
 
 
-def _cached_stack(cfg, params, cache, x):
+def _cached_stack(cfg, params, cache, x, mask=None, last_idx=None):
     def body(x, scanned):
         blk, st, s_tm, s_cm = scanned
         y, new_st, (tm_last, cm_last) = _block_apply(
-            cfg, blk, x, state=st, shifts=(s_tm, s_cm))
+            cfg, blk, x, state=st, shifts=(s_tm, s_cm), mask=mask,
+            last_idx=last_idx)
         return y, (new_st, tm_last.astype(s_tm.dtype),
                    cm_last.astype(s_cm.dtype))
 
@@ -380,9 +404,12 @@ def _cached_stack(cfg, params, cache, x):
 def prefill(cfg, params, batch, cache) -> Tuple[jax.Array, Dict]:
     x = _embed(cfg, params, batch)
     x = constrain(x, "dp", None, None)
-    h, new_cache = _cached_stack(cfg, params, cache, x)
-    new_cache["index"] = jnp.int32(x.shape[1])
-    return logits(cfg, params, h[:, -1:, :])[:, 0, :], new_cache
+    lengths, mask, last_idx = L.ragged_args(batch, x.shape[1])
+    h, new_cache = _cached_stack(cfg, params, cache, x, mask=mask,
+                                 last_idx=last_idx)
+    new_cache["index"] = jnp.int32(x.shape[1]) if lengths is None \
+        else lengths
+    return logits(cfg, params, L.last_real(h, last_idx))[:, 0, :], new_cache
 
 
 def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:
@@ -399,29 +426,69 @@ def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:
 _RKVG = ("w_r", "w_k", "w_v", "w_g")
 
 
-def fuse_rkvg(params):
-    """Stack quantized r/k/v/g projections for single-launch decode GEMV.
-
-    Returns a new param tree where each block's four SQ projection
-    containers are replaced by one ``w_rkvg`` SQTensor whose arrays carry
-    a projection axis after the layer axis: packed (L, 4, bits, ic/32,
-    oc).  The stack is materialized ONCE here (host-side, outside jit) so
-    the decode step never copies weight bytes; ``time_mix`` detects the
-    fused key.  No-op when the projections are not uniformly SQ-quantized.
-    """
-    tm = params.get("blocks", {}).get("tm", {})
-    ws = [tm.get(n) for n in _RKVG]
-    if not all(isinstance(w, q.SQTensor) for w in ws):
-        return params
+def _stack_sq(ws):
+    """Stack same-meta SQ containers on a projection axis (after layers)."""
     w0 = ws[0]
     if not all((w.shape, w.bits, w.group) == (w0.shape, w0.bits, w0.group)
                for w in ws):
-        return params
-    fused = q.SQTensor(
+        return None
+    return q.SQTensor(
         packed=jnp.stack([w.packed for w in ws], axis=1),
         scales=jnp.stack([w.scales for w in ws], axis=1),
         biases=jnp.stack([w.biases for w in ws], axis=1),
         shape=w0.shape, bits=w0.bits, group=w0.group)
+
+
+def _stack_vq(ws):
+    """Stack same-meta VQ containers on a projection axis (after layers)."""
+    w0 = ws[0]
+    if not all((w.shape, w.d, w.k, w.codebook.shape)
+               == (w0.shape, w0.d, w0.k, w0.codebook.shape) for w in ws):
+        return None
+    if w0.codebook.shape[-3] != 1:          # fused kernel: one book per proj
+        return None
+    return q.VQTensor(
+        packed=jnp.stack([w.packed for w in ws], axis=1),
+        codebook=jnp.stack([w.codebook for w in ws], axis=1),
+        shape=w0.shape, d=w0.d, k=w0.k)
+
+
+def fuse_rkvg(params):
+    """Stack quantized r/k/v/g projections for single-launch decode GEMV.
+
+    Returns a new param tree where each block's four quantized projection
+    containers are replaced by one ``w_rkvg`` stack whose arrays carry a
+    projection axis after the layer axis (e.g. SQ packed (L, P, bits,
+    ic/32, oc)).  All-SQ layers fuse into one SQTensor, all-VQ layers
+    (the proxy routed every projection to vector quantization) into one
+    VQTensor, and proxy-mixed layers into a ``quantized.FusedHybrid``
+    holding one stack per quantizer — so checkpoints fuse regardless of
+    which quantizer the proxy picked per projection.  The stacks are
+    materialized ONCE here (host-side, outside jit) so the decode step
+    never copies weight bytes; ``time_mix`` detects the fused key.
+    No-op when any projection is unquantized or stack metadata differs.
+    """
+    tm = params.get("blocks", {}).get("tm", {})
+    ws = [tm.get(n) for n in _RKVG]
+    if not all(q.is_quantized(w) for w in ws):
+        return params
+    sq_idx = tuple(i for i, w in enumerate(ws)
+                   if isinstance(w, q.SQTensor))
+    vq_idx = tuple(i for i, w in enumerate(ws)
+                   if isinstance(w, q.VQTensor))
+    sq = _stack_sq([ws[i] for i in sq_idx]) if sq_idx else None
+    vq = _stack_vq([ws[i] for i in vq_idx]) if vq_idx else None
+    if (sq_idx and sq is None) or (vq_idx and vq is None):
+        return params                       # metadata mismatch: stay unfused
+    if sq is not None and vq is not None and sq.shape != vq.shape:
+        return params
+    if not vq_idx:
+        fused = sq
+    elif not sq_idx:
+        fused = vq
+    else:
+        fused = q.FusedHybrid(sq=sq, vq=vq, sq_idx=sq_idx, vq_idx=vq_idx,
+                              shape=ws[0].shape)
     new_tm = {k: v for k, v in tm.items() if k not in _RKVG}
     new_tm["w_rkvg"] = fused
     blocks = dict(params["blocks"], tm=new_tm)

@@ -29,6 +29,10 @@ ICLR_LORA = 64
 V_LORA = 32
 GATE_LORA = 128
 
+# prefill accepts batch["lengths"] for right-padded mixed-length prompts
+# (pad steps are exact no-ops: w := 1, k := 0, kappa_hat := 0)
+SUPPORTS_RAGGED_PREFILL = True
+
 
 def _block_init(cfg, key, frac: float):
     d, ff = cfg.d_model, cfg.d_ff
@@ -127,7 +131,12 @@ def _l2norm_heads(x, H, hd):
     return xh.reshape(shp).astype(x.dtype)
 
 
-def time_mix(cfg, tm, x, x_prev, state, v_first, layer_is_first):
+def time_mix(cfg, tm, x, x_prev, state, v_first, layer_is_first,
+             mask=None):
+    """``mask`` (B,S) marks real positions of a right-padded prefill:
+    padded steps run with w = 1, k = 0 and kappa_hat = 0, so the
+    delta-rule state update S*diag(w) + S a^T b + v^T k degenerates to
+    the identity there (a = -kappa_hat, b = kappa_hat*iclr)."""
     B, S, d = x.shape
     H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
     dx = x_prev - x
@@ -165,6 +174,11 @@ def time_mix(cfg, tm, x, x_prev, state, v_first, layer_is_first):
     adapt = q.dequant(tm["adapt_k"]).reshape(-1) \
         if q.is_quantized(tm["adapt_k"]) else tm["adapt_k"]
     k = k * (1.0 + (iclr - 1.0) * adapt.astype(x.dtype))
+    if mask is not None:
+        m3 = mask[:, :, None]
+        w = jnp.where(m3, w, 1.0)
+        k = jnp.where(m3, k, 0.0)
+        kappa_hat = jnp.where(m3, kappa_hat, 0.0)
 
     shape4 = (B, S, H, hd)
     a4 = (-kappa_hat).reshape(shape4)
@@ -193,22 +207,22 @@ def _shift(x):
 
 
 def _block_apply(cfg, blk, x, v_first, layer_is_first, state=None,
-                 shifts=None):
+                 shifts=None, mask=None, last_idx=None):
     B, S, d = x.shape
     H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
     xn = L.layer_norm(x, blk["ln1"]["g"], blk["ln1"]["b"], cfg.norm_eps)
     x_prev = _shift(xn) if shifts is None else \
         jnp.concatenate([shifts[0][:, None], xn[:, :-1]], axis=1)
-    tm_last = xn[:, -1]
+    tm_last = L.last_real(xn, last_idx)[:, 0]
     if state is None:
         state = jnp.zeros((B, H, hd, hd), jnp.float32)
     h, new_state, v_first = time_mix(cfg, blk["tm"], xn, x_prev, state,
-                                     v_first, layer_is_first)
+                                     v_first, layer_is_first, mask=mask)
     x = x + h
     xn2 = L.layer_norm(x, blk["ln2"]["g"], blk["ln2"]["b"], cfg.norm_eps)
     x_prev2 = _shift(xn2) if shifts is None else \
         jnp.concatenate([shifts[1][:, None], xn2[:, :-1]], axis=1)
-    cm_last = xn2[:, -1]
+    cm_last = L.last_real(xn2, last_idx)[:, 0]
     x = x + channel_mix(cfg, blk["cm"], xn2, x_prev2)
     return x, new_state, v_first, (tm_last, cm_last)
 
@@ -262,7 +276,7 @@ def init_cache(cfg, batch_size: int, max_len: int) -> Dict[str, Any]:
     }
 
 
-def _cached_stack(cfg, params, cache, x):
+def _cached_stack(cfg, params, cache, x, mask=None, last_idx=None):
     B, S, d = x.shape
     v0 = jnp.zeros((B, S, d), x.dtype)
 
@@ -270,7 +284,8 @@ def _cached_stack(cfg, params, cache, x):
         x, v_first = carry
         blk, idx, st, s_tm, s_cm = scanned
         y, new_st, v_first, (tm_last, cm_last) = _block_apply(
-            cfg, blk, x, v_first, idx == 0, state=st, shifts=(s_tm, s_cm))
+            cfg, blk, x, v_first, idx == 0, state=st, shifts=(s_tm, s_cm),
+            mask=mask, last_idx=last_idx)
         return (y, v_first), (new_st, tm_last.astype(s_tm.dtype),
                               cm_last.astype(s_cm.dtype))
 
@@ -284,9 +299,12 @@ def _cached_stack(cfg, params, cache, x):
 
 def prefill(cfg, params, batch, cache) -> Tuple[jax.Array, Dict]:
     x = _embed(cfg, params, batch)
-    h, new_cache = _cached_stack(cfg, params, cache, x)
-    new_cache["index"] = jnp.int32(x.shape[1])
-    return logits(cfg, params, h[:, -1:, :])[:, 0, :], new_cache
+    lengths, mask, last_idx = L.ragged_args(batch, x.shape[1])
+    h, new_cache = _cached_stack(cfg, params, cache, x, mask=mask,
+                                 last_idx=last_idx)
+    new_cache["index"] = jnp.int32(x.shape[1]) if lengths is None \
+        else lengths
+    return logits(cfg, params, L.last_real(h, last_idx))[:, 0, :], new_cache
 
 
 def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:

@@ -19,6 +19,10 @@ from repro.core import quantized as q
 from repro.models import layers as L
 from repro.models.sharding import constrain
 
+# prefill accepts batch["lengths"]: right padding + causal masking keep
+# real rows exact; padded K/V cache rows are written as zeros
+SUPPORTS_RAGGED_PREFILL = True
+
 
 # --------------------------------------------------------------------------- #
 #  Init
@@ -87,7 +91,8 @@ def _block_apply(cfg, blk, x, positions, is_moe: bool):
     return x + y, aux
 
 
-def _block_apply_cached(cfg, blk, x, positions, kv, cache_index, is_moe):
+def _block_apply_cached(cfg, blk, x, positions, kv, cache_index, is_moe,
+                        kv_mask=None):
     xn = L.rms_norm(x, blk["attn_norm"], cfg.norm_eps)
     if cfg.use_mla:
         if x.shape[1] == 1:
@@ -96,10 +101,12 @@ def _block_apply_cached(cfg, blk, x, positions, kv, cache_index, is_moe):
                 cache=kv, cache_index=cache_index)
         else:
             h, new_kv = L.mla_apply(cfg, blk["attn"], xn, positions,
-                                    cache=kv, cache_index=cache_index)
+                                    cache=kv, cache_index=cache_index,
+                                    kv_mask=kv_mask)
     else:
         h, new_kv = L.gqa_apply(cfg, blk["attn"], xn, positions,
-                                cache=kv, cache_index=cache_index)
+                                cache=kv, cache_index=cache_index,
+                                kv_mask=kv_mask)
     x = x + h
     y, aux = L.ffn_apply(cfg, blk["ffn"],
                          L.rms_norm(x, blk["ffn_norm"], cfg.norm_eps), is_moe)
@@ -188,7 +195,8 @@ def init_cache(cfg, batch_size: int, max_len: int) -> Dict[str, Any]:
     return cache
 
 
-def _cached_stack(cfg, params, cache, x, positions, cache_index):
+def _cached_stack(cfg, params, cache, x, positions, cache_index,
+                  kv_mask=None):
     n_pre, main_moe = _layer_kinds(cfg)
     aux_total = jnp.float32(0.0)
     new_cache = dict(cache)
@@ -198,7 +206,8 @@ def _cached_stack(cfg, params, cache, x, positions, cache_index):
             x, aux = carry
             blk, kv = scanned
             y, new_kv, a = _block_apply_cached(
-                cfg, blk, x, positions, kv, cache_index, is_moe)
+                cfg, blk, x, positions, kv, cache_index, is_moe,
+                kv_mask=kv_mask)
             return (y, aux + a), new_kv
 
         (y, aux), new_kv = lax.scan(body, (x, jnp.float32(0.0)),
@@ -219,15 +228,21 @@ def _cached_stack(cfg, params, cache, x, positions, cache_index):
 def prefill(cfg, params, batch, cache) -> Tuple[jax.Array, Dict]:
     """Run the prompt through the model, filling the cache.
 
+    ``batch['lengths']`` (optional, (B,) int32) marks a right-padded
+    mixed-length batch: padded K/V rows are written as zeros (matching an
+    unpadded prefill of each row), per-row logits are read at each true
+    last position, and the cache index comes back per-row.
+
     Returns (last-position logits (B,V), cache)."""
     x = embed_inputs(cfg, params, batch)
     B, S, _ = x.shape
     positions = jnp.arange(S, dtype=jnp.int32)
     x = constrain(x, "dp", None, None)
+    lengths, mask, last_idx = L.ragged_args(batch, S)
     h, new_cache, _ = _cached_stack(cfg, params, cache, x, positions,
-                                    cache["index"] * 0)
-    new_cache["index"] = jnp.int32(S)
-    return logits(cfg, params, h[:, -1:, :])[:, 0, :], new_cache
+                                    cache["index"] * 0, kv_mask=mask)
+    new_cache["index"] = jnp.int32(S) if lengths is None else lengths
+    return logits(cfg, params, L.last_real(h, last_idx))[:, 0, :], new_cache
 
 
 def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:

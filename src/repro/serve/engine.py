@@ -1,11 +1,11 @@
 """Batched serving engine over (quantized) weights.
 
-Continuous batching over a fixed slot pool: requests occupy slots, decode
-steps run the whole pool each tick, finished/empty slots are refilled from
-the queue.  Works with every registry architecture: attention archs carry
-per-slot KV caches, RWKV/Mamba archs carry O(1) state (the paper's
-deployment story: quantized weights + constant-memory state = edge-sized
-serving).
+Continuous batching over an **elastic slot pool**: requests occupy slots,
+decode steps run the whole pool each tick, finished/empty slots are
+refilled from the queue.  Works with every registry architecture:
+attention archs carry per-slot KV caches, RWKV/Mamba archs carry O(1)
+state (the paper's deployment story: quantized weights + constant-memory
+state = edge-sized serving).
 
 Two decode loops:
 
@@ -15,25 +15,48 @@ Two decode loops:
   synchronizes at admission and at completion checks (``host_syncs``
   counts the device→host pulls).  Weights go through
   ``registry.prepare_decode_params`` (e.g. RWKV r/k/v/g projections
-  stacked for the single-launch fused GEMV kernel), and under
-  ``impl='pallas'`` the decode-shaped matmuls ride the skinny-M
-  qmv/vqmv kernels.  Greedy outputs are bit-identical to the slow path.
+  stacked for the single-launch fused GEMV kernels — SQ, VQ, or a
+  proxy-mixed hybrid of both), and under ``impl='pallas'`` the
+  decode-shaped matmuls ride the M-bucketed skinny qmv/vqmv kernels.
+  Greedy outputs are bit-identical to the slow path.
 * **slow path** (``fast_path=False``) — the original host loop that
   round-trips every token through NumPy; kept as the reference
-  implementation and for A/B measurement.
+  implementation and for A/B measurement.  Runs a fixed pool of
+  ``n_slots``.
 
-Prefill of new requests is batched: queued prompts of equal length are
-admitted in one prefill call, then each slot's cache lines are written
-in-place (dynamic_update_slice on the batch axis).  The batch axis of
-every cache leaf is discovered structurally at engine construction
-(comparing ``init_cache`` shapes at two batch sizes), so single-slot
-pools splice correctly too.
+Admission policy (fast path)
+----------------------------
+
+* **Prompt-length bucketing** — queued prompts are taken strictly FIFO
+  and padded to power-of-two length buckets (``min_bucket`` = 8 up to
+  ``max_len``), so mixed-length prompts share one prefill launch.
+  Right padding is exact, not approximate: the family's ``prefill``
+  receives ``batch['lengths']`` and masks padded steps out of the
+  recurrent state / KV cache (``registry.supports_ragged_prefill``).
+  Families without ragged support fall back to equal-length grouping.
+* **Batch-row bucketing** — the number of prefill rows is padded to a
+  power of two (dummy rows are prefilled but never spliced), so prefill
+  retraces are bounded by |length buckets| × |row buckets| instead of
+  one per (length, count) pair.  ``jit_recompiles`` reports the distinct
+  shapes seen.
+* **Elastic pool** — the decode pool grows/shrinks over
+  ``POOL_SIZES`` = (1, 4, 8, 16, 32) (clipped to ``n_slots``): a burst
+  grows the pool to admit more slots per tick instead of queueing behind
+  a skinny pool, and a drained pool shrinks so an idle engine doesn't
+  pay wide-M decode cost.  Each pool size jits its own decode tick
+  (cached after first use — ``pool_resizes`` counts migrations, not
+  compiles); live slots are migrated by batch-axis splice.  The decode
+  GEMV kernels are M-bucketed to the f32 sublane, so every pool size up
+  to 32 stays on the fused dequant kernels.
+
+Per-request queue wait (submit→admit, in engine ticks) is recorded on
+each ``Request`` for the bursty-trace benchmark.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +67,9 @@ from repro.models import registry as R
 
 _NO_BATCH_AX = -1      # sentinel: leaf has no batch axis (e.g. cache index)
 
+POOL_SIZES = (1, 4, 8, 16, 32)   # decode tick sizes the engine jits
+MIN_BUCKET = 8                   # smallest prompt-length bucket
+
 
 @dataclass
 class Request:
@@ -53,6 +79,14 @@ class Request:
     temperature: float = 0.0             # 0 -> greedy
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    submit_tick: int = 0                 # engine tick at submit()
+    admit_tick: int = -1                 # engine tick at admission
+
+    @property
+    def queue_wait(self) -> int:
+        """Ticks spent queued before admission (-1: never admitted)."""
+        return self.admit_tick - self.submit_tick \
+            if self.admit_tick >= 0 else -1
 
 
 def _batch_axes(cfg, max_len: int):
@@ -99,7 +133,7 @@ def _tick(cfg, impl: str, max_len: int, params, cache, tok, pos, tcount,
     temperature (<=0 greedy); maxnew (n,) int32; out (n, max_len) emitted
     token ring.  Dead slots decode garbage rows that are masked out —
     batch rows are computed independently, so live rows are bit-identical
-    to the host loop.
+    to the host loop.  Retraced once per pool size n.
     """
     with qz.use_impl(impl):
         logits, cache = R.decode_step(cfg, params, dict(cache, index=pos),
@@ -116,10 +150,18 @@ def _tick(cfg, impl: str, max_len: int, params, cache, tok, pos, tcount,
     return cache, tok, pos, tcount, live, out, key
 
 
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
 class ServeEngine:
     def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 512,
                  seed: int = 0, fast_path: bool = True, impl: str = "auto",
-                 ticks_per_sync: int = 1):
+                 ticks_per_sync: int = 1, elastic: bool = True,
+                 min_bucket: int = MIN_BUCKET):
         if impl == "auto":
             impl = "pallas" if any(d.platform == "tpu"
                                    for d in jax.devices()) else "xla"
@@ -128,14 +170,30 @@ class ServeEngine:
         self.n_slots, self.max_len = n_slots, max_len
         self.fast_path, self.impl = fast_path, impl
         self.ticks_per_sync = max(1, ticks_per_sync)
+        self.min_bucket = min_bucket
         self.key = jax.random.PRNGKey(seed)
-        self.cache = R.init_cache(cfg, n_slots, max_len)
-        self.slot_req: List[Optional[Request]] = [None] * n_slots
-        self.slot_pos = np.zeros(n_slots, np.int32)
         self.queue: List[Request] = []
+        self.completed: List[Request] = []   # finished, in completion order
         self._uid = 0
         self.host_syncs = 0           # device->host pulls (perf counter)
+        self.tick_no = 0              # step() calls (queue-wait clock)
+        self.pool_resizes = 0
         self._axes = _batch_axes(cfg, max_len)
+        self._ragged = R.supports_ragged_prefill(cfg)
+        self._prefill_shapes: set = set()   # (rows, bucket) traced
+        self._tick_shapes: set = set()      # pool sizes traced
+
+        # slow path always runs the fixed n_slots pool; the fast path may
+        # resize over POOL_SIZES (clipped to n_slots)
+        self.elastic = bool(elastic and fast_path)
+        self.pools: Tuple[int, ...] = tuple(
+            [p for p in POOL_SIZES if p < n_slots] + [n_slots]) \
+            if self.elastic else (n_slots,)
+        self.pool = self.pools[0] if self.elastic else n_slots
+
+        self.cache = R.init_cache(cfg, self.pool, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * self.pool
+        self.slot_pos = np.zeros(self.pool, np.int32)
 
         self._dparams = R.prepare_decode_params(cfg, params) \
             if fast_path else params
@@ -153,17 +211,21 @@ class ServeEngine:
         self._tick = jax.jit(partial(_tick, cfg, impl, max_len))
 
         if fast_path:
-            # per-slot cache index from the start (keeps the tick jit
-            # cache stable: decode always sees a (n_slots,) index)
-            self.cache = dict(self.cache,
-                              index=jnp.zeros((n_slots,), jnp.int32))
-            self._tok = jnp.zeros((n_slots, 1), jnp.int32)
-            self._pos = jnp.zeros((n_slots,), jnp.int32)
-            self._tcount = jnp.zeros((n_slots,), jnp.int32)
-            self._live = jnp.zeros((n_slots,), bool)
-            self._temps = jnp.zeros((n_slots,), jnp.float32)
-            self._maxnew = jnp.zeros((n_slots,), jnp.int32)
-            self._out = jnp.zeros((n_slots, max_len), jnp.int32)
+            self._init_buffers(self.pool, seed)
+
+    def _init_buffers(self, pool: int, seed: Optional[int] = None) -> None:
+        # per-slot cache index from the start (keeps the tick jit cache
+        # stable: decode always sees a (pool,) index)
+        self.cache = dict(self.cache,
+                          index=jnp.zeros((pool,), jnp.int32))
+        self._tok = jnp.zeros((pool, 1), jnp.int32)
+        self._pos = jnp.zeros((pool,), jnp.int32)
+        self._tcount = jnp.zeros((pool,), jnp.int32)
+        self._live = jnp.zeros((pool,), bool)
+        self._temps = jnp.zeros((pool,), jnp.float32)
+        self._maxnew = jnp.zeros((pool,), jnp.int32)
+        self._out = jnp.zeros((pool, self.max_len), jnp.int32)
+        if seed is not None:
             self._dkey = jax.random.PRNGKey(seed + 1)
 
     # ------------------------------------------------------------------ #
@@ -171,14 +233,88 @@ class ServeEngine:
                temperature: float = 0.0) -> int:
         self._uid += 1
         self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
-                                  max_new_tokens, temperature))
+                                  max_new_tokens, temperature,
+                                  submit_tick=self.tick_no))
         return self._uid
+
+    @property
+    def jit_recompiles(self) -> Dict[str, int]:
+        """Distinct traced shapes: decode ticks (pool sizes) + prefills
+        ((rows, bucket) pairs).  The cost an admission policy pays."""
+        return {"decode_tick": len(self._tick_shapes),
+                "prefill": len(self._prefill_shapes)}
+
+    # ------------------------------------------------------------------ #
+    #  Elastic pool
+    # ------------------------------------------------------------------ #
+    def _pool_for(self, want: int) -> int:
+        want = max(1, min(want, self.n_slots))
+        return next(p for p in self.pools if p >= want)
+
+    def _resize(self, new_pool: int) -> None:
+        """Migrate to a pool of ``new_pool`` slots (fast path only).
+
+        Growing keeps slot indices stable (one zero-pad of each cache
+        leaf's batch axis); shrinking compacts live slots downward in one
+        gather (relative order — and therefore per-slot FIFO — is
+        preserved).  A single pass over the tree either way: resizes fire
+        exactly when a burst arrives, so migration must not scale with
+        the number of live slots.  Jitted tick functions per pool size
+        stay cached across resizes.
+        """
+        old_pool = self.pool
+        if new_pool == old_pool:
+            return
+        live = [s for s in range(old_pool) if self.slot_req[s] is not None]
+        assert len(live) <= new_pool, (len(live), new_pool)
+        if new_pool > old_pool:
+            rows = None                       # identity mapping, zero-pad
+            mapping = {s: s for s in live}
+            grow = new_pool - old_pool
+        else:
+            # gather live rows, zero-fill the tail
+            rows = jnp.asarray(live, jnp.int32)
+            mapping = {s: j for j, s in enumerate(live)}
+            grow = new_pool - len(live)
+
+        def remap(leaf, ax):
+            if ax == _NO_BATCH_AX:
+                return leaf
+            t = leaf if rows is None else jnp.take(leaf, rows, axis=ax)
+            if grow:
+                pads = [(0, 0)] * t.ndim
+                pads[ax] = (0, grow)
+                t = jnp.pad(t, pads)
+            return t
+
+        def remap_buf(buf):
+            t = buf if rows is None else buf[rows]
+            if grow:
+                t = jnp.pad(t, [(0, grow)] + [(0, 0)] * (buf.ndim - 1))
+            return t
+
+        self.cache = dict(
+            jax.tree.map(remap, self.cache, self._axes),
+            index=jnp.zeros((new_pool,), jnp.int32))
+        (self._tok, self._pos, self._tcount, self._live, self._temps,
+         self._maxnew, self._out) = (
+            remap_buf(b) for b in
+            (self._tok, self._pos, self._tcount, self._live, self._temps,
+             self._maxnew, self._out))
+        old_req, old_pos = self.slot_req, self.slot_pos
+        self.slot_req = [None] * new_pool
+        self.slot_pos = np.zeros(new_pool, np.int32)
+        for s, j in mapping.items():
+            self.slot_req[j] = old_req[s]
+            self.slot_pos[j] = old_pos[s]
+        self.pool = new_pool
+        self.pool_resizes += 1
 
     # ------------------------------------------------------------------ #
     #  Admission
     # ------------------------------------------------------------------ #
     def _free_slots(self) -> List[int]:
-        return [s for s in range(self.n_slots) if self.slot_req[s] is None]
+        return [s for s in range(self.pool) if self.slot_req[s] is None]
 
     def _admit(self) -> None:
         if self.fast_path:
@@ -186,40 +322,97 @@ class ServeEngine:
         else:
             self._admit_host()
 
+    def _bucket(self, L: int) -> int:
+        """Power-of-two prompt-length bucket, clipped to max_len.
+
+        Never below L: a prompt longer than max_len gets its own exact-
+        length bucket so admission matches the slow path.  Constant-state
+        families (RWKV/Mamba) then serve it — the prefill token completes
+        it immediately, there being no cache room to decode; KV-cache
+        families raise inside prefill on either path (pre-existing: the
+        (B, max_len, d) cache cannot hold the prompt)."""
+        return max(L, min(_next_pow2(max(L, self.min_bucket)),
+                          self.max_len))
+
+    def _row_bucket(self, n: int) -> int:
+        """Pad prefill rows to a power of two (bounds retraces)."""
+        return min(_next_pow2(n), _next_pow2(self.pool))
+
     def _admit_batched(self) -> None:
-        """Batched prefill admission: equal-length prompts share one call."""
+        """Bucketed mixed-length admission (see module docstring)."""
+        if self.elastic:
+            n_live = sum(r is not None for r in self.slot_req)
+            self._resize(self._pool_for(n_live + len(self.queue)))
         while self.queue and self._free_slots():
             free = self._free_slots()
-            L0 = len(self.queue[0].prompt)
-            take = [i for i, r in enumerate(self.queue)
-                    if len(r.prompt) == L0][:len(free)]
+            if self._ragged:
+                # FIFO head, grouped by prompt-length bucket
+                head = self.queue[:len(free)]
+                b0 = self._bucket(len(head[0].prompt))
+                take = [i for i, r in enumerate(head)
+                        if self._bucket(len(r.prompt)) == b0]
+            else:
+                # family without ragged prefill: equal lengths only
+                L0 = len(self.queue[0].prompt)
+                take = [i for i, r in enumerate(self.queue)
+                        if len(r.prompt) == L0][:len(free)]
+                b0 = L0
             reqs = [self.queue[i] for i in take]
             for i in sorted(take, reverse=True):
                 self.queue.pop(i)
-            nb = len(reqs)
-            scratch = R.init_cache(self.cfg, nb, self.max_len)
-            batch = {"tokens": jnp.asarray(
-                np.stack([r.prompt for r in reqs]))}
-            logits, scratch = self._prefill(self._dparams, batch, scratch)
-            temps = jnp.asarray([r.temperature for r in reqs], jnp.float32)
-            self.key, sub = jax.random.split(self.key)
-            first = _choose_tokens(logits, temps, sub)
-            for b, req in enumerate(reqs):
-                s = free[b]
-                self.cache = _slot_write(self.cache, scratch, self._axes,
-                                         s, b)
-                self.slot_req[s] = req
-                self.slot_pos[s] = len(req.prompt)
-                self._tok = self._tok.at[s, 0].set(first[b])
-                self._out = self._out.at[s, 0].set(first[b])
-                self._pos = self._pos.at[s].set(len(req.prompt))
-                self._tcount = self._tcount.at[s].set(1)
-                self._live = self._live.at[s].set(True)
-                self._temps = self._temps.at[s].set(req.temperature)
-                self._maxnew = self._maxnew.at[s].set(req.max_new_tokens)
+            self._prefill_group(reqs, b0, free)
+
+    def _prefill_group(self, reqs: List[Request], bucket: int,
+                       free: List[int]) -> None:
+        """One padded prefill launch for ``reqs``, spliced into ``free``."""
+        nb = len(reqs)
+        rows = self._row_bucket(nb) if self._ragged else nb
+        tokens = np.zeros((rows, bucket), np.int32)
+        lengths = np.full((rows,), bucket, np.int32)
+        for b, r in enumerate(reqs):
+            tokens[b, :len(r.prompt)] = r.prompt
+            lengths[b] = len(r.prompt)
+        batch = {"tokens": jnp.asarray(tokens)}
+        if self._ragged:
+            batch["lengths"] = jnp.asarray(lengths)
+        self._prefill_shapes.add((rows, bucket))
+        scratch = R.init_cache(self.cfg, rows, self.max_len)
+        logits, scratch = self._prefill(self._dparams, batch, scratch)
+        temps = jnp.asarray([r.temperature for r in reqs]
+                            + [0.0] * (rows - nb), jnp.float32)
+        self.key, sub = jax.random.split(self.key)
+        first = _choose_tokens(logits, temps, sub)
+        first_host = None
+        for b, req in enumerate(reqs):
+            s = free[b]
+            req.admit_tick = self.tick_no
+            # the prefill token may already complete the request (same
+            # liveness rule as the decode tick: tcount < maxnew, room
+            # in the cache)
+            alive = req.max_new_tokens > 1 \
+                and len(req.prompt) < self.max_len - 1
+            if not alive:
+                if first_host is None:
+                    first_host = np.asarray(first)   # one pull, rare path
+                    self.host_syncs += 1
+                req.out_tokens = [int(first_host[b])]
+                req.done = True
+                self.completed.append(req)
+                continue
+            self.cache = _slot_write(self.cache, scratch, self._axes,
+                                     s, b)
+            self.slot_req[s] = req
+            self.slot_pos[s] = len(req.prompt)
+            self._tok = self._tok.at[s, 0].set(first[b])
+            self._out = self._out.at[s, 0].set(first[b])
+            self._pos = self._pos.at[s].set(len(req.prompt))
+            self._tcount = self._tcount.at[s].set(1)
+            self._live = self._live.at[s].set(True)
+            self._temps = self._temps.at[s].set(req.temperature)
+            self._maxnew = self._maxnew.at[s].set(req.max_new_tokens)
 
     def _admit_host(self) -> None:
-        for slot in range(self.n_slots):
+        for slot in range(self.pool):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
             req = self.queue.pop(0)
@@ -229,6 +422,12 @@ class ServeEngine:
             tok = self._sample(logits, req.temperature)[0]
             self.host_syncs += 1
             req.out_tokens.append(int(tok))
+            req.admit_tick = self.tick_no
+            if req.max_new_tokens <= 1 \
+                    or len(req.prompt) >= self.max_len - 1:
+                req.done = True              # prefill token completed it
+                self.completed.append(req)
+                continue
             # splice the prefilled cache into the pool at `slot`
             self.cache = _slot_write(self.cache, scratch, self._axes,
                                      slot, 0)
@@ -267,14 +466,16 @@ class ServeEngine:
         tokens emitted (exact at the default of 1).
         """
         self._admit()
-        if self.fast_path:
-            return self._step_device()
-        return self._step_host()
+        emitted = self._step_device() if self.fast_path \
+            else self._step_host()
+        self.tick_no += 1
+        return emitted
 
     def _step_device(self) -> int:
         live_before = sum(r is not None for r in self.slot_req)
         if live_before == 0:
             return 0
+        self._tick_shapes.add(self.pool)
         ticks = 0
         for _ in range(self.ticks_per_sync):
             (self.cache, self._tok, self._pos, self._tcount, self._live,
@@ -291,7 +492,7 @@ class ServeEngine:
         live, tcount, pos = jax.device_get(
             (self._live, self._tcount, self._pos))
         self.host_syncs += 1
-        finished = [s for s in range(self.n_slots)
+        finished = [s for s in range(self.pool)
                     if self.slot_req[s] is not None and not live[s]]
         self.slot_pos[:] = pos
         if not finished:
@@ -302,15 +503,19 @@ class ServeEngine:
             req = self.slot_req[s]
             req.out_tokens = [int(t) for t in out[s, :tcount[s]]]
             req.done = True
+            self.completed.append(req)
             self.slot_req[s] = None
+        if self.elastic and not self.queue:
+            n_live = sum(r is not None for r in self.slot_req)
+            self._resize(self._pool_for(n_live))
 
     def _step_host(self) -> int:
-        live = [s for s in range(self.n_slots)
+        live = [s for s in range(self.pool)
                 if self.slot_req[s] is not None]
         if not live:
             return 0
-        toks = np.zeros((self.n_slots, 1), np.int32)
-        temps = np.zeros((self.n_slots,), np.float32)
+        toks = np.zeros((self.pool, 1), np.int32)
+        temps = np.zeros((self.pool,), np.float32)
         for s in live:
             toks[s, 0] = self.slot_req[s].out_tokens[-1]
             temps[s] = self.slot_req[s].temperature
@@ -330,6 +535,7 @@ class ServeEngine:
             if len(req.out_tokens) >= req.max_new_tokens \
                     or self.slot_pos[s] >= self.max_len - 1:
                 req.done = True
+                self.completed.append(req)
                 self.slot_req[s] = None
         return emitted
 
@@ -341,7 +547,7 @@ class ServeEngine:
             # even a request that finishes within one step is returned
             for r in self.queue:
                 seen[r.uid] = r
-            for s in range(self.n_slots):
+            for s in range(self.pool):
                 r = self.slot_req[s]
                 if r is not None:
                     seen[r.uid] = r

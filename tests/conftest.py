@@ -3,3 +3,21 @@ import os
 # Tests run on the single real CPU device; the dry-run test spawns its own
 # subprocess with --xla_force_host_platform_device_count (never set here).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Hypothesis is optional (tier-1 collection must pass without it; the
+# property tests guard themselves with pytest.importorskip).  When it is
+# present, register a profile suited to CPU interpret-mode kernel runs:
+# jit compilation makes the first example orders of magnitude slower than
+# the rest, so wall-clock deadlines only produce flaky failures.
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "ci",
+        deadline=None,
+        derandomize=True,          # reproducible CI runs
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ImportError:                # pragma: no cover - optional dep
+    pass

@@ -3,7 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip(
+    "hypothesis", reason="tier-1 collection must pass without optional deps")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models.layers import (_balanced_causal_attention,
                                  _blockwise_attention, _plain_attention,

@@ -1,4 +1,9 @@
-"""Skinny-M decode GEMV kernels (qmv/vqmv) vs XLA dequant, M in {1,2,4,8}."""
+"""Skinny-M decode GEMV kernels (qmv/vqmv, plain + fused) vs XLA dequant.
+
+M sweeps cover the M-bucketed elastic-pool range {1..32}; vqmv_fused is
+checked against per-projection vqmv and the pure-jnp ref across odd
+K-group counts and codebook sizes, mirroring the SQ-path coverage.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,11 +16,12 @@ from repro.kernels.qmv import ops as qmv_ops
 from repro.kernels.qmv.kernel import qmv_fused_pallas, qmv_pallas
 from repro.kernels.qmv.ref import qmv_fused_ref, qmv_ref
 from repro.kernels.vqmv import ops as vqmv_ops
-from repro.kernels.vqmv.kernel import vqmv_pallas
-from repro.kernels.vqmv.ref import vqmv_ref
+from repro.kernels.vqmv.kernel import vqmv_fused_pallas, vqmv_pallas
+from repro.kernels.vqmv.ref import vqmv_fused_ref, vqmv_ref
 
 KEY = jax.random.PRNGKey(0)
 DECODE_M = (1, 2, 4, 8)
+WIDE_M = (16, 24, 32)     # elastic-pool decode widths past the old cliff
 
 
 def _rel(a, b):
@@ -105,6 +111,43 @@ def test_decode_nontileable_fallback():
                        atol=1e-4)
 
 
+@pytest.mark.parametrize("M", WIDE_M)
+def test_qmv_wide_m_sweep(M):
+    """Pool sizes 16/32 stay on the GEMV schedule (M padded to sublane)."""
+    K, N = 512, 256
+    rng = np.random.default_rng(M)
+    w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+    sq = rtn_quantize(w, 3, 64)
+    x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+    ref = qmv_ref(x, sq.packed, sq.scales, sq.biases, bits=3, group=64,
+                  K=K, N=N)
+    out = qmv_pallas(x, sq.packed, sq.scales, sq.biases, bits=3, group=64,
+                     K=K, N=N, interpret=True)
+    assert out.shape == (M, N)
+    assert _rel(out, ref) < 1e-4
+    vq = kmeans_vq_quantize(w, 2, 6, KEY, 4)
+    cb = vq.codebook.astype(jnp.float32)
+    out_v = vqmv_pallas(x, vq.packed, cb, k=6, d=2, K=K, N=N,
+                        interpret=True)
+    ref_v = vqmv_ref(x, vq.packed, cb, k=6, d=2, K=K, N=N)
+    assert _rel(out_v, ref_v) < 1e-4
+
+
+def test_matmul_dispatch_covers_pool_widths():
+    """quantized.matmul keeps decode shapes M <= 32 on the GEMV path."""
+    K, N = 512, 256
+    rng = np.random.default_rng(42)
+    w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+    sq = rtn_quantize(w, 3, 64)
+    for M in (1, 8, 16, 32, 33):
+        x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+        with qz.use_impl("xla"):
+            ref = qz.matmul(x, sq)
+        with qz.use_impl("pallas"):
+            out = qz.matmul(x, sq)        # M<=32 -> qmv; M=33 -> qmm
+        assert _rel(out, ref) < 5e-2, M
+
+
 @pytest.mark.parametrize("shared", [False, True])
 def test_qmv_fused_multi_projection(shared):
     """P stacked projections in one launch == P separate GEMVs."""
@@ -124,6 +167,157 @@ def test_qmv_fused_multi_projection(shared):
                            K=K, N=N, interpret=True)
     assert out.shape == (P, M, N)
     assert _rel(out, ref) < 1e-4
+
+
+# --------------------------------------------------------------------------- #
+#  vqmv_fused: VQ counterpart of the fused multi-projection GEMV
+# --------------------------------------------------------------------------- #
+def _vq_stack(P, K, N, d, k, seed=0):
+    rng = np.random.default_rng(seed)
+    vqs = [kmeans_vq_quantize(
+        jnp.asarray(rng.standard_normal((K, N)).astype(np.float32)),
+        d, k, jax.random.fold_in(KEY, p), 4) for p in range(P)]
+    packed = jnp.stack([v.packed for v in vqs])
+    cb = jnp.stack([v.codebook.astype(jnp.float32) for v in vqs])
+    return vqs, packed, cb, rng
+
+
+@pytest.mark.parametrize("shared", [False, True])
+@pytest.mark.parametrize("M", DECODE_M)
+def test_vqmv_fused_multi_projection(shared, M):
+    """P stacked VQ projections in one launch == P separate GEMVs."""
+    P, K, N = 4, 512, 256
+    vqs, packed, cb, rng = _vq_stack(P, K, N, 2, 6, seed=M)
+    x = jnp.asarray(rng.standard_normal(
+        ((M, K) if shared else (P, M, K))).astype(np.float32))
+    ref = vqmv_fused_ref(x, packed, cb, k=6, d=2, K=K, N=N)
+    out = vqmv_fused_pallas(x, packed, cb, k=6, d=2, K=K, N=N,
+                            interpret=True)
+    assert out.shape == (P, M, N)
+    assert _rel(out, ref) < 1e-4
+    # per-projection vqmv agrees with the fused launch
+    for p in range(P):
+        sep = vqmv_pallas(x if shared else x[p], packed[p], cb[p],
+                          k=6, d=2, K=K, N=N, interpret=True)
+        assert _rel(out[p], sep) < 1e-5, p
+
+
+@pytest.mark.parametrize("d,k", [(2, 4), (4, 8), (2, 7)])
+def test_vqmv_fused_codebook_sizes(d, k):
+    """Codebook sizes 2^4..2^8 and both vector dims fuse correctly."""
+    P, M, K, N = 3, 2, 512, 256
+    _, packed, cb, rng = _vq_stack(P, K, N, d, k, seed=d * 10 + k)
+    x = jnp.asarray(rng.standard_normal((P, M, K)).astype(np.float32))
+    ref = vqmv_fused_ref(x, packed, cb, k=k, d=d, K=K, N=N)
+    out = vqmv_fused_pallas(x, packed, cb, k=k, d=d, K=K, N=N,
+                            interpret=True)
+    assert _rel(out, ref) < 1e-4
+
+
+def test_vqmv_fused_odd_group_count():
+    """K = 768 -> an odd number (3) of 256-wide K blocks per sweep."""
+    P, M, K, N = 2, 4, 768, 128
+    _, packed, cb, rng = _vq_stack(P, K, N, 2, 6, seed=99)
+    x = jnp.asarray(rng.standard_normal((P, M, K)).astype(np.float32))
+    ref = vqmv_fused_ref(x, packed, cb, k=6, d=2, K=K, N=N)
+    out = vqmv_fused_pallas(x, packed, cb, k=6, d=2, K=K, N=N,
+                            interpret=True)
+    assert _rel(out, ref) < 1e-4
+
+
+def test_matmul_fused_vq_matches_separate():
+    """quantized.matmul_fused on a VQ stack == per-projection matmul."""
+    P, M, K, N = 4, 2, 512, 256
+    vqs, packed, cb, rng = _vq_stack(P, K, N, 2, 6, seed=21)
+    fused = qz.VQTensor(packed=packed,
+                        codebook=jnp.stack([v.codebook for v in vqs]),
+                        shape=vqs[0].shape, d=2, k=6)
+    xs = jnp.asarray(rng.standard_normal((P, M, K)).astype(np.float32))
+    with qz.use_impl("xla"):
+        ref = jnp.stack([qz.matmul(xs[p], vqs[p]) for p in range(P)])
+        out_xla = qz.matmul_fused(xs, fused)
+    assert bool((out_xla == ref).all())          # bitwise on the xla path
+    with qz.use_impl("pallas"):
+        out_pl = qz.matmul_fused(xs, fused)
+    assert _rel(out_pl, ref) < 5e-2
+    # prefill shapes route through the per-projection vqmm dispatch
+    xs_big = jnp.asarray(
+        rng.standard_normal((P, 64, K)).astype(np.float32))
+    with qz.use_impl("xla"):
+        ref_big = jnp.stack([qz.matmul(xs_big[p], vqs[p])
+                             for p in range(P)])
+    with qz.use_impl("pallas"):
+        out_big = qz.matmul_fused(xs_big, fused)
+    assert _rel(out_big, ref_big) < 5e-2
+
+
+def test_matmul_fused_hybrid_mixed_projections():
+    """FusedHybrid (proxy-mixed SQ/VQ r/k/v/g) == per-projection calls."""
+    P, M, K, N = 4, 2, 512, 256
+    rng = np.random.default_rng(33)
+    ws = [jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+          for _ in range(P)]
+    sq0, sq2 = rtn_quantize(ws[0], 3, 64), rtn_quantize(ws[2], 3, 64)
+    vq1 = kmeans_vq_quantize(ws[1], 2, 6, KEY, 4)
+    vq3 = kmeans_vq_quantize(ws[3], 2, 6, jax.random.fold_in(KEY, 1), 4)
+    hyb = qz.FusedHybrid(
+        sq=qz.SQTensor(packed=jnp.stack([sq0.packed, sq2.packed]),
+                       scales=jnp.stack([sq0.scales, sq2.scales]),
+                       biases=jnp.stack([sq0.biases, sq2.biases]),
+                       shape=sq0.shape, bits=3, group=64),
+        vq=qz.VQTensor(packed=jnp.stack([vq1.packed, vq3.packed]),
+                       codebook=jnp.stack([vq1.codebook, vq3.codebook]),
+                       shape=vq1.shape, d=2, k=6),
+        sq_idx=(0, 2), vq_idx=(1, 3), shape=sq0.shape)
+    mix = [sq0, vq1, sq2, vq3]
+    xs = jnp.asarray(rng.standard_normal((P, M, K)).astype(np.float32))
+    with qz.use_impl("xla"):
+        ref = jnp.stack([qz.matmul(xs[p], mix[p]) for p in range(P)])
+        out_xla = qz.matmul_fused(xs, hyb)
+    assert bool((out_xla == ref).all())
+    with qz.use_impl("pallas"):
+        out_pl = qz.matmul_fused(xs, hyb)
+    assert _rel(out_pl, ref) < 5e-2
+    # FusedHybrid is a jit-safe pytree (static idx metadata)
+    out_jit = jax.jit(qz.matmul_fused)(xs, hyb)
+    assert bool((out_jit == out_xla).all())
+
+
+def test_fuse_rkvg_vq_and_hybrid():
+    """rwkv6.fuse_rkvg stacks uniform-VQ and proxy-mixed projections."""
+    from repro.models import rwkv6
+
+    K = N = 256
+    rng = np.random.default_rng(17)
+
+    def mk(kind, seed):
+        w = jnp.asarray(rng.standard_normal((2, K, N)).astype(np.float32))
+        outs = []
+        for li in range(2):       # layer-stacked, like scan params
+            if kind == "sq":
+                outs.append(rtn_quantize(w[li], 3, 64))
+            else:
+                outs.append(kmeans_vq_quantize(
+                    w[li], 2, 6, jax.random.fold_in(KEY, seed + li), 4))
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    def params_with(kinds):
+        tm = {n: mk(k, i * 10) for i, (n, k) in enumerate(
+            zip(("w_r", "w_k", "w_v", "w_g"), kinds))}
+        tm["mu_x"] = jnp.zeros((2, N))
+        return {"blocks": {"tm": tm}}
+
+    fused = rwkv6.fuse_rkvg(params_with(["vq"] * 4))
+    w = fused["blocks"]["tm"]["w_rkvg"]
+    assert isinstance(w, qz.VQTensor) and w.packed.shape[1] == 4
+    fused = rwkv6.fuse_rkvg(params_with(["sq", "vq", "sq", "vq"]))
+    w = fused["blocks"]["tm"]["w_rkvg"]
+    assert isinstance(w, qz.FusedHybrid)
+    assert w.sq_idx == (0, 2) and w.vq_idx == (1, 3)
+    # unquantized projections stay unfused
+    p = params_with(["sq"] * 4)
+    p["blocks"]["tm"]["w_g"] = jnp.zeros((2, K, N))
+    assert "w_rkvg" not in rwkv6.fuse_rkvg(p)["blocks"]["tm"]
 
 
 def test_matmul_fused_matches_separate():

@@ -1,0 +1,135 @@
+"""Padded-to-bucket prefill == unpadded prefill, per registry family.
+
+Right-padded mixed-length prefill (``batch['lengths']``) must reproduce
+the unpadded per-row cache/state exactly: RWKV6/7 mask the recurrent
+update at padded steps, attention archs zero padded K/V rows, the jamba
+hybrid additionally freezes the Mamba SSM state and gathers the conv
+window per row.  Every leaf is compared allclose at the matching batch
+row, plus the last-real-position logits.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_CONFIGS, ARCHS, reduced
+from repro.models import registry as R
+from repro.serve.engine import ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+MAX_LEN = 32
+LENS = (5, 9, 3)          # padded to one 16-bucket
+PAD_S = 16
+
+# one representative per family module: rwkv6, rwkv7, dense GQA, MLA,
+# jamba hybrid (attn + mamba + moe)
+RAGGED_ARCHS = ["rwkv6-3b", "rwkv7-0.1b", "llama3-8b", "minicpm3-4b",
+                "jamba-1.5-large-398b"]
+
+
+def _reduced(name):
+    base = ALL_CONFIGS[name]
+    kw = dict(vocab_size=128)
+    # jamba periods need n_layers % attn_every == 0
+    kw["n_layers"] = base.attn_every if base.family == "hybrid" else 2
+    return reduced(base, **kw)
+
+
+def _leaf_rows_close(c_pad, c_one, row, atol):
+    """Compare row ``row`` of every padded-cache leaf against the
+    (batch-1) unpadded cache, discovering the batch axis structurally."""
+    flat_pad = jax.tree_util.tree_flatten_with_path(c_pad)[0]
+    flat_one = jax.tree.leaves(c_one)
+    assert len(flat_pad) == len(flat_one)
+    for (path, lp), l1 in zip(flat_pad, flat_one):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if "index" in name:
+            continue                       # compared separately (shapes)
+        ax = next((a for a, (u, v) in enumerate(zip(lp.shape, l1.shape))
+                   if u != v), None)
+        got = lp if ax is None else jnp.take(lp, row, axis=ax)
+        want = l1 if ax is None else jnp.take(l1, 0, axis=ax)
+        assert np.allclose(np.asarray(got), np.asarray(want),
+                           atol=atol), (name, row)
+
+
+@pytest.mark.parametrize("arch", RAGGED_ARCHS)
+def test_padded_prefill_matches_unpadded(arch):
+    cfg = _reduced(arch)
+    assert R.supports_ragged_prefill(cfg), arch
+    params = R.init_params(cfg, KEY)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in LENS]
+    padded = np.zeros((len(LENS), PAD_S), np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, :len(p)] = p
+    lg_pad, c_pad = R.prefill(
+        cfg, params, {"tokens": jnp.asarray(padded),
+                      "lengths": jnp.asarray(LENS)},
+        R.init_cache(cfg, len(LENS), MAX_LEN))
+    assert np.array_equal(np.asarray(c_pad["index"]), np.asarray(LENS))
+    for i, p in enumerate(prompts):
+        lg1, c1 = R.prefill(cfg, params, {"tokens": jnp.asarray(p[None])},
+                            R.init_cache(cfg, 1, MAX_LEN))
+        assert np.allclose(np.asarray(lg_pad[i]), np.asarray(lg1[0]),
+                           atol=1e-4), (arch, i)
+        _leaf_rows_close(c_pad, c1, i, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", RAGGED_ARCHS)
+def test_padded_prefill_then_decode(arch):
+    """Decode from the padded-prefill cache == decode from unpadded."""
+    cfg = _reduced(arch)
+    params = R.init_params(cfg, KEY)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in LENS]
+    padded = np.zeros((len(LENS), PAD_S), np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, :len(p)] = p
+    lg_pad, c_pad = R.prefill(
+        cfg, params, {"tokens": jnp.asarray(padded),
+                      "lengths": jnp.asarray(LENS)},
+        R.init_cache(cfg, len(LENS), MAX_LEN))
+    toks = jnp.argmax(lg_pad, axis=-1).astype(jnp.int32)[:, None]
+    lg2, _ = R.decode_step(cfg, params, c_pad, toks)
+    for i, p in enumerate(prompts):
+        lg1, c1 = R.prefill(cfg, params, {"tokens": jnp.asarray(p[None])},
+                            R.init_cache(cfg, 1, MAX_LEN))
+        t1 = jnp.argmax(lg1, axis=-1).astype(jnp.int32)[:, None]
+        assert int(t1[0, 0]) == int(toks[i, 0]), (arch, i)
+        lg1b, _ = R.decode_step(cfg, params, c1, t1)
+        assert int(jnp.argmax(lg1b[0])) == int(jnp.argmax(lg2[i])), (arch, i)
+
+
+def test_whisper_reports_no_ragged_support():
+    cfg = ARCHS["whisper-large-v3"]
+    assert not R.supports_ragged_prefill(cfg)
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "llama3-8b"])
+def test_single_slot_bucketed_splice(arch):
+    """n_slots == 1 + a non-bucket-sized prompt: the padded prefill must
+    be spliced into the single-slot pool without dropping state."""
+    cfg = _reduced(arch)
+    params = R.init_params(cfg, KEY)
+    prompt = np.random.default_rng(2).integers(
+        0, cfg.vocab_size, size=11).astype(np.int32)   # pads to bucket 16
+    n_new = 5
+    # isolated greedy reference
+    cache = R.init_cache(cfg, 1, 64)
+    lg, cache = R.prefill(cfg, params,
+                          {"tokens": jnp.asarray(prompt[None])}, cache)
+    ref = [int(jnp.argmax(lg[0]))]
+    for _ in range(n_new - 1):
+        lg, cache = R.decode_step(cfg, params, cache,
+                                  jnp.asarray([[ref[-1]]], jnp.int32))
+        ref.append(int(jnp.argmax(lg[0])))
+    eng = ServeEngine(cfg, params, n_slots=1, max_len=64, fast_path=True)
+    eng.submit(prompt, max_new_tokens=n_new)
+    eng.run_until_drained()
+    (req,) = eng.completed
+    assert req.out_tokens == ref

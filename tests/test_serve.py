@@ -141,3 +141,101 @@ def test_engine_more_requests_than_slots():
     done = eng.run_until_drained()
     assert len(done) == 7
     assert all(len(r.out_tokens) == 4 for r in done)
+
+
+def test_engine_mixed_length_batch_admission():
+    """Prompts spanning several buckets admit together (ragged prefill)
+    and still match the slow per-request loop bit-for-bit."""
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=2, vocab_size=128)
+    params = R.init_params(cfg, KEY)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, 128, size=n).astype(np.int32)
+               for n in (3, 17, 9, 30, 5, 26)]
+    outs = {}
+    for fast in (False, True):
+        eng = ServeEngine(cfg, params, n_slots=8, max_len=64,
+                          fast_path=fast)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=5)
+        eng.run_until_drained()
+        assert len(eng.completed) == len(prompts)
+        outs[fast] = {r.uid: r.out_tokens for r in eng.completed}
+    assert outs[True] == outs[False]
+
+
+def test_engine_bursty_mixed_length_trace():
+    """Acceptance trace: >= 32 requests over >= 4 length buckets complete
+    on the fast path bit-identically to the slow loop, with a bounded
+    number of decode-tick retraces and at least one pool resize."""
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=2, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    max_len = 48
+    rng = np.random.default_rng(7)
+    lens = [int(x) for x in rng.integers(2, 34, size=32)]
+    lens[:4] = [3, 12, 20, 33]          # hit buckets 8/16/32/48
+    arrivals = sorted(int(a) for a in rng.integers(0, 8, size=32))
+    prompts = [rng.integers(0, 64, size=n).astype(np.int32) for n in lens]
+
+    def drive(fast):
+        eng = ServeEngine(cfg, params, n_slots=8, max_len=max_len,
+                          fast_path=fast)
+        i = steps = 0
+        while True:
+            while i < len(prompts) and arrivals[i] <= eng.tick_no:
+                eng.submit(prompts[i], max_new_tokens=3)
+                i += 1
+            emitted = eng.step()
+            steps += 1
+            assert steps < 500
+            if i >= len(prompts) and emitted == 0 and not eng.queue:
+                break
+        assert len(eng.completed) == len(prompts)
+        return eng
+
+    fast = drive(True)
+    slow = drive(False)
+    buckets = {fast._bucket(n) for n in lens}
+    assert len(buckets) >= 4, buckets
+    out_f = {r.uid: r.out_tokens for r in fast.completed}
+    out_s = {r.uid: r.out_tokens for r in slow.completed}
+    assert out_f == out_s
+    assert fast.pool_resizes >= 1
+    assert fast.jit_recompiles["decode_tick"] <= len(fast.pools)
+    # admission stayed FIFO and queue waits were recorded
+    by_uid = sorted(fast.completed, key=lambda r: r.uid)
+    admits = [r.admit_tick for r in by_uid]
+    assert admits == sorted(admits)
+    assert all(r.queue_wait >= 0 for r in by_uid)
+
+
+@pytest.mark.parametrize("fast", [False, True])
+def test_engine_prompt_longer_than_max_len(fast):
+    """A prompt with no cache room left completes at admission with its
+    prefill token on both paths (the fast path must not crash on the
+    bucket clip).  Constant-state families only: KV-cache archs cannot
+    prefill past max_len at all (pre-existing, identical on both paths).
+    """
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=1, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=16, fast_path=fast)
+    eng.submit(np.arange(20, dtype=np.int32) % 64, max_new_tokens=4)
+    eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=4)
+    eng.run_until_drained()
+    assert len(eng.completed) == 2
+    by_uid = {r.uid: r for r in eng.completed}
+    assert len(by_uid[1].out_tokens) == 1      # no room to decode
+    assert len(by_uid[2].out_tokens) == 4
+
+
+def test_engine_elastic_pool_grows_and_shrinks():
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=1, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, n_slots=16, max_len=64)
+    assert eng.pool == 1                 # idle engine sits on the min pool
+    for i in range(10):
+        eng.submit(np.arange(4 + i % 3, dtype=np.int32), max_new_tokens=6)
+    eng.step()
+    assert eng.pool == 16                # burst grew the pool
+    eng.run_until_drained()
+    assert len(eng.completed) == 10
+    assert eng.pool == 1                 # drained engine shrank back
