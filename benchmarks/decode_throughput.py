@@ -22,6 +22,11 @@ measurements on a reduced RWKV6 with the paper's 3.275-bpw hybrid policy:
      queue wait (ticks), jit-recompile counts (decode-tick pool sizes +
      prefill (rows, bucket) shapes) and pool resizes, with greedy
      outputs asserted bit-identical to the slow host loop.
+  5. COLD START — the quantize-once / serve-anywhere boundary: artifact
+     save/load time vs full re-quantization time, and engine
+     construction + first-token latency with a cold vs warm shared
+     jit-closure cache (the warm engine must report zero new
+     recompiles — the cross-engine cache reuse contract).
 
 Emits ``BENCH_decode.json`` at the repo root so the perf trajectory is
 tracked PR-over-PR, plus the usual CSV rows.
@@ -176,7 +181,9 @@ def _bursty_trace(cfg):
 
 
 def _drive_bursty(cfg, params, fast_path: bool, impl: str):
-    prompts, arrivals = _bursty_trace(cfg)
+    from repro.serve import engine as se
+    se.clear_closure_cache()     # recompile counts must measure THIS
+    prompts, arrivals = _bursty_trace(cfg)   # trace, not earlier sections
     eng = ServeEngine(cfg, params, n_slots=BURSTY_N_SLOTS,
                       max_len=BURSTY_MAX_LEN, fast_path=fast_path,
                       impl=impl)
@@ -208,6 +215,59 @@ def _drive_bursty(cfg, params, fast_path: bool, impl: str):
         "length_buckets": buckets,
         "outputs": {r.uid: r.out_tokens for r in eng.completed},
     }
+
+
+# --------------------------------------------------------------------------- #
+#  Cold start: artifact load vs re-quantization, cold vs warm closure cache
+# --------------------------------------------------------------------------- #
+def _cold_start(cfg, params, qp, policy):
+    import tempfile
+
+    from repro import api
+    from repro.serve import engine as se
+
+    out = {}
+    t0 = time.time()
+    qp2, _ = quantize_tree(params, policy, KEY)
+    jax.block_until_ready(jax.tree.leaves(qp2))
+    out["requantize_s"] = time.time() - t0
+
+    art = api.QuantizedArtifact(cfg=cfg, params=qp, policy=policy,
+                                kind="tree")
+    path = os.path.join(tempfile.gettempdir(), "bench_decode.rqa")
+    t0 = time.time()
+    art.save(path)
+    out["artifact_save_s"] = time.time() - t0
+    t0 = time.time()
+    loaded = api.load(path)
+    jax.block_until_ready(jax.tree.leaves(loaded.params))
+    out["artifact_load_s"] = time.time() - t0
+    out["load_vs_requantize_speedup"] = \
+        out["requantize_s"] / max(out["artifact_load_s"], 1e-9)
+
+    prompt = (np.arange(6) % cfg.vocab_size).astype(np.int32)
+
+    def boot_first_token(a):
+        """Engine construction + prefill + first streamed token."""
+        t0 = time.time()
+        eng = api.Engine.from_artifact(a, n_slots=N_SLOTS, max_len=MAX_LEN,
+                                       impl="xla")
+        gen = eng.generate(prompt, max_new_tokens=2)
+        next(gen)
+        dt = time.time() - t0
+        gen.close()
+        return dt, eng.jit_recompiles
+
+    se.clear_closure_cache()
+    cold_s, cold_rc = boot_first_token(loaded)
+    warm_s, warm_rc = boot_first_token(loaded)
+    assert sum(warm_rc.values()) == 0, warm_rc   # cache reuse contract
+    out["engine_first_token"] = {
+        "cold_s": cold_s, "warm_s": warm_s,
+        "warm_speedup": cold_s / max(warm_s, 1e-9),
+        "cold_recompiles": cold_rc, "warm_recompiles": warm_rc,
+    }
+    return out
 
 
 def run(print_csv=print):
@@ -267,6 +327,16 @@ def run(print_csv=print):
             f"recompiles={sum(r['jit_recompiles'].values())};"
             f"pool_resizes={r['pool_resizes']}"))
 
+    # 5. cold start: artifact boundary + shared closure cache
+    cold = _cold_start(cfg, params, qp, DATAFREE_3_275)
+    print_csv(csv_row(
+        "decode/cold_start", t.lap() * 1e6,
+        f"load_vs_requant={cold['load_vs_requantize_speedup']:.1f}x;"
+        f"first_tok_cold={cold['engine_first_token']['cold_s']:.3f}s;"
+        f"first_tok_warm={cold['engine_first_token']['warm_s']:.3f}s;"
+        f"warm_recompiles="
+        f"{sum(cold['engine_first_token']['warm_recompiles'].values())}"))
+
     out = {
         "model": cfg.name,
         "policy_bpw": float(report.mean_bpw),
@@ -280,6 +350,7 @@ def run(print_csv=print):
                        n_requests=BURSTY_N_REQ,
                        n_slots=BURSTY_N_SLOTS,
                        new_tokens=BURSTY_NEW_TOKENS),
+        "cold_start": cold,
     }
     with open(OUT_JSON, "w") as f:
         json.dump(out, f, indent=2)

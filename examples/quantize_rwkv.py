@@ -1,17 +1,24 @@
-"""End-to-end RWKVQuant (the paper's pipeline): train a small RWKV-7 on
-the synthetic corpus, calibrate, quantize block-wise with exact per-layer
-Eq. 18 decisions (GPTQ / GPTVQ / §3.2 element-wise codebooks), and
-compare PPL across methods.
+"""End-to-end RWKVQuant (the paper's pipeline) through ``repro.api``:
+train a small RWKV-7 on the synthetic corpus, calibrate, quantize
+block-wise with exact per-layer Eq. 18 decisions (GPTQ / GPTVQ / §3.2
+element-wise codebooks), and compare PPL across methods.
 
     PYTHONPATH=src python examples/quantize_rwkv.py [--steps 300]
+
+Quantize-once, evaluate-anywhere: ``--save`` writes the paper-policy
+model as a versioned ``QuantizedArtifact``; a later run with ``--load``
+evaluates the artifact directly — no training or calibration, PPL
+bit-identical to the run that produced it:
+
+    PYTHONPATH=src python examples/quantize_rwkv.py --save /tmp/rq.rqa
+    PYTHONPATH=src python examples/quantize_rwkv.py --load /tmp/rq.rqa
 """
 import argparse
 
-import jax
-
 from benchmarks.common import (bench_config, calib_batches, eval_ppl,
                                train_small)
-from repro.core.pipeline import blockwise_quantize, float_lm
+from repro import api
+from repro.core.pipeline import float_lm
 from repro.core.policy import PAPER_3_275, RTN_3_5, SQ_ONLY_3_5, VQ_ONLY_3_5
 
 
@@ -19,8 +26,22 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--arch", default="rwkv7-0.1b")
+    ap.add_argument("--save", metavar="PATH", default=None,
+                    help="write the rwkvquant-3.275 model as a "
+                         "QuantizedArtifact")
+    ap.add_argument("--load", metavar="PATH", default=None,
+                    help="evaluate a saved artifact (skips training and "
+                         "calibration)")
     args = ap.parse_args()
-    key = jax.random.PRNGKey(0)
+
+    if args.load:
+        art = api.load(args.load)
+        lm = api.lm(art)
+        print(f"loaded {args.load}: cfg={art.cfg.name} "
+              f"cfg_hash={art.cfg_hash} kind={art.kind}")
+        print(f"  {lm.report.summary()}")
+        print(f"  ppl={eval_ppl(lm):.3f} bpw={lm.report.mean_bpw:.3f}")
+        return
 
     cfg = bench_config(args.arch)
     print(f"training {cfg.name} for {args.steps} steps ...")
@@ -33,10 +54,15 @@ def main():
     for name, pol in [("rtn-3.5", RTN_3_5), ("gptq-3.5", SQ_ONLY_3_5),
                       ("gptvq-3.5", VQ_ONLY_3_5),
                       ("rwkvquant-3.275", PAPER_3_275)]:
-        lm = blockwise_quantize(cfg, params, batches, pol, key)
+        art = api.quantize(cfg, params, pol, batches=batches)
+        lm = api.lm(art)
         print(f"{name:18s} {eval_ppl(lm):8.3f} "
               f"{lm.report.mean_bpw:6.3f} "
               f"{lm.report.sq_fraction*100:5.0f}")
+        if args.save and pol is PAPER_3_275:
+            api.save(art, args.save)
+            print(f"  saved artifact -> {args.save} "
+                  f"(evaluate with --load {args.save})")
     print("\n(RWKVQuant = proxy-guided hybrid: GPTQ on uniform weights, "
           "GPTVQ on non-uniform, X²-weighted codebooks on ⊙ weights)")
 

@@ -1,9 +1,13 @@
-"""Serve a quantized RWKV-6 with continuous batching.
+"""Serve a quantized RWKV-6 with continuous batching — via ``repro.api``.
 
-Trains a small model, quantizes it to ~3.3 bpw, and runs the batched
-serving engine over byte-tokenized prompts (greedy decoding).
+Quantize-once, serve-anywhere: by default this trains a small model,
+quantizes it to ~3.3 bpw and serves it; with ``--save`` the quantized
+weights are written as a versioned ``QuantizedArtifact``, and a later
+invocation with ``--load`` boots the engine straight from the artifact —
+no training, no re-quantization, bit-identical outputs:
 
-    PYTHONPATH=src python examples/serve_quantized.py
+    PYTHONPATH=src python examples/serve_quantized.py --save /tmp/m.rqa
+    PYTHONPATH=src python examples/serve_quantized.py --load /tmp/m.rqa
 
 ``--bursty`` switches the steady 6-request demo for a bursty
 mixed-length trace (24 requests whose prompt lengths span several
@@ -17,21 +21,18 @@ retraces.
 import argparse
 import dataclasses
 
-import jax
 import numpy as np
 
+from repro import api
 from repro.configs import ARCHS, reduced
 from repro.core import quantized as qz
-from repro.core.hybrid import quantize_tree
 from repro.core.policy import DATAFREE_3_275
 from repro.data.synthetic import CorpusConfig, SyntheticCorpus
-from repro.models import registry as R
-from repro.serve.engine import ServeEngine
 from repro.train.optimizer import AdamWConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
 
-def _train_and_quantize():
+def _train_and_quantize() -> api.QuantizedArtifact:
     cfg = dataclasses.replace(reduced(ARCHS["rwkv6-3b"]),
                               n_layers=3, vocab_size=256)
     print("training a tiny RWKV-6 ...")
@@ -43,22 +44,28 @@ def _train_and_quantize():
     state = tr.run(resume=False)
 
     print("quantizing ...")
-    qparams, report = quantize_tree(state.params, DATAFREE_3_275,
-                                    jax.random.PRNGKey(0))
-    print(" ", report.summary())
+    art = api.quantize(cfg, state.params, DATAFREE_3_275)
+    print(" ", art.report.summary())
     print(f"  {qz.param_bytes(state.params)/1e6:.1f} MB -> "
-          f"{qz.param_bytes(qparams)/1e6:.1f} MB")
-    return cfg, qparams
+          f"{qz.param_bytes(art.params)/1e6:.1f} MB")
+    return art
 
 
-def steady(cfg, qparams):
+def steady(art: api.QuantizedArtifact):
     print("serving with continuous batching (4 slots, 6 requests) ...")
-    eng = ServeEngine(cfg, qparams, n_slots=4, max_len=96)
+    eng = api.Engine.from_artifact(art, n_slots=4, max_len=96)
     corpus = SyntheticCorpus(CorpusConfig(vocab_size=256))
-    for i in range(6):
+    for i in range(5):
         prompt = corpus.batch(i, 1, 12)["tokens"][0]
         eng.submit(prompt, max_new_tokens=16)
-    done = eng.run_until_drained()
+    # the 6th request streams token-by-token while the pool keeps decoding
+    stream_prompt = corpus.batch(5, 1, 12)["tokens"][0]
+    print("  streaming req:", end=" ", flush=True)
+    for tok in eng.generate(stream_prompt, max_new_tokens=16):
+        print(tok, end=" ", flush=True)
+    print()
+    eng.run_until_drained()
+    done = eng.completed                 # includes the streamed request
     for r in sorted(done, key=lambda r: r.uid):
         print(f"  req {r.uid}: prompt[:6]={r.prompt[:6].tolist()} "
               f"-> {r.out_tokens[:8]}...")
@@ -69,14 +76,14 @@ def steady(cfg, qparams):
           f"{n_tok} tokens ({eng.host_syncs / max(n_tok, 1):.2f}/token)")
 
 
-def bursty(cfg, qparams):
+def bursty(art: api.QuantizedArtifact):
     print("serving a bursty mixed-length trace "
           "(elastic pools, bucketed prefill) ...")
     rng = np.random.default_rng(0)
     lens = [int(x) for x in rng.integers(3, 60, size=24)]
     arrivals = sorted(int(a) for a in rng.integers(0, 8, size=24))
     prompts = [rng.integers(0, 256, size=n).astype(np.int32) for n in lens]
-    eng = ServeEngine(cfg, qparams, n_slots=16, max_len=96)
+    eng = api.Engine.from_artifact(art, n_slots=16, max_len=96)
     i = 0
     while True:
         while i < len(prompts) and arrivals[i] <= eng.tick_no:
@@ -103,12 +110,27 @@ def main():
     ap.add_argument("--bursty", action="store_true",
                     help="bursty mixed-length arrival trace instead of "
                          "the steady 6-request demo")
+    ap.add_argument("--save", metavar="PATH", default=None,
+                    help="write the quantized model as a QuantizedArtifact")
+    ap.add_argument("--load", metavar="PATH", default=None,
+                    help="serve from a saved artifact (skips training and "
+                         "quantization entirely)")
     args = ap.parse_args()
-    cfg, qparams = _train_and_quantize()
-    if args.bursty:
-        bursty(cfg, qparams)
+    if args.load:
+        print(f"loading artifact {args.load} ...")
+        art = api.load(args.load)
+        print(f"  cfg={art.cfg.name} cfg_hash={art.cfg_hash} "
+              f"kind={art.kind}")
     else:
-        steady(cfg, qparams)
+        art = _train_and_quantize()
+        if args.save:
+            api.save(art, args.save)
+            print(f"saved artifact -> {args.save} "
+                  f"(reload with --load {args.save})")
+    if args.bursty:
+        bursty(art)
+    else:
+        steady(art)
 
 
 if __name__ == "__main__":

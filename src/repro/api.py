@@ -1,0 +1,92 @@
+"""Stable public facade: quantize once, serve anywhere.
+
+This module is the supported entry point for everything downstream of
+the paper's PTQ pipeline — examples, benchmarks and external users go
+through it instead of reaching into ``core.pipeline`` / ``core.hybrid``
+/ ``serve.engine`` internals::
+
+    from repro import api
+
+    art = api.quantize(cfg, params, policy)        # data-free hybrid
+    art = api.quantize(cfg, params, policy,        # calibrated blockwise
+                       batches=calib_batches)      #   (per-layer Eq. 18)
+    api.save(art, "model.rqa")                     # versioned artifact
+    art = api.load("model.rqa")                    # any process, later
+
+    eng = api.Engine.from_artifact(art, n_slots=8, max_len=512)
+    for tok in eng.generate(prompt, max_new_tokens=64):
+        ...                                        # per-token streaming;
+                                                   # close() cancels
+
+Artifact kinds (see ``core/artifact.py`` for the on-disk schema and the
+versioning rules):
+
+* ``"tree"`` — servable stacked param pytree (``quantize`` without
+  batches).  ``Engine.from_artifact`` takes exactly this kind.
+* ``"blockwise_lm"`` — per-layer heterogeneous calibrated LM
+  (``quantize`` with batches); evaluate it with :func:`lm` which
+  rebuilds the ``QuantizedLM`` eval interface.
+
+Round-trip contract: ``load(save(quantize(...)))`` produces bit-identical
+dequantized weights — and therefore bit-identical greedy decodes — to
+the in-memory pipeline output (guarded by ``tests/test_artifact.py`` and
+the cross-process CI step).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+
+from repro.core.artifact import (ArtifactFormatError, FORMAT_VERSION,
+                                 QuantizedArtifact)
+from repro.core.artifact import load as _load_artifact
+from repro.core.hybrid import QuantReport, quantize_tree
+from repro.core.pipeline import (QuantizedLM, blockwise_quantize,
+                                 lm_from_artifact)
+from repro.core.policy import PAPER_3_275, QuantPolicy
+from repro.serve.engine import ServeEngine as Engine
+from repro.serve.engine import clear_closure_cache
+
+__all__ = ["quantize", "save", "load", "lm", "Engine",
+           "QuantizedArtifact", "QuantPolicy", "QuantReport",
+           "ArtifactFormatError", "FORMAT_VERSION", "PAPER_3_275",
+           "clear_closure_cache"]
+
+
+def quantize(cfg, params, policy: QuantPolicy = PAPER_3_275, *,
+             batches: Optional[List[Dict[str, Any]]] = None,
+             seed: int = 0) -> QuantizedArtifact:
+    """Run the paper's proxy-guided hybrid SQ/VQ quantization.
+
+    Without ``batches`` the data-free variant quantizes the stacked
+    param tree in place (kind 'tree', directly servable).  With
+    calibration ``batches`` the block-wise pipeline runs GPTQ/GPTVQ with
+    exact per-layer Eq. 18 decisions (kind 'blockwise_lm', for the
+    paper-fidelity quality evals — rebuild with :func:`lm`).
+    """
+    key = jax.random.PRNGKey(seed)
+    if batches is None:
+        qparams, report = quantize_tree(params, policy, key)
+        return QuantizedArtifact(cfg=cfg, params=qparams, policy=policy,
+                                 report=report, kind="tree")
+    qlm = blockwise_quantize(cfg, params, batches, policy, key)
+    return qlm.to_artifact(policy=policy)
+
+
+def save(artifact: QuantizedArtifact, path: str) -> str:
+    """Write ``artifact`` to ``path`` (versioned single-file npz)."""
+    return artifact.save(path)
+
+
+def load(path: str) -> QuantizedArtifact:
+    """Read an artifact written by :func:`save`.
+
+    Raises :class:`ArtifactFormatError` on a format-version mismatch.
+    """
+    return _load_artifact(path)
+
+
+def lm(artifact: QuantizedArtifact) -> QuantizedLM:
+    """Rebuild the eval-interface LM from a 'blockwise_lm' artifact."""
+    return lm_from_artifact(artifact)

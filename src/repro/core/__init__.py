@@ -1,3 +1,17 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+
+
+def dataclass_from_dict(cls, d: dict, what: str = None):
+    """Construct dataclass ``cls`` from a JSON-manifest dict, rejecting
+    unknown fields with a clear newer-schema error (the artifact
+    contract: never a silent best-effort parse)."""
+    import dataclasses
+    known = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(
+            f"{what or cls.__name__} dict has unknown fields "
+            f"{sorted(unknown)} (artifact written by a newer schema?)")
+    return cls(**d)

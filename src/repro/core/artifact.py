@@ -1,0 +1,322 @@
+"""QuantizedArtifact: the versioned on-disk boundary between the PTQ
+pipeline and everything that serves or evaluates its output.
+
+Quantize once on a big host, ``save(path)``; boot any number of cheap
+engines elsewhere with ``load(path)`` — no re-calibration, bit-identical
+weights, warm jit-closure caches (serve/engine.py keys its shared cache
+by the config hash recorded here).
+
+On-disk format (single ``.npz`` file)
+-------------------------------------
+
+One uncompressed numpy zip with two kinds of entries:
+
+* ``manifest`` — a UTF-8 JSON document (stored as a uint8 array) that
+  fully describes the payload::
+
+      {
+        "magic": "rwkvquant-artifact",
+        "format_version": 1,
+        "kind": "tree" | "blockwise_lm",
+        "cfg": {...ModelConfig fields...},
+        "cfg_hash": "<16 hex chars, registry.cfg_hash(cfg)>",
+        "policy": {...QuantPolicy fields...} | null,
+        "report": {"tau_c", "tau_f", "records": [...]} | null,
+        "leaves": [
+          {"path":  [["k", "blocks"], ["k", "tm"], ["k", "w_r"]],
+           "spec":  {"type": "array"}            # plain tensor, or
+                    {"type": "sq", ...}          # SQTensor statics, or
+                    {"type": "vq", ...}          # VQTensor statics, or
+                    {"type": "fused_hybrid", ...},
+           "arrays": [{"npz": "t0", "dtype": "uint32", "shape": [...]},
+                      ...]},
+          ...
+        ]
+      }
+
+* ``t<i>`` — one uint8 buffer per array field, holding the array's raw
+  little-endian bytes.  ``dtype``/``shape`` live in the manifest, so any
+  dtype jax can produce (including bfloat16) round-trips bit-exactly
+  without relying on npy descr support.
+
+Leaf specs and array-field order are defined by
+``core.quantized.container_to_spec`` / ``container_from_spec`` — that
+pair IS the leaf schema.  Pytree paths are encoded as ``["k", key]``
+(dict entry) / ``["i", idx]`` (sequence entry) pairs; tuples are
+restored as lists.
+
+Versioning rules
+----------------
+
+* ``format_version`` is bumped on ANY incompatible change: manifest
+  layout, leaf spec fields, array-field order, or byte encoding.
+* ``load`` refuses a mismatched version (and an unknown ``kind``) with
+  :class:`ArtifactFormatError` naming both versions — never a silent
+  best-effort parse; ``save`` refuses to write any version but its own.
+* Unknown ``cfg``/``policy``/report fields (written by a newer schema
+  within the same format version) also raise, with the offending names.
+* The manifest is strict RFC-8259 JSON: non-finite floats (report taus,
+  nan proxies) are encoded as ``{"__nonfinite__": "inf"|"-inf"|"nan"}``
+  so non-Python consumers can parse it.
+
+The payload kinds:
+
+* ``"tree"`` — a servable param pytree (scan-stacked blocks), as
+  produced by ``core.hybrid.quantize_tree``; ``ServeEngine.from_artifact``
+  accepts exactly this kind.
+* ``"blockwise_lm"`` — the per-layer heterogeneous ``QuantizedLM`` of
+  ``core.pipeline.blockwise_quantize`` (payload: its embed_params /
+  blocks / tail trees); rebuild with ``core.pipeline.lm_from_artifact``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import zipfile
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantized as qz
+from repro.core.hybrid import QuantReport
+from repro.core.policy import QuantPolicy
+from repro.models import registry as R
+
+MAGIC = "rwkvquant-artifact"
+FORMAT_VERSION = 1
+KINDS = ("tree", "blockwise_lm")
+
+
+class ArtifactFormatError(ValueError):
+    """The file is not a readable QuantizedArtifact (wrong magic/version)."""
+
+
+# --------------------------------------------------------------------------- #
+#  Array <-> raw bytes (dtype-agnostic, bit-exact)
+# --------------------------------------------------------------------------- #
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes                      # ships with jax
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _encode_array(arr) -> Tuple[Dict[str, Any], np.ndarray]:
+    a = np.ascontiguousarray(np.asarray(arr))
+    meta = {"dtype": a.dtype.name, "shape": list(a.shape)}
+    return meta, a.reshape(-1).view(np.uint8)
+
+
+def _decode_array(meta: Dict[str, Any], buf: np.ndarray) -> jax.Array:
+    a = np.frombuffer(buf.tobytes(), dtype=_np_dtype(meta["dtype"]))
+    return jnp.asarray(a.reshape(tuple(meta["shape"])))
+
+
+# --------------------------------------------------------------------------- #
+#  Strict JSON: non-finite floats (QuantReport taus / nan proxies) are
+#  encoded as {"__nonfinite__": "inf"|"-inf"|"nan"} so the manifest is
+#  RFC-8259 parseable by non-Python consumers (allow_nan=False enforces).
+# --------------------------------------------------------------------------- #
+def _json_sanitize(obj):
+    import math
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return {"__nonfinite__": repr(obj)}
+    if isinstance(obj, dict):
+        return {k: _json_sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_sanitize(v) for v in obj]
+    return obj
+
+
+def _json_restore(obj):
+    if isinstance(obj, dict):
+        if set(obj) == {"__nonfinite__"}:
+            return float(obj["__nonfinite__"])
+        return {k: _json_restore(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_json_restore(v) for v in obj]
+    return obj
+
+
+# --------------------------------------------------------------------------- #
+#  Pytree path <-> JSON
+# --------------------------------------------------------------------------- #
+def _encode_path(path) -> List[List[Any]]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(["k", str(k.key)])
+        elif hasattr(k, "idx"):
+            out.append(["i", int(k.idx)])
+        else:
+            raise TypeError(f"unsupported pytree path entry: {k!r}")
+    return out
+
+
+def _insert(node, path: List[List[Any]], value):
+    kind, key = path[0]
+    if node is None:
+        node = {} if kind == "k" else []
+    if kind == "k":
+        node[key] = value if len(path) == 1 else \
+            _insert(node.get(key), path[1:], value)
+    else:
+        while len(node) <= key:
+            node.append(None)
+        node[key] = value if len(path) == 1 else \
+            _insert(node[key], path[1:], value)
+    return node
+
+
+def _build_tree(entries: List[Tuple[List[List[Any]], Any]]):
+    root = None
+    for path, value in entries:
+        if not path:                      # the whole tree is one leaf
+            return value
+        root = _insert(root, path, value)
+    return root
+
+
+# --------------------------------------------------------------------------- #
+#  The artifact
+# --------------------------------------------------------------------------- #
+@dataclass
+class QuantizedArtifact:
+    """In-memory handle of the on-disk format (see module docstring)."""
+    cfg: Any                                  # ModelConfig
+    params: Any                               # pytree (kind-dependent)
+    policy: Optional[QuantPolicy] = None
+    report: Optional[QuantReport] = None
+    kind: str = "tree"
+    format_version: int = FORMAT_VERSION
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"unknown artifact kind {self.kind!r}; this build knows "
+                f"{KINDS}")
+
+    @property
+    def cfg_hash(self) -> str:
+        return R.cfg_hash(self.cfg)
+
+    # ------------------------------------------------------------------ #
+    def save(self, path: str) -> str:
+        """Write the artifact to ``path`` (single .npz file).
+
+        Only the current FORMAT_VERSION layout can be written; saving an
+        artifact whose ``format_version`` disagrees (e.g. loaded by a
+        future forward-porting build) is refused rather than mislabeled.
+        """
+        if self.format_version != FORMAT_VERSION:
+            raise ArtifactFormatError(
+                f"cannot save format_version {self.format_version}: this "
+                f"build writes version {FORMAT_VERSION}")
+        leaves = []
+        tensors: Dict[str, np.ndarray] = {}
+
+        def add_array(arr) -> Dict[str, Any]:
+            key = f"t{len(tensors)}"
+            meta, buf = _encode_array(arr)
+            tensors[key] = buf
+            return dict(meta, npz=key)
+
+        flat = jax.tree_util.tree_flatten_with_path(
+            self.params, is_leaf=qz.is_serializable_container)[0]
+        for tree_path, leaf in flat:
+            if qz.is_serializable_container(leaf):
+                spec, arrays = qz.container_to_spec(leaf)
+            elif isinstance(leaf, (jax.Array, np.ndarray)):
+                spec, arrays = {"type": "array"}, [leaf]
+            else:
+                raise TypeError(
+                    f"cannot serialize leaf of type {type(leaf)} at "
+                    f"{_encode_path(tree_path)}")
+            leaves.append({"path": _encode_path(tree_path), "spec": spec,
+                           "arrays": [add_array(a) for a in arrays]})
+
+        manifest = {
+            "magic": MAGIC,
+            "format_version": FORMAT_VERSION,
+            "kind": self.kind,
+            "cfg": R.cfg_to_dict(self.cfg),
+            "cfg_hash": self.cfg_hash,
+            "policy": self.policy.to_dict() if self.policy else None,
+            "report": self.report.to_dict() if self.report else None,
+            "leaves": leaves,
+        }
+        mbuf = np.frombuffer(
+            json.dumps(_json_sanitize(manifest),
+                       allow_nan=False).encode("utf-8"),
+            dtype=np.uint8)
+        # atomic: an interrupted save must not clobber a good artifact
+        tmp = f"{path}.tmp"
+        try:
+            with open(tmp, "wb") as fh:
+                np.savez(fh, manifest=mbuf, **tensors)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+        return path
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def load(cls, path: str) -> "QuantizedArtifact":
+        """Read an artifact; raises :class:`ArtifactFormatError` on any
+        magic/version mismatch before touching the payload."""
+        try:
+            zf_handle = np.load(path, allow_pickle=False)
+        except zipfile.BadZipFile as e:
+            raise ArtifactFormatError(
+                f"{path}: not a readable artifact (truncated or not an "
+                f"npz: {e})") from e
+        with zf_handle as zf:
+            if "manifest" not in zf:
+                raise ArtifactFormatError(
+                    f"{path}: no manifest entry — not a QuantizedArtifact")
+            manifest = _json_restore(
+                json.loads(bytes(zf["manifest"]).decode("utf-8")))
+            if manifest.get("magic") != MAGIC:
+                raise ArtifactFormatError(
+                    f"{path}: bad magic {manifest.get('magic')!r} "
+                    f"(expected {MAGIC!r})")
+            ver = manifest.get("format_version")
+            if ver != FORMAT_VERSION:
+                raise ArtifactFormatError(
+                    f"{path}: artifact format version {ver}, but this "
+                    f"build reads version {FORMAT_VERSION}; re-quantize "
+                    "or load with a matching build")
+            if manifest.get("kind") not in KINDS:
+                raise ArtifactFormatError(
+                    f"{path}: unknown artifact kind "
+                    f"{manifest.get('kind')!r}; this build knows {KINDS}")
+            entries = []
+            for ent in manifest["leaves"]:
+                arrays = [_decode_array(m, zf[m["npz"]])
+                          for m in ent["arrays"]]
+                spec = ent["spec"]
+                if spec["type"] == "array":
+                    (leaf,) = arrays
+                else:
+                    leaf = qz.container_from_spec(spec, arrays)
+                entries.append((ent["path"], leaf))
+        return cls(cfg=R.cfg_from_dict(manifest["cfg"]),
+                   params=_build_tree(entries),
+                   policy=QuantPolicy.from_dict(manifest["policy"])
+                   if manifest["policy"] else None,
+                   report=QuantReport.from_dict(manifest["report"])
+                   if manifest["report"] else None,
+                   kind=manifest["kind"])
+
+
+def save(artifact: QuantizedArtifact, path: str) -> str:
+    return artifact.save(path)
+
+
+def load(path: str) -> QuantizedArtifact:
+    return QuantizedArtifact.load(path)

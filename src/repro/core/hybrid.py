@@ -70,6 +70,26 @@ class QuantReport:
                 f"mean_bpw={self.mean_bpw:.3f} "
                 f"tau_c={self.tau_c:.4g} tau_f={self.tau_f:.4g}")
 
+    # ------------------------------------------------------------------ #
+    #  Serialization (artifact manifest; Python json handles the nan/inf
+    #  thresholds the force_method policies produce)
+    # ------------------------------------------------------------------ #
+    def to_dict(self) -> dict:
+        return {"tau_c": float(self.tau_c), "tau_f": float(self.tau_f),
+                "records": [dataclasses.asdict(r) for r in self.records]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "QuantReport":
+        from repro.core import dataclass_from_dict
+        unknown = set(d) - {"tau_c", "tau_f", "records"}
+        if unknown:
+            raise ValueError(
+                f"QuantReport dict has unknown fields {sorted(unknown)} "
+                "(artifact written by a newer schema?)")
+        return cls(records=[dataclass_from_dict(TensorRecord, r)
+                            for r in d["records"]],
+                   tau_c=float(d["tau_c"]), tau_f=float(d["tau_f"]))
+
 
 # --------------------------------------------------------------------------- #
 #  Tree walking

@@ -156,6 +156,31 @@ class QuantizedLM:
                 + sum(qz.param_bytes(b) for b in self.blocks)
                 + qz.param_bytes(self.tail))
 
+    # ------------------------------------------------------------------ #
+    #  Artifact boundary (core/artifact.py): quantize once, eval anywhere
+    # ------------------------------------------------------------------ #
+    def to_artifact(self, policy: Optional[QuantPolicy] = None):
+        """Pack this (possibly per-layer heterogeneous) LM into a
+        ``kind='blockwise_lm'`` :class:`QuantizedArtifact`."""
+        from repro.core.artifact import QuantizedArtifact
+        payload = {"embed_params": self.embed_params,
+                   "blocks": list(self.blocks), "tail": self.tail}
+        return QuantizedArtifact(cfg=self.cfg, params=payload,
+                                 policy=policy, report=self.report,
+                                 kind="blockwise_lm")
+
+
+def lm_from_artifact(artifact) -> QuantizedLM:
+    """Rebuild a :class:`QuantizedLM` from a blockwise artifact."""
+    if artifact.kind != "blockwise_lm":
+        raise ValueError(
+            f"artifact kind {artifact.kind!r} is not 'blockwise_lm'; "
+            "tree artifacts serve through ServeEngine.from_artifact")
+    p = artifact.params
+    return QuantizedLM(cfg=artifact.cfg, embed_params=p["embed_params"],
+                       blocks=list(p["blocks"]), tail=p["tail"],
+                       report=artifact.report or QuantReport())
+
 
 def blockwise_quantize(cfg, params, batches: List[Dict], policy: QuantPolicy,
                        key, proxy_fn=None) -> QuantizedLM:

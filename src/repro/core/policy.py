@@ -48,6 +48,19 @@ class QuantPolicy:
     def vq_bpw(self) -> float:
         return self.vq_k / self.vq_d         # + codebook/numel (tensor-dep.)
 
+    # ------------------------------------------------------------------ #
+    #  Serialization (artifact manifest)
+    # ------------------------------------------------------------------ #
+    def to_dict(self) -> dict:
+        """JSON-safe field dict (inverse: :meth:`from_dict`)."""
+        import dataclasses
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "QuantPolicy":
+        from repro.core import dataclass_from_dict
+        return dataclass_from_dict(cls, d)
+
 
 # paper's operating point
 PAPER_3_275 = QuantPolicy()

@@ -42,6 +42,11 @@ each quantizer group launches once, so a layer whose r/k/v/g split 3 SQ
 The containers keep the original weight's logical shape/sharding semantics:
 codes are packed along the *input-channel* axis (axis 0), so a weight
 sharded on its output axis keeps the same PartitionSpec.
+
+``container_to_spec`` / ``container_from_spec`` define the on-disk leaf
+schema used by ``core/artifact.py`` (versioned QuantizedArtifact): every
+container maps to a JSON-safe static spec plus an ordered array list,
+and the round trip is bit-exact.
 """
 from __future__ import annotations
 
@@ -225,6 +230,86 @@ class FusedHybrid:
     @property
     def n_proj(self) -> int:
         return len(self.sq_idx) + len(self.vq_idx)
+
+
+# --------------------------------------------------------------------------- #
+#  Container (de)serialization: container <-> (spec, arrays)
+#
+#  The spec is a JSON-safe dict naming the container type and its static
+#  fields; the arrays list carries the pytree array fields in a fixed,
+#  documented order (see each branch).  ``core/artifact.py`` stores the
+#  spec in the artifact manifest and the arrays in the npz payload, so
+#  this pair is the single source of truth for the on-disk leaf schema.
+#  Round trip contract: container_from_spec(*container_to_spec(w))
+#  rebuilds ``w`` with bit-identical array fields and equal statics.
+# --------------------------------------------------------------------------- #
+def container_to_spec(w):
+    """Quantized container -> (json-safe spec dict, [array fields])."""
+    if isinstance(w, SQTensor):
+        return ({"type": "sq", "shape": list(w.shape), "bits": w.bits,
+                 "group": w.group},
+                [w.packed, w.scales, w.biases])
+    if isinstance(w, VQTensor):
+        return ({"type": "vq", "shape": list(w.shape), "d": w.d, "k": w.k},
+                [w.packed, w.codebook])
+    if isinstance(w, FusedHybrid):
+        spec = {"type": "fused_hybrid", "shape": list(w.shape),
+                "sq_idx": list(w.sq_idx), "vq_idx": list(w.vq_idx),
+                "sq": None, "vq": None}
+        arrays = []
+        for name in ("sq", "vq"):
+            part = getattr(w, name)
+            if part is not None:
+                sub, sub_arrays = container_to_spec(part)
+                spec[name] = sub
+                arrays.extend(sub_arrays)
+        return spec, arrays
+    raise TypeError(f"not a quantized container: {type(w)}")
+
+
+def container_from_spec(spec: dict, arrays):
+    """Inverse of :func:`container_to_spec`; consumes ``arrays`` in order."""
+    arrays = list(arrays)
+    t = spec["type"]
+    if t == "sq":
+        packed, scales, biases = arrays
+        return SQTensor(packed=packed, scales=scales, biases=biases,
+                        shape=tuple(spec["shape"]), bits=int(spec["bits"]),
+                        group=int(spec["group"]))
+    if t == "vq":
+        packed, codebook = arrays
+        return VQTensor(packed=packed, codebook=codebook,
+                        shape=tuple(spec["shape"]), d=int(spec["d"]),
+                        k=int(spec["k"]))
+    if t == "fused_hybrid":
+        parts = {"sq": None, "vq": None}
+        for name in ("sq", "vq"):
+            sub = spec[name]
+            if sub is not None:
+                n = _spec_n_arrays(sub)
+                parts[name] = container_from_spec(sub, arrays[:n])
+                arrays = arrays[n:]
+        return FusedHybrid(sq=parts["sq"], vq=parts["vq"],
+                           sq_idx=tuple(spec["sq_idx"]),
+                           vq_idx=tuple(spec["vq_idx"]),
+                           shape=tuple(spec["shape"]))
+    raise ValueError(f"unknown container spec type: {t!r}")
+
+
+def _spec_n_arrays(spec: dict) -> int:
+    """Array-field count of a spec (for fused sub-spec consumption)."""
+    t = spec["type"]
+    if t == "sq":
+        return 3
+    if t == "vq":
+        return 2
+    return sum(_spec_n_arrays(spec[n]) for n in ("sq", "vq")
+               if spec[n] is not None)
+
+
+def is_serializable_container(w) -> bool:
+    """True for every container :func:`container_to_spec` handles."""
+    return isinstance(w, QTensor) or isinstance(w, FusedHybrid)
 
 
 # --------------------------------------------------------------------------- #

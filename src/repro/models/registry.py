@@ -72,6 +72,34 @@ def prepare_decode_params(cfg, params):
 
 
 # --------------------------------------------------------------------------- #
+#  Config serialization / hashing
+# --------------------------------------------------------------------------- #
+def cfg_to_dict(cfg: ModelConfig) -> Dict[str, Any]:
+    """JSON-safe field dict of a ModelConfig (inverse: cfg_from_dict)."""
+    import dataclasses
+    return dataclasses.asdict(cfg)
+
+
+def cfg_from_dict(d: Dict[str, Any]) -> ModelConfig:
+    from repro.core import dataclass_from_dict
+    return dataclass_from_dict(ModelConfig, d)
+
+
+def cfg_hash(cfg: ModelConfig) -> str:
+    """Stable content hash of a config (16 hex chars).
+
+    Two separately constructed but field-equal configs hash equal; used
+    as the cross-engine jit-closure cache key (serve/engine.py) and
+    recorded in QuantizedArtifact manifests so a loaded artifact can be
+    matched against the config it was quantized for.
+    """
+    import hashlib
+    import json
+    payload = json.dumps(cfg_to_dict(cfg), sort_keys=True, default=str)
+    return hashlib.sha256(payload.encode("utf-8")).hexdigest()[:16]
+
+
+# --------------------------------------------------------------------------- #
 #  Abstract inputs for the dry-run (no allocation)
 # --------------------------------------------------------------------------- #
 def _sds(shape, dtype):

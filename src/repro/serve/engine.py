@@ -51,9 +51,34 @@ Admission policy (fast path)
 
 Per-request queue wait (submit→admit, in engine ticks) is recorded on
 each ``Request`` for the bursty-trace benchmark.
+
+Shared jit-closure cache
+------------------------
+
+The jitted prefill / decode / tick closures are NOT per-engine: they
+live in a module-level cache keyed by ``(kind, cfg_hash, impl[,
+max_len])`` (``registry.cfg_hash`` — field-equal configs share).  jax's
+own per-closure compile cache then keys on argument shapes (pool sizes,
+prefill (rows, bucket) pairs), so a second engine with the same config,
+impl and shapes reuses every compilation from the first: engine
+cold-start is paid once per process, not once per ``ServeEngine`` (the
+invariant-test harness and elastic pool resizes ride this).
+``jit_recompiles`` therefore counts the shapes **this engine** traced
+that were not already warm in the shared cache; ``clear_closure_cache``
+resets the process-wide state (benchmarks measure cold vs warm with it).
+
+Streaming
+---------
+
+``generate(prompt, ...)`` yields tokens one at a time as the engine
+decodes them (interleaving fairly with other live requests) and supports
+cancellation: closing the generator — or ``cancel(uid)`` — frees the
+slot immediately.  ``ServeEngine.from_artifact`` boots an engine
+directly from a saved ``QuantizedArtifact`` (kind 'tree').
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Dict, List, Optional, Tuple
@@ -70,6 +95,49 @@ _NO_BATCH_AX = -1      # sentinel: leaf has no batch axis (e.g. cache index)
 POOL_SIZES = (1, 4, 8, 16, 32)   # decode tick sizes the engine jits
 MIN_BUCKET = 8                   # smallest prompt-length bucket
 
+# --------------------------------------------------------------------------- #
+#  Cross-engine jit-closure cache (see module docstring).  LRU-bounded:
+#  each entry pins a jitted closure plus every executable it compiled,
+#  so a long-lived process cycling through many configs must not grow
+#  without bound (the limit is far above any real serving mix).
+# --------------------------------------------------------------------------- #
+_CLOSURE_CACHE: "OrderedDict[tuple, dict]" = OrderedDict()
+_CLOSURE_CACHE_MAX = 64
+
+
+def _shared_closure(key: tuple, builder) -> dict:
+    """{"fn": jitted closure, "shapes": set of traced shape keys}."""
+    ent = _CLOSURE_CACHE.get(key)
+    if ent is None:
+        ent = {"fn": builder(), "shapes": set()}
+        _CLOSURE_CACHE[key] = ent
+        while len(_CLOSURE_CACHE) > _CLOSURE_CACHE_MAX:
+            _CLOSURE_CACHE.popitem(last=False)
+    else:
+        _CLOSURE_CACHE.move_to_end(key)
+    return ent
+
+
+def clear_closure_cache() -> None:
+    """Drop every shared jitted closure (cold-start measurements/tests)."""
+    _CLOSURE_CACHE.clear()
+
+
+def _tree_digest(tree) -> str:
+    """Digest of a param tree's structure + leaf shapes/dtypes.
+
+    Part of every recorded shape key: the same config can serve float,
+    SQ, VQ or fused-hybrid trees, and jax re-traces when the pytree
+    structure changes even though the closure (cfg, impl) is shared —
+    without this, ``jit_recompiles`` would report 0 for a warm cfg
+    while jax actually recompiled."""
+    import hashlib
+    parts = [str(jax.tree.structure(tree))]
+    for leaf in jax.tree.leaves(tree):
+        parts.append(f"{getattr(leaf, 'shape', ())}"
+                     f"/{getattr(leaf, 'dtype', '?')}")
+    return hashlib.sha256("|".join(parts).encode()).hexdigest()[:12]
+
 
 @dataclass
 class Request:
@@ -79,6 +147,7 @@ class Request:
     temperature: float = 0.0             # 0 -> greedy
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    cancelled: bool = False              # aborted via cancel()/generate close
     submit_tick: int = 0                 # engine tick at submit()
     admit_tick: int = -1                 # engine tick at admission
 
@@ -180,8 +249,8 @@ class ServeEngine:
         self.pool_resizes = 0
         self._axes = _batch_axes(cfg, max_len)
         self._ragged = R.supports_ragged_prefill(cfg)
-        self._prefill_shapes: set = set()   # (rows, bucket) traced
-        self._tick_shapes: set = set()      # pool sizes traced
+        # shapes THIS engine traced that the shared cache had not seen
+        self._new_shapes = {"decode_tick": 0, "prefill": 0}
 
         # slow path always runs the fixed n_slots pool; the fast path may
         # resize over POOL_SIZES (clipped to n_slots)
@@ -197,6 +266,7 @@ class ServeEngine:
 
         self._dparams = R.prepare_decode_params(cfg, params) \
             if fast_path else params
+        self._params_digest = _tree_digest(self._dparams)
 
         def _with_impl(fn):
             def wrapped(*a):
@@ -204,14 +274,47 @@ class ServeEngine:
                     return fn(*a)
             return wrapped
 
-        self._decode = jax.jit(_with_impl(
-            lambda p, c, t: R.decode_step(cfg, p, c, t)))
-        self._prefill = jax.jit(_with_impl(
-            lambda p, b, c: R.prefill(cfg, p, b, c)))
-        self._tick = jax.jit(partial(_tick, cfg, impl, max_len))
+        # jitted closures come from the process-wide cache: a second
+        # engine with an equal config + impl reuses every compilation
+        chash = R.cfg_hash(cfg)
+        self._decode_ent = _shared_closure(
+            ("decode", chash, impl),
+            lambda: jax.jit(_with_impl(
+                lambda p, c, t: R.decode_step(cfg, p, c, t))))
+        self._prefill_ent = _shared_closure(
+            ("prefill", chash, impl),
+            lambda: jax.jit(_with_impl(
+                lambda p, b, c: R.prefill(cfg, p, b, c))))
+        self._tick_ent = _shared_closure(
+            ("tick", chash, impl, max_len),
+            lambda: jax.jit(partial(_tick, cfg, impl, max_len)))
+        self._decode = self._decode_ent["fn"]
+        self._prefill = self._prefill_ent["fn"]
+        self._tick = self._tick_ent["fn"]
 
         if fast_path:
             self._init_buffers(self.pool, seed)
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_artifact(cls, artifact, **kw) -> "ServeEngine":
+        """Boot an engine from a loaded ``QuantizedArtifact``.
+
+        Accepts kind 'tree' (a servable stacked param pytree); blockwise
+        LM artifacts evaluate through ``core.pipeline.lm_from_artifact``
+        instead.  Keyword args are forwarded to the constructor.
+        """
+        if artifact.kind != "tree":
+            raise ValueError(
+                f"artifact kind {artifact.kind!r} is not servable; "
+                "ServeEngine.from_artifact needs kind 'tree'")
+        return cls(artifact.cfg, artifact.params, **kw)
+
+    def _note_shape(self, which: str, ent: dict, shape_key) -> None:
+        """Record a traced shape; count it only if the cache was cold."""
+        if shape_key not in ent["shapes"]:
+            ent["shapes"].add(shape_key)
+            self._new_shapes[which] += 1
 
     def _init_buffers(self, pool: int, seed: Optional[int] = None) -> None:
         # per-slot cache index from the start (keeps the tick jit cache
@@ -225,24 +328,105 @@ class ServeEngine:
         self._temps = jnp.zeros((pool,), jnp.float32)
         self._maxnew = jnp.zeros((pool,), jnp.int32)
         self._out = jnp.zeros((pool, self.max_len), jnp.int32)
+        self._host_tcount = None        # host copy, refreshed by _harvest
         if seed is not None:
             self._dkey = jax.random.PRNGKey(seed + 1)
 
     # ------------------------------------------------------------------ #
     def submit(self, prompt, max_new_tokens: int = 32,
                temperature: float = 0.0) -> int:
+        if max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens} "
+                "(the prefill always emits the first token)")
         self._uid += 1
         self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
                                   max_new_tokens, temperature,
                                   submit_tick=self.tick_no))
         return self._uid
 
+    def cancel(self, uid: int) -> bool:
+        """Abort a queued or running request.  Frees its slot immediately
+        (the row's decode output is masked from then on); the request is
+        marked ``cancelled`` and moved to ``completed`` with whatever
+        tokens it had produced.  Returns False when ``uid`` is unknown
+        or already finished."""
+        for i, r in enumerate(self.queue):
+            if r.uid == uid:
+                self.queue.pop(i)
+                r.done = r.cancelled = True
+                self.completed.append(r)
+                return True
+        for s in range(self.pool):
+            r = self.slot_req[s]
+            if r is not None and r.uid == uid:
+                r.out_tokens = self._tokens_so_far(r)
+                r.done = r.cancelled = True
+                self.slot_req[s] = None
+                if self.fast_path:
+                    self._live = self._live.at[s].set(False)
+                self.completed.append(r)
+                return True
+        return False
+
+    def _tokens_so_far(self, req: Request) -> List[int]:
+        """Tokens ``req`` has produced so far (one device pull on the
+        fast path while the request is still live; the token count is
+        reused from the completion check ``_harvest`` just made)."""
+        if req.done or not self.fast_path:
+            return list(req.out_tokens)
+        for s in range(self.pool):
+            if self.slot_req[s] is req:
+                if self._host_tcount is not None:
+                    tc = int(self._host_tcount[s])
+                    row = np.asarray(self._out[s])
+                    self.host_syncs += 1
+                else:                      # no harvest since (re)size
+                    tc, row = jax.device_get(
+                        (self._tcount[s], self._out[s]))
+                    self.host_syncs += 1
+                return [int(t) for t in row[:int(tc)]]
+        return list(req.out_tokens)
+
+    def generate(self, prompt, max_new_tokens: int = 32,
+                 temperature: float = 0.0, max_ticks: int = 100_000):
+        """Stream one request's tokens as the engine decodes them.
+
+        Yields each new token (int) as soon as a tick produces it, while
+        other live requests keep decoding in the same pool.  Closing the
+        generator early (``gen.close()`` / breaking out of the loop and
+        dropping it) cancels the request and frees its slot.
+        """
+        uid = self.submit(prompt, max_new_tokens, temperature)
+        req = self.queue[-1]
+        assert req.uid == uid
+        sent = 0
+        try:
+            for _ in range(max_ticks):
+                if req.done:
+                    break
+                self.step()
+                toks = self._tokens_so_far(req)
+                while sent < len(toks):
+                    yield toks[sent]
+                    sent += 1
+            if not req.done:               # budget exhausted mid-request
+                raise RuntimeError(f"generate: no completion in "
+                                   f"{max_ticks} ticks")
+            while sent < len(req.out_tokens):
+                yield req.out_tokens[sent]
+                sent += 1
+        finally:
+            if not req.done:
+                self.cancel(uid)
+
     @property
     def jit_recompiles(self) -> Dict[str, int]:
-        """Distinct traced shapes: decode ticks (pool sizes) + prefills
-        ((rows, bucket) pairs).  The cost an admission policy pays."""
-        return {"decode_tick": len(self._tick_shapes),
-                "prefill": len(self._prefill_shapes)}
+        """Compilations THIS engine caused: decode-tick pool sizes and
+        prefill (rows, bucket) pairs it traced that were not already
+        warm in the shared closure cache.  A second engine with the same
+        (cfg, impl, shapes) reports zeros."""
+        return dict(self._new_shapes)
 
     # ------------------------------------------------------------------ #
     #  Elastic pool
@@ -304,6 +488,7 @@ class ServeEngine:
         old_req, old_pos = self.slot_req, self.slot_pos
         self.slot_req = [None] * new_pool
         self.slot_pos = np.zeros(new_pool, np.int32)
+        self._host_tcount = None        # stale slot mapping after resize
         for s, j in mapping.items():
             self.slot_req[j] = old_req[s]
             self.slot_pos[j] = old_pos[s]
@@ -375,7 +560,10 @@ class ServeEngine:
         batch = {"tokens": jnp.asarray(tokens)}
         if self._ragged:
             batch["lengths"] = jnp.asarray(lengths)
-        self._prefill_shapes.add((rows, bucket))
+        # max_len (cache shape) and the params structure key the trace
+        # even though the closure is shared across engines
+        self._note_shape("prefill", self._prefill_ent,
+                         (self._params_digest, rows, bucket, self.max_len))
         scratch = R.init_cache(self.cfg, rows, self.max_len)
         logits, scratch = self._prefill(self._dparams, batch, scratch)
         temps = jnp.asarray([r.temperature for r in reqs]
@@ -475,7 +663,8 @@ class ServeEngine:
         live_before = sum(r is not None for r in self.slot_req)
         if live_before == 0:
             return 0
-        self._tick_shapes.add(self.pool)
+        self._note_shape("decode_tick", self._tick_ent,
+                         (self._params_digest, self.pool))
         ticks = 0
         for _ in range(self.ticks_per_sync):
             (self.cache, self._tok, self._pos, self._tcount, self._live,
@@ -492,6 +681,7 @@ class ServeEngine:
         live, tcount, pos = jax.device_get(
             (self._live, self._tcount, self._pos))
         self.host_syncs += 1
+        self._host_tcount = tcount      # reused by _tokens_so_far
         finished = [s for s in range(self.pool)
                     if self.slot_req[s] is not None and not live[s]]
         self.slot_pos[:] = pos

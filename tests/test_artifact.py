@@ -1,0 +1,302 @@
+"""QuantizedArtifact round trips: save/load must be bit-exact.
+
+The artifact is the quantize-once / serve-anywhere boundary, so these
+tests pin the contract: every container type round-trips with bitwise-
+equal dequantized weights, greedy decode from a loaded artifact matches
+the in-memory pipeline output exactly, and a format-version mismatch is
+a loud, clear error — never a best-effort parse.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs import ALL_CONFIGS, reduced
+from repro.core import quantized as qz
+from repro.core.artifact import (ArtifactFormatError, FORMAT_VERSION,
+                                 QuantizedArtifact)
+from repro.core.hybrid import QuantReport, TensorRecord
+from repro.core.policy import DATAFREE_3_275, SQ_ONLY_3_25, QuantPolicy
+from repro.core.sq.rtn import rtn_quantize
+from repro.core.vq.gptvq import kmeans_vq_quantize
+from repro.models import registry as R
+
+KEY = jax.random.PRNGKey(0)
+ARCHS3 = ["rwkv6-3b", "rwkv7-0.1b", "llama3-8b"]   # rwkv6 / rwkv7 / dense
+
+
+def _cfg(name):
+    return reduced(ALL_CONFIGS[name], n_layers=2, vocab_size=128)
+
+
+def _assert_leaf_equal(a, b, path):
+    assert type(a) is type(b), (path, type(a), type(b))
+    if qz.is_quantized(a):
+        statics = ("shape", "bits", "group") if isinstance(a, qz.SQTensor) \
+            else ("shape", "d", "k")
+        for f in statics:
+            assert getattr(a, f) == getattr(b, f), (path, f)
+        da, db = np.asarray(a.dequant()), np.asarray(b.dequant())
+        assert da.dtype == db.dtype and np.array_equal(da, db), path
+    else:
+        assert a.dtype == b.dtype, path
+        assert np.array_equal(np.asarray(a), np.asarray(b)), path
+
+
+def _assert_trees_equal(t1, t2):
+    l1 = jax.tree_util.tree_leaves_with_path(t1, is_leaf=qz.is_quantized)
+    l2 = jax.tree_util.tree_leaves_with_path(t2, is_leaf=qz.is_quantized)
+    assert len(l1) == len(l2)
+    for (p1, a), (p2, b) in zip(l1, l2):
+        assert p1 == p2
+        _assert_leaf_equal(a, b, p1)
+
+
+@pytest.mark.parametrize("arch", ARCHS3)
+def test_roundtrip_bitexact_dequant(arch, tmp_path):
+    """save/load -> every SQ/VQ leaf dequantizes bit-identically."""
+    cfg = _cfg(arch)
+    params = R.init_params(cfg, KEY)
+    art = api.quantize(cfg, params, DATAFREE_3_275)
+    path = str(tmp_path / "m.rqa")
+    api.save(art, path)
+    art2 = api.load(path)
+    assert art2.kind == "tree"
+    assert art2.cfg == cfg
+    assert art2.cfg_hash == art.cfg_hash == R.cfg_hash(cfg)
+    assert art2.policy == DATAFREE_3_275
+    assert len(art2.report.records) == len(art.report.records)
+    _assert_trees_equal(art.params, art2.params)
+
+
+@pytest.mark.parametrize("arch", ARCHS3)
+def test_greedy_decode_bitexact_from_loaded_artifact(arch, tmp_path):
+    """Engine booted from a loaded artifact decodes bit-identically to
+    the in-memory quantization output."""
+    cfg = _cfg(arch)
+    params = R.init_params(cfg, KEY)
+    art = api.quantize(cfg, params, DATAFREE_3_275)
+    path = str(tmp_path / "m.rqa")
+    api.save(art, path)
+    loaded = api.load(path)
+
+    prompt = np.arange(6, dtype=np.int32)
+    outs = []
+    for a in (art, loaded):
+        eng = api.Engine.from_artifact(a, n_slots=2, max_len=48)
+        eng.submit(prompt, max_new_tokens=6)
+        (req,) = eng.run_until_drained()
+        outs.append(req.out_tokens)
+    assert outs[0] == outs[1]
+    assert len(outs[0]) == 6
+
+
+def test_fused_hybrid_roundtrip(tmp_path):
+    """A proxy-mixed FusedHybrid (SQ + VQ stacks) survives the artifact."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    ws = [jax.random.normal(k, (64, 32), dtype=jnp.float32)
+          for k in (k1, k2, k3)]
+    sq0 = rtn_quantize(ws[0], 3, 32)
+    sq2 = rtn_quantize(ws[2], 3, 32)
+    sq = jax.tree.map(lambda *t: jnp.stack(t), sq0, sq2)
+    vq1 = kmeans_vq_quantize(ws[1], 2, 4, k2, 5)
+    vq = jax.tree.map(lambda t: t[None], vq1)
+    fused = qz.FusedHybrid(sq=sq, vq=vq, sq_idx=(0, 2), vq_idx=(1,),
+                           shape=(64, 32))
+    cfg = _cfg("rwkv6-3b")
+    art = QuantizedArtifact(cfg=cfg, params={"w_rkvg": fused}, kind="tree")
+    path = str(tmp_path / "f.rqa")
+    art.save(path)
+    got = api.load(path).params["w_rkvg"]
+    assert isinstance(got, qz.FusedHybrid)
+    assert got.sq_idx == (0, 2) and got.vq_idx == (1,)
+    assert got.shape == (64, 32)
+    for pa, pb in ((fused.sq, got.sq), (fused.vq, got.vq)):
+        for la, lb in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+            assert la.dtype == lb.dtype
+            assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_decode_prepared_tree_roundtrip(tmp_path):
+    """The fused decode layout (prepare_decode_params) also round-trips
+    and serves identically to the freshly prepared tree."""
+    cfg = _cfg("rwkv6-3b")
+    params = R.init_params(cfg, KEY)
+    art = api.quantize(cfg, params, DATAFREE_3_275)
+    dq = R.prepare_decode_params(cfg, art.params)
+    art_d = QuantizedArtifact(cfg=cfg, params=dq, kind="tree")
+    path = str(tmp_path / "d.rqa")
+    art_d.save(path)
+    _assert_trees_equal_fused(dq, api.load(path).params)
+
+
+def _assert_trees_equal_fused(t1, t2):
+    l1 = jax.tree_util.tree_leaves_with_path(
+        t1, is_leaf=qz.is_serializable_container)
+    l2 = jax.tree_util.tree_leaves_with_path(
+        t2, is_leaf=qz.is_serializable_container)
+    assert len(l1) == len(l2)
+    for (p1, a), (p2, b) in zip(l1, l2):
+        assert p1 == p2
+        if isinstance(a, qz.FusedHybrid):
+            assert isinstance(b, qz.FusedHybrid)
+            assert (a.sq_idx, a.vq_idx, a.shape) == \
+                (b.sq_idx, b.vq_idx, b.shape)
+            for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                assert np.array_equal(np.asarray(la), np.asarray(lb))
+        else:
+            _assert_leaf_equal(a, b, p1)
+
+
+def test_blockwise_lm_artifact_roundtrip(tmp_path):
+    """Calibrated per-layer heterogeneous LMs ship as kind='blockwise_lm'
+    and evaluate bit-identically after reload."""
+    cfg = _cfg("rwkv6-3b")
+    params = R.init_params(cfg, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)}
+    art = api.quantize(cfg, params, DATAFREE_3_275, batches=[batch])
+    assert art.kind == "blockwise_lm"
+    path = str(tmp_path / "lm.rqa")
+    api.save(art, path)
+    lm1 = api.lm(art)
+    lm2 = api.lm(api.load(path))
+    lg1 = np.asarray(lm1.logits(batch))
+    lg2 = np.asarray(lm2.logits(batch))
+    assert np.array_equal(lg1, lg2)
+    # blockwise artifacts are not directly servable
+    with pytest.raises(ValueError, match="blockwise_lm"):
+        api.Engine.from_artifact(api.load(path))
+
+
+def _rewrite_manifest(path, mutate):
+    with np.load(path, allow_pickle=False) as zf:
+        data = {k: zf[k] for k in zf.files}
+    m = json.loads(bytes(data["manifest"]).decode("utf-8"))
+    mutate(m)
+    data["manifest"] = np.frombuffer(json.dumps(m).encode("utf-8"),
+                                     dtype=np.uint8)
+    with open(path, "wb") as fh:
+        np.savez(fh, **data)
+
+
+def test_format_version_mismatch_is_clear_error(tmp_path):
+    cfg = _cfg("rwkv6-3b")
+    params = R.init_params(cfg, KEY)
+    art = api.quantize(cfg, params, DATAFREE_3_275)
+    path = str(tmp_path / "v.rqa")
+    api.save(art, path)
+
+    _rewrite_manifest(path, lambda m: m.update(format_version=999))
+    with pytest.raises(ArtifactFormatError) as ei:
+        api.load(path)
+    assert "999" in str(ei.value) and str(FORMAT_VERSION) in str(ei.value)
+
+    _rewrite_manifest(path, lambda m: m.update(magic="something-else",
+                                               format_version=FORMAT_VERSION))
+    with pytest.raises(ArtifactFormatError, match="magic"):
+        api.load(path)
+
+    _rewrite_manifest(path, lambda m: m.update(magic="rwkvquant-artifact",
+                                               kind="sharded_tree"))
+    with pytest.raises(ArtifactFormatError, match="sharded_tree"):
+        api.load(path)
+
+
+def test_unknown_cfg_field_is_clear_error(tmp_path):
+    cfg = _cfg("rwkv6-3b")
+    params = R.init_params(cfg, KEY)
+    art = api.quantize(cfg, params, DATAFREE_3_275)
+    path = str(tmp_path / "u.rqa")
+    api.save(art, path)
+    _rewrite_manifest(path, lambda m: m["cfg"].update(future_field=1))
+    with pytest.raises(ValueError, match="future_field"):
+        api.load(path)
+
+
+def test_policy_and_report_dict_roundtrip():
+    pol = SQ_ONLY_3_25
+    assert QuantPolicy.from_dict(pol.to_dict()) == pol
+    rep = QuantReport(records=[TensorRecord(
+        path="blocks/tm/w_r", layer=3, kind="matmul", method="sq",
+        pc=0.5, pf=1.5, bpw=3.25, numel=1024)],
+        tau_c=float("inf"), tau_f=float("nan"))
+    # json must carry inf/nan thresholds (force_method policies)
+    d = json.loads(json.dumps(rep.to_dict()))
+    rep2 = QuantReport.from_dict(d)
+    assert rep2.records == rep.records
+    assert rep2.tau_c == float("inf") and np.isnan(rep2.tau_f)
+    # newer-schema fields are a clear error, not a raw TypeError
+    d["records"][0]["future_metric"] = 1.0
+    with pytest.raises(ValueError, match="future_metric"):
+        QuantReport.from_dict(d)
+    with pytest.raises(ValueError, match="future_flag"):
+        QuantPolicy.from_dict(dict(pol.to_dict(), future_flag=True))
+    with pytest.raises(ValueError, match="mean_bpw"):
+        QuantReport.from_dict(dict(rep.to_dict(), mean_bpw=3.3))
+
+
+def test_manifest_is_strict_json(tmp_path):
+    """Force-SQ reports carry inf/nan taus; the manifest must still be
+    RFC-8259 JSON (non-Python consumers can parse it)."""
+    cfg = _cfg("rwkv6-3b")
+    params = R.init_params(cfg, KEY)
+    art = api.quantize(cfg, params, SQ_ONLY_3_25)
+    assert art.report.tau_c == float("inf")
+    path = str(tmp_path / "s.rqa")
+    api.save(art, path)
+
+    def _reject(tok):
+        raise AssertionError(f"non-strict JSON constant {tok}")
+    with np.load(path, allow_pickle=False) as zf:
+        json.loads(bytes(zf["manifest"]).decode("utf-8"),
+                   parse_constant=_reject)
+    loaded = api.load(path)
+    assert loaded.report.tau_c == float("inf")
+    assert loaded.policy == SQ_ONLY_3_25
+
+
+def test_truncated_artifact_is_clear_error(tmp_path):
+    """A half-written file raises ArtifactFormatError, not BadZipFile;
+    save() is atomic, so an existing artifact survives an aborted save."""
+    cfg = _cfg("rwkv6-3b")
+    params = R.init_params(cfg, KEY)
+    art = api.quantize(cfg, params, DATAFREE_3_275)
+    path = str(tmp_path / "t.rqa")
+    api.save(art, path)
+    blob = open(path, "rb").read()
+    with open(path, "wb") as fh:
+        fh.write(blob[:len(blob) // 2])      # simulate interrupted write
+    with pytest.raises(ArtifactFormatError, match="truncated|not a"):
+        api.load(path)
+
+
+def test_save_refuses_foreign_format_version(tmp_path):
+    cfg = _cfg("rwkv6-3b")
+    art = QuantizedArtifact(cfg=cfg, params={}, kind="tree",
+                            format_version=2)
+    with pytest.raises(ArtifactFormatError, match="format_version 2"):
+        art.save(str(tmp_path / "x.rqa"))
+
+
+def test_bfloat16_leaves_roundtrip(tmp_path):
+    """Non-native numpy dtypes (bf16 scales/codebooks) are byte-exact."""
+    w = jax.random.normal(KEY, (64, 32), dtype=jnp.float32)
+    sq = rtn_quantize(w, 3, 32)
+    sq_bf16 = qz.SQTensor(packed=sq.packed,
+                          scales=sq.scales.astype(jnp.bfloat16),
+                          biases=sq.biases.astype(jnp.bfloat16),
+                          shape=sq.shape, bits=sq.bits, group=sq.group)
+    cfg = _cfg("rwkv6-3b")
+    art = QuantizedArtifact(cfg=cfg, params={"w": sq_bf16}, kind="tree")
+    path = str(tmp_path / "bf.rqa")
+    art.save(path)
+    got = api.load(path).params["w"]
+    assert got.scales.dtype == jnp.bfloat16
+    assert np.array_equal(
+        np.asarray(got.scales).view(np.uint16),
+        np.asarray(sq_bf16.scales).view(np.uint16))
+    assert np.array_equal(np.asarray(got.dequant()),
+                          np.asarray(sq_bf16.dequant()))

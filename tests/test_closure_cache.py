@@ -1,0 +1,138 @@
+"""Cross-engine shared jit-closure cache (serve/engine.py).
+
+Engines with equal (cfg, impl) share the jitted prefill/decode/tick
+closures through a module-level cache, so the second engine with the
+same shapes pays zero new compilations — the ROADMAP cold-start item.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import registry as R
+from repro.serve.engine import ServeEngine, clear_closure_cache
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(**kw):
+    kw = dict({"n_layers": 2, "vocab_size": 128}, **kw)
+    return reduced(ARCHS["rwkv6-3b"], **kw)
+
+
+def _drive(eng, n_req=3, n_new=4):
+    rng = np.random.default_rng(0)
+    for i in range(n_req):
+        eng.submit(rng.integers(0, 128, size=5 + i).astype(np.int32),
+                   max_new_tokens=n_new)
+    done = eng.run_until_drained()
+    assert len(done) == n_req
+    return {tuple(r.prompt.tolist()): r.out_tokens for r in done}
+
+
+def test_second_engine_pays_zero_recompiles():
+    clear_closure_cache()
+    cfg = _cfg()
+    params = R.init_params(cfg, KEY)
+    e1 = ServeEngine(cfg, params, n_slots=2, max_len=64)
+    out1 = _drive(e1)
+    assert e1.jit_recompiles["decode_tick"] >= 1
+    assert e1.jit_recompiles["prefill"] >= 1
+
+    e2 = ServeEngine(cfg, params, n_slots=2, max_len=64)
+    out2 = _drive(e2)
+    assert e2.jit_recompiles == {"decode_tick": 0, "prefill": 0}
+    assert out1 == out2
+
+
+def test_field_equal_config_instances_share_closures():
+    """Separately constructed but equal configs hit the same cache key."""
+    clear_closure_cache()
+    cfg_a, cfg_b = _cfg(), _cfg()
+    assert cfg_a is not cfg_b and R.cfg_hash(cfg_a) == R.cfg_hash(cfg_b)
+    params = R.init_params(cfg_a, KEY)
+    e1 = ServeEngine(cfg_a, params, n_slots=2, max_len=64)
+    e2 = ServeEngine(cfg_b, params, n_slots=2, max_len=64)
+    assert e1._tick is e2._tick
+    assert e1._prefill is e2._prefill
+    assert e1._decode is e2._decode
+    _drive(e1)
+    assert _drive(e2) is not None
+    assert e2.jit_recompiles == {"decode_tick": 0, "prefill": 0}
+
+
+def test_differing_shapes_miss_correctly():
+    clear_closure_cache()
+    cfg = _cfg()
+    params = R.init_params(cfg, KEY)
+    e1 = ServeEngine(cfg, params, n_slots=2, max_len=64)
+    _drive(e1)
+
+    # different max_len -> different tick closure AND prefill cache shape
+    e2 = ServeEngine(cfg, params, n_slots=2, max_len=48)
+    _drive(e2)
+    assert e2.jit_recompiles["decode_tick"] >= 1
+    assert e2.jit_recompiles["prefill"] >= 1
+
+    # same max_len but a pool size the cache has not seen -> tick miss
+    e3 = ServeEngine(cfg, params, n_slots=4, max_len=64)
+    _drive(e3, n_req=4)
+    assert e3.jit_recompiles["decode_tick"] >= 1
+
+    # different model config -> everything misses
+    cfg2 = _cfg(n_layers=1)
+    params2 = R.init_params(cfg2, KEY)
+    e4 = ServeEngine(cfg2, params2, n_slots=2, max_len=64)
+    _drive(e4)
+    assert e4.jit_recompiles["decode_tick"] >= 1
+    assert e4.jit_recompiles["prefill"] >= 1
+
+
+def test_differently_quantized_params_count_as_misses():
+    """Same cfg/impl/max_len but a different param-tree structure (float
+    vs quantized) re-traces, and jit_recompiles must say so."""
+    from repro.core.hybrid import quantize_tree
+    from repro.core.policy import DATAFREE_3_275
+    clear_closure_cache()
+    cfg = _cfg()
+    params = R.init_params(cfg, KEY)
+    e1 = ServeEngine(cfg, params, n_slots=2, max_len=64)
+    _drive(e1)
+    qp, _ = quantize_tree(params, DATAFREE_3_275, KEY)
+    e2 = ServeEngine(cfg, qp, n_slots=2, max_len=64)
+    _drive(e2)
+    assert e2.jit_recompiles["decode_tick"] >= 1
+    assert e2.jit_recompiles["prefill"] >= 1
+    # and a third engine over the SAME quantized tree is fully warm
+    e3 = ServeEngine(cfg, qp, n_slots=2, max_len=64)
+    _drive(e3)
+    assert e3.jit_recompiles == {"decode_tick": 0, "prefill": 0}
+
+
+def test_elastic_resize_reuses_warm_pool_ticks():
+    """An engine whose pools were warmed by an earlier engine retraces
+    nothing while growing/shrinking through the same pool sizes."""
+    clear_closure_cache()
+    cfg = _cfg(n_layers=1, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+
+    def burst(eng):
+        # staggered arrivals: a small pool ticks first, then the burst
+        # grows it, so several pool sizes actually decode
+        for i in range(3):
+            eng.submit(np.arange(4 + i % 3, dtype=np.int32),
+                       max_new_tokens=8)
+        eng.step()
+        for i in range(10):
+            eng.submit(np.arange(4 + i % 3, dtype=np.int32),
+                       max_new_tokens=5)
+        eng.run_until_drained()
+        assert eng.pool_resizes >= 1
+
+    e1 = ServeEngine(cfg, params, n_slots=16, max_len=64)
+    burst(e1)
+    assert e1.jit_recompiles["decode_tick"] >= 2   # several pool sizes
+
+    e2 = ServeEngine(cfg, params, n_slots=16, max_len=64)
+    burst(e2)
+    assert e2.jit_recompiles == {"decode_tick": 0, "prefill": 0}

@@ -227,6 +227,94 @@ def test_engine_prompt_longer_than_max_len(fast):
     assert len(by_uid[2].out_tokens) == 4
 
 
+@pytest.mark.parametrize("fast", [False, True])
+def test_generate_streams_greedy_tokens(fast):
+    """generate() yields per-token and matches the batch-mode output."""
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=2, vocab_size=128)
+    params = R.init_params(cfg, KEY)
+    prompt = np.arange(7, dtype=np.int32)
+    n_new = 6
+
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=64, fast_path=fast)
+    eng.submit(prompt, max_new_tokens=n_new)
+    (ref,) = eng.run_until_drained()
+
+    eng2 = ServeEngine(cfg, params, n_slots=2, max_len=64, fast_path=fast)
+    streamed = []
+    for tok in eng2.generate(prompt, max_new_tokens=n_new):
+        assert isinstance(tok, int)
+        streamed.append(tok)
+    assert streamed == ref.out_tokens
+    assert len(streamed) == n_new
+
+
+def test_generate_close_cancels_and_frees_slot():
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=1, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, n_slots=1, max_len=64)
+    gen = eng.generate(np.arange(5, dtype=np.int32), max_new_tokens=40)
+    got = [next(gen) for _ in range(3)]
+    assert len(got) == 3
+    gen.close()                          # GeneratorExit -> cancel()
+    assert all(r is None for r in eng.slot_req)
+    (req,) = eng.completed
+    assert req.cancelled and req.done
+    assert req.out_tokens[:3] == got
+    # the freed slot admits new work
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=3)
+    done = eng.run_until_drained()
+    assert any(len(r.out_tokens) == 3 and not r.cancelled for r in done)
+
+
+def test_generate_completing_on_last_tick_does_not_raise():
+    """max_ticks exactly equal to the ticks needed must yield all tokens
+    without the budget-exhausted RuntimeError (off-by-one guard)."""
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=1, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    n_new = 4
+    eng = ServeEngine(cfg, params, n_slots=1, max_len=64)
+    # prefill emits token 1 at admission; n_new-1 decode ticks remain
+    toks = list(eng.generate(np.arange(5, dtype=np.int32),
+                             max_new_tokens=n_new, max_ticks=n_new - 1))
+    assert len(toks) == n_new
+
+
+def test_generate_interleaves_with_batch_requests():
+    """A streamed request shares the pool with normal submits."""
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=1, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, n_slots=4, max_len=64)
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=8)
+    toks = list(eng.generate(np.arange(6, dtype=np.int32),
+                             max_new_tokens=5))
+    assert len(toks) == 5
+    eng.run_until_drained()
+    assert len(eng.completed) == 2
+    assert all(r.done for r in eng.completed)
+
+
+def test_submit_rejects_nonpositive_max_new_tokens():
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=1, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, n_slots=1, max_len=64)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=0)
+
+
+def test_cancel_queued_request():
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=1, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, n_slots=1, max_len=64, elastic=False)
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=4)
+    uid2 = eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=4)
+    assert eng.cancel(uid2) is True      # still queued
+    assert eng.cancel(999) is False
+    eng.run_until_drained()
+    by_uid = {r.uid: r for r in eng.completed}
+    assert by_uid[uid2].cancelled and by_uid[uid2].out_tokens == []
+    assert len(by_uid[1].out_tokens) == 4
+
+
 def test_engine_elastic_pool_grows_and_shrinks():
     cfg = reduced(ARCHS["rwkv6-3b"], n_layers=1, vocab_size=64)
     params = R.init_params(cfg, KEY)
