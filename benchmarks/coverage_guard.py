@@ -1,0 +1,69 @@
+"""CI kernel-coverage regression guard.
+
+Quantizes the reduced bench model (same config + policy as
+``benchmarks.decode_throughput``), prepares the decode layout, and
+checks the analytic Pallas coverage report against the checked-in
+thresholds in ``coverage_threshold.json``:
+
+* ``max_fallback_leaves`` — number of quantized decode leaves allowed
+  to miss the Pallas kernels (0: full coverage is the contract);
+* ``max_byte_ratio`` — whole-model per-token weight traffic vs bf16.
+
+Runs in interpret mode on CPU (the report is analytic — no TPU needed)
+and exits non-zero on regression, so a dispatch-rule change that
+silently drops a leaf back to the XLA dequant path fails CI instead of
+shipping as a throughput cliff.
+
+    PYTHONPATH=src python -m benchmarks.coverage_guard
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax
+
+from benchmarks.decode_throughput import decode_cfg
+from repro.core import coverage
+from repro.core.hybrid import quantize_tree
+from repro.core.policy import DATAFREE_3_275
+from repro.models import registry as R
+
+THRESHOLDS = os.path.join(os.path.dirname(__file__),
+                          "coverage_threshold.json")
+
+
+def main() -> int:
+    with open(THRESHOLDS) as f:
+        thr = json.load(f)
+    cfg = decode_cfg()
+    params = R.init_params(cfg, jax.random.PRNGKey(0))
+    qparams, _ = quantize_tree(params, DATAFREE_3_275,
+                               jax.random.PRNGKey(0))
+    report = coverage.coverage_report(
+        R.prepare_decode_params(cfg, qparams), impl="pallas")
+    print(coverage.format_table(report))
+
+    failures = []
+    if report["n_fallback_leaves"] > thr["max_fallback_leaves"]:
+        failures.append(
+            f"n_fallback_leaves={report['n_fallback_leaves']} > "
+            f"max_fallback_leaves={thr['max_fallback_leaves']}")
+    if report["ratio"] > thr["max_byte_ratio"]:
+        failures.append(
+            f"byte ratio {report['ratio']:.4f} > "
+            f"max_byte_ratio={thr['max_byte_ratio']}")
+    if failures:
+        print("\ncoverage guard FAILED:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    print(f"\ncoverage guard OK: {report['n_kernel_leaves']}/"
+          f"{report['n_leaves']} leaves on kernels, "
+          f"ratio {report['ratio']:.4f} <= {thr['max_byte_ratio']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,11 +5,16 @@ decode is bandwidth-bound, so per-token weight traffic ≈ time.  Three
 measurements on a reduced RWKV6 with the paper's 3.275-bpw hybrid policy:
 
   1. WEIGHT BYTES — analytic per-token decode weight traffic of the
-     quantized model under each execution path, vs the bf16 baseline.
-     The skinny-M GEMV kernels read packed planes + scale/bias (or
-     codebook) only, so SQ layers must come in at ``bits/16`` of bf16
-     (+ the per-group scale/bias epsilon); the XLA dequant path
-     re-materializes the full weight every token.
+     quantized model under each execution path, vs the bf16 baseline
+     (delegated to ``repro.core.coverage``; packed-plane reads and
+     materialized dequant write/read are separate components, with the
+     metric definitions embedded in the emitted JSON).  The skinny-M
+     GEMV kernels read packed planes + scale/bias (or codebook) only,
+     so SQ layers must come in at ``bits/16`` of bf16 (+ the per-group
+     scale/bias epsilon); the XLA dequant path re-materializes the full
+     weight every token.  With full kernel coverage the run asserts
+     ``n_fallback_leaves == 0`` and whole-model pallas traffic at most
+     ``PALLAS_RATIO_MAX`` of bf16.
   2. THROUGHPUT — wall-clock tokens/sec of ``ServeEngine`` for the
      on-device fast path vs the host loop (and the pallas decode path in
      interpret mode on CPU, which checks plumbing, not speed — TPU
@@ -21,7 +26,8 @@ measurements on a reduced RWKV6 with the paper's 3.275-bpw hybrid policy:
      elastic-pool bucketed-admission fast path: tokens/sec, per-request
      queue wait (ticks), jit-recompile counts (decode-tick pool sizes +
      prefill (rows, bucket) shapes) and pool resizes, with greedy
-     outputs asserted bit-identical to the slow host loop.
+     outputs asserted bit-identical to the slow host loop — for the
+     fast XLA path and the full-coverage Pallas decode path alike.
   5. COLD START — the quantize-once / serve-anywhere boundary: artifact
      save/load time vs full re-quantization time, and engine
      construction + first-token latency with a cold vs warm shared
@@ -45,11 +51,9 @@ import numpy as np
 
 from benchmarks.common import Timer, csv_row
 from repro.configs import ARCHS, reduced
-from repro.core import quantized as qz
+from repro.core import coverage
 from repro.core.hybrid import quantize_tree
 from repro.core.policy import DATAFREE_3_275
-from repro.kernels.qmv import ops as qmv_ops
-from repro.kernels.vqmv import ops as vqmv_ops
 from repro.models import registry as R
 from repro.serve.engine import ServeEngine
 
@@ -62,6 +66,7 @@ MAX_LEN = 64
 N_REQ = 4
 NEW_TOKENS = 8
 SQ_EPSILON = 0.05      # scale/bias overhead allowance on the bits/16 bound
+PALLAS_RATIO_MAX = 0.25   # whole-model pallas traffic bound vs bf16
 
 
 def decode_cfg():
@@ -75,57 +80,36 @@ def decode_cfg():
 # --------------------------------------------------------------------------- #
 #  Analytic per-token decode weight traffic
 # --------------------------------------------------------------------------- #
-def _leaf_bytes(leaf, impl: str):
-    """(quant_bytes, bf16_bytes, kernel_hit) for one quantized leaf."""
-    ic, oc = leaf.shape
-    lead = 1
-    for s in leaf.packed.shape[:-3]:
-        lead *= s
-    numel = lead * ic * oc
-    bf16 = 2 * numel
-    if isinstance(leaf, qz.SQTensor):
-        stored = (leaf.packed.size * 4 + leaf.scales.nbytes
-                  + leaf.biases.nbytes)
-        hit = impl == "pallas" and qmv_ops.tileable(
-            ic, oc, leaf.bits, leaf.group)
-        dtype_b = leaf.scales.dtype.itemsize
-    else:
-        stored = leaf.packed.size * 4 + leaf.codebook.nbytes
-        # per-layer books: the codebook may carry leading stack dims
-        n_books = leaf.codebook.shape[-3]
-        hit = (impl == "pallas" and oc > 1
-               and vqmv_ops.tileable(ic, oc, leaf.d, n_books))
-        dtype_b = leaf.codebook.dtype.itemsize
-    if hit:
-        return stored, bf16, True
-    # XLA fallback: reads the packed form, then materializes the full
-    # dequantized weight (write) and feeds it to the matmul (read)
-    return stored + 2 * numel * dtype_b, bf16, False
-
-
 def decode_weight_bytes(qparams, impl: str):
-    """Per-token decode weight traffic over all quantized matmul weights."""
-    tot_q = tot_bf16 = 0
-    sq_kernel_q = sq_kernel_bf16 = 0
-    n_kernel = n_fallback = 0
-    for leaf in jax.tree.leaves(qparams, is_leaf=qz.is_quantized):
-        if not qz.is_quantized(leaf):
-            continue
-        qb, fb, hit = _leaf_bytes(leaf, impl)
-        tot_q += qb
-        tot_bf16 += fb
-        if hit:
-            n_kernel += 1
-            if isinstance(leaf, qz.SQTensor):
-                sq_kernel_q += qb
-                sq_kernel_bf16 += fb
-        else:
-            n_fallback += 1
-    return {"quant_bytes": int(tot_q), "bf16_bytes": int(tot_bf16),
-            "ratio": tot_q / max(tot_bf16, 1),
-            "sq_kernel_ratio": (sq_kernel_q / sq_kernel_bf16
-                                if sq_kernel_bf16 else None),   # JSON-safe
-            "n_kernel_leaves": n_kernel, "n_fallback_leaves": n_fallback}
+    """Per-token decode weight traffic over all quantized leaves.
+
+    Thin view over :func:`repro.core.coverage.coverage_report` — the
+    single source of byte truth.  Packed-plane reads (``kernel_read`` /
+    ``stored``) and materialized dequant traffic (``dequant_write`` /
+    ``dequant_read``) are reported as separate components; ``total``
+    sums them.  Earlier revisions folded write+read into one opaque
+    number, which silently inflated the xla ratio past 2x — the split
+    components plus the emitted ``metric`` definitions make the ratio
+    auditable.  SQ kernel leaves roll up into an ``sq_kernel`` object
+    that always carries ``n_leaves`` (0-leaf configs report
+    ``{"n_leaves": 0}`` instead of a null ratio).
+    """
+    rep = coverage.coverage_report(qparams, impl=impl)
+    sq_hits = [e for e in rep["leaves"]
+               if e["type"] == "sq" and e["kernel"]]
+    sq_kernel = {"n_leaves": len(sq_hits)}
+    if sq_hits:
+        q = sum(e["bytes"]["total"] for e in sq_hits)
+        b = sum(e["bf16_bytes"] for e in sq_hits)
+        sq_kernel.update(quant_bytes=int(q), bf16_bytes=int(b),
+                         ratio=q / b)
+    return {"quant_bytes": int(rep["bytes"]["total"]),
+            "components": rep["bytes"],
+            "bf16_bytes": rep["bf16_bytes"],
+            "ratio": rep["ratio"],
+            "sq_kernel": sq_kernel,
+            "n_kernel_leaves": rep["n_kernel_leaves"],
+            "n_fallback_leaves": rep["n_fallback_leaves"]}
 
 
 # --------------------------------------------------------------------------- #
@@ -280,8 +264,14 @@ def run(print_csv=print):
     # 1. analytic weight traffic (fused decode layout, as served)
     by_impl = {impl: decode_weight_bytes(qp_decode, impl)
                for impl in ("xla", "pallas")}
-    sq_ratio = by_impl["pallas"]["sq_kernel_ratio"]
-    assert sq_ratio is not None, "no SQ layer hit the decode GEMV kernel"
+    pal = by_impl["pallas"]
+    assert pal["n_fallback_leaves"] == 0, \
+        f"{pal['n_fallback_leaves']} decode leaves missed the kernels"
+    assert pal["ratio"] <= PALLAS_RATIO_MAX, (pal["ratio"],
+                                              PALLAS_RATIO_MAX)
+    sq_kernel = pal["sq_kernel"]
+    assert sq_kernel["n_leaves"] > 0, "no SQ layer hit the decode GEMV"
+    sq_ratio = sq_kernel["ratio"]
     bound = DATAFREE_3_275.sq_bits / 16 + SQ_EPSILON
     for impl, r in by_impl.items():
         print_csv(csv_row(
@@ -310,12 +300,18 @@ def run(print_csv=print):
             f"host_syncs_per_token={r['host_syncs_per_token']:.3f}"))
 
     # 4. bursty mixed-length trace: elastic pools + bucketed admission
+    # (fast_pallas runs the full-coverage kernel decode path — interpret
+    # mode on CPU — and must reproduce the slow xla loop token-for-token)
     bursty = {}
     for tag, fast, impl in (("slow_xla", False, "xla"),
-                            ("fast_xla", True, "xla")):
+                            ("fast_xla", True, "xla"),
+                            ("fast_pallas", True, "pallas")):
         bursty[tag] = _drive_bursty(cfg, qp, fast, impl)
     assert bursty["fast_xla"]["outputs"] == bursty["slow_xla"]["outputs"], \
         "bursty fast path diverged from the slow loop"
+    assert bursty["fast_pallas"]["outputs"] == \
+        bursty["slow_xla"]["outputs"], \
+        "bursty pallas decode diverged from the xla fallback path"
     for tag, r in bursty.items():
         r["greedy_bit_identical"] = True
         del r["outputs"]                 # checked above; keep JSON small
@@ -341,10 +337,14 @@ def run(print_csv=print):
         "model": cfg.name,
         "policy_bpw": float(report.mean_bpw),
         "n_slots": N_SLOTS, "new_tokens": NEW_TOKENS,
-        "weight_bytes_per_token": by_impl,
-        "sq_kernel_ratio": {"value": float(sq_ratio),
-                            "bound_bits_over_16_plus_eps": float(bound),
-                            "pass": bool(sq_ratio <= bound)},
+        "weight_bytes_per_token": {
+            "metric": coverage.METRIC_DEFINITIONS,
+            "by_impl": by_impl,
+            "pallas_ratio_bound": PALLAS_RATIO_MAX,
+        },
+        "sq_kernel": dict(sq_kernel,
+                          bound_bits_over_16_plus_eps=float(bound),
+                          passes=bool(sq_ratio <= bound)),
         "engines": engines,
         "bursty": dict(bursty,
                        n_requests=BURSTY_N_REQ,

@@ -12,6 +12,11 @@ bit-identical to the run that produced it:
 
     PYTHONPATH=src python examples/quantize_rwkv.py --save /tmp/rq.rqa
     PYTHONPATH=src python examples/quantize_rwkv.py --load /tmp/rq.rqa
+
+``--coverage`` prints the per-leaf decode kernel coverage report
+(kernel vs fallback, autotuned schedule, per-token weight bytes) for
+the data-free servable tree of ``--arch`` — or, combined with
+``--load``, for a saved 'tree' artifact.
 """
 import argparse
 
@@ -32,7 +37,29 @@ def main():
     ap.add_argument("--load", metavar="PATH", default=None,
                     help="evaluate a saved artifact (skips training and "
                          "calibration)")
+    ap.add_argument("--coverage", action="store_true",
+                    help="print the per-leaf decode kernel coverage "
+                         "report (with --load: for that artifact; "
+                         "alone: for the data-free tree of --arch)")
     args = ap.parse_args()
+
+    if args.coverage:
+        from repro.core.coverage import format_table
+
+        if args.load:
+            art = api.load(args.load)
+            assert art.kind == "tree", \
+                f"--coverage needs a 'tree' artifact, got {art.kind!r}"
+        else:
+            import jax
+
+            from repro.models import registry as R
+
+            cfg = bench_config(args.arch)
+            params = R.init_params(cfg, jax.random.PRNGKey(0))
+            art = api.quantize(cfg, params)     # data-free servable tree
+        print(format_table(api.coverage_report(art)))
+        return
 
     if args.load:
         art = api.load(args.load)

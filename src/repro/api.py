@@ -48,7 +48,7 @@ from repro.core.policy import PAPER_3_275, QuantPolicy
 from repro.serve.engine import ServeEngine as Engine
 from repro.serve.engine import clear_closure_cache
 
-__all__ = ["quantize", "save", "load", "lm", "Engine",
+__all__ = ["quantize", "save", "load", "lm", "coverage_report", "Engine",
            "QuantizedArtifact", "QuantPolicy", "QuantReport",
            "ArtifactFormatError", "FORMAT_VERSION", "PAPER_3_275",
            "clear_closure_cache"]
@@ -67,9 +67,18 @@ def quantize(cfg, params, policy: QuantPolicy = PAPER_3_275, *,
     """
     key = jax.random.PRNGKey(seed)
     if batches is None:
+        from repro.launch import autotune
+        from repro.models import registry as _R
+
         qparams, report = quantize_tree(params, policy, key)
+        # Tune decode schedules against the decode-prepared view of the
+        # tree (fused projections / stacked mu leaves) so the persisted
+        # table matches exactly what the engine will launch; serving a
+        # reloaded artifact then needs zero re-tuning work.
+        tuning = autotune.tune_tree(_R.prepare_decode_params(cfg, qparams))
         return QuantizedArtifact(cfg=cfg, params=qparams, policy=policy,
-                                 report=report, kind="tree")
+                                 report=report, kind="tree",
+                                 tuning=tuning)
     qlm = blockwise_quantize(cfg, params, batches, policy, key)
     return qlm.to_artifact(policy=policy)
 
@@ -90,3 +99,22 @@ def load(path: str) -> QuantizedArtifact:
 def lm(artifact: QuantizedArtifact) -> QuantizedLM:
     """Rebuild the eval-interface LM from a 'blockwise_lm' artifact."""
     return lm_from_artifact(artifact)
+
+
+def coverage_report(artifact: QuantizedArtifact, *, impl: str = "pallas",
+                    hlo: bool = False) -> Dict[str, Any]:
+    """Per-leaf decode kernel coverage for a 'tree' artifact.
+
+    Reports, for every quantized leaf of the decode-prepared tree, the
+    kernel-vs-fallback status, the autotuned schedule serving it, and
+    the analytic per-token weight traffic (see
+    ``core.coverage.METRIC_DEFINITIONS`` for the byte model).  Surfaced
+    on the CLI via ``examples/quantize_rwkv.py --coverage``.
+    """
+    from repro.core import coverage as _cov
+    from repro.models import registry as _R
+
+    params = artifact.params
+    if getattr(artifact, "cfg", None) is not None:
+        params = _R.prepare_decode_params(artifact.cfg, params)
+    return _cov.coverage_report(params, impl=impl, hlo=hlo)

@@ -16,12 +16,13 @@ One uncompressed numpy zip with two kinds of entries:
 
       {
         "magic": "rwkvquant-artifact",
-        "format_version": 1,
+        "format_version": 2,
         "kind": "tree" | "blockwise_lm",
         "cfg": {...ModelConfig fields...},
         "cfg_hash": "<16 hex chars, registry.cfg_hash(cfg)>",
         "policy": {...QuantPolicy fields...} | null,
         "report": {"tau_c", "tau_f", "records": [...]} | null,
+        "tuning": {"version": 1, "entries": {"<sig>": {...}}} | null,
         "leaves": [
           {"path":  [["k", "blocks"], ["k", "tm"], ["k", "w_r"]],
            "spec":  {"type": "array"}            # plain tensor, or
@@ -50,9 +51,15 @@ Versioning rules
 
 * ``format_version`` is bumped on ANY incompatible change: manifest
   layout, leaf spec fields, array-field order, or byte encoding.
-* ``load`` refuses a mismatched version (and an unknown ``kind``) with
-  :class:`ArtifactFormatError` naming both versions — never a silent
-  best-effort parse; ``save`` refuses to write any version but its own.
+* ``load`` accepts the versions listed in ``SUPPORTED_VERSIONS`` (and
+  refuses unknown versions / kinds) with :class:`ArtifactFormatError`
+  naming both versions — never a silent best-effort parse; ``save``
+  refuses to write any version but the current one.  Version history:
+  1 — initial layout; 2 — adds the optional ``tuning`` manifest section
+  (the autotuned kernel-schedule table, ``launch.autotune`` format).
+  Version-1 artifacts load with ``tuning = None`` (schedules rebuild
+  from the analytic defaults on first use) and are upgraded in memory,
+  so re-saving writes a current-version file.
 * Unknown ``cfg``/``policy``/report fields (written by a newer schema
   within the same format version) also raise, with the offending names.
 * The manifest is strict RFC-8259 JSON: non-finite floats (report taus,
@@ -86,7 +93,8 @@ from repro.core.policy import QuantPolicy
 from repro.models import registry as R
 
 MAGIC = "rwkvquant-artifact"
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)      # readable; only FORMAT_VERSION is written
 KINDS = ("tree", "blockwise_lm")
 
 
@@ -193,6 +201,7 @@ class QuantizedArtifact:
     report: Optional[QuantReport] = None
     kind: str = "tree"
     format_version: int = FORMAT_VERSION
+    tuning: Optional[dict] = None             # launch.autotune table dict
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -247,6 +256,7 @@ class QuantizedArtifact:
             "cfg_hash": self.cfg_hash,
             "policy": self.policy.to_dict() if self.policy else None,
             "report": self.report.to_dict() if self.report else None,
+            "tuning": self.tuning,
             "leaves": leaves,
         }
         mbuf = np.frombuffer(
@@ -286,11 +296,11 @@ class QuantizedArtifact:
                     f"{path}: bad magic {manifest.get('magic')!r} "
                     f"(expected {MAGIC!r})")
             ver = manifest.get("format_version")
-            if ver != FORMAT_VERSION:
+            if ver not in SUPPORTED_VERSIONS:
                 raise ArtifactFormatError(
                     f"{path}: artifact format version {ver}, but this "
-                    f"build reads version {FORMAT_VERSION}; re-quantize "
-                    "or load with a matching build")
+                    f"build reads versions {SUPPORTED_VERSIONS}; "
+                    "re-quantize or load with a matching build")
             if manifest.get("kind") not in KINDS:
                 raise ArtifactFormatError(
                     f"{path}: unknown artifact kind "
@@ -305,13 +315,16 @@ class QuantizedArtifact:
                 else:
                     leaf = qz.container_from_spec(spec, arrays)
                 entries.append((ent["path"], leaf))
+        # older versions upgrade in memory: re-saving writes the current
+        # layout (missing sections default to None)
         return cls(cfg=R.cfg_from_dict(manifest["cfg"]),
                    params=_build_tree(entries),
                    policy=QuantPolicy.from_dict(manifest["policy"])
                    if manifest["policy"] else None,
                    report=QuantReport.from_dict(manifest["report"])
                    if manifest["report"] else None,
-                   kind=manifest["kind"])
+                   kind=manifest["kind"],
+                   tuning=manifest.get("tuning"))
 
 
 def save(artifact: QuantizedArtifact, path: str) -> str:

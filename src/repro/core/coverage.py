@@ -1,0 +1,248 @@
+"""Per-leaf decode kernel coverage + analytic weight-traffic accounting.
+
+One walk over a (decode-prepared) quantized param tree answers, for every
+quantized leaf: which kernel serves it at decode shapes (and under which
+autotuned schedule), or why it falls back to the XLA dequant path — and
+what per-token weight traffic each case costs.  This module is the
+single source of byte truth: ``benchmarks/decode_throughput.py``,
+``repro.api.coverage_report`` and the CI coverage guard all read it, so
+a dispatch regression shows up as ``n_fallback_leaves > 0`` here rather
+than as a silent throughput cliff.
+
+Byte model (per decoded token, per leaf; all counts analytic):
+
+* kernel hit      — the kernel streams the *padded* packed planes plus
+  scale/bias rows (SQ) or the pinned codebook (VQ) exactly once:
+  ``kernel_read`` bytes.  Padding (lane/K zero-pad) is counted against
+  the kernel because the padded planes are what the schedule reads
+  (the pads are materialized once at trace time, not per token).
+* XLA fallback    — reads the stored packed form (``stored``), then
+  materializes the full dequantized weight (``dequant_write``) and
+  feeds it to the matmul (``dequant_read``).  These three components
+  are reported separately — summing packed reads and materialized
+  writes into one number is exactly the accounting bug this module
+  replaces.
+* baseline        — ``bf16_bytes = 2 * numel``: what an unquantized
+  bf16 decode reads for the same weight.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+
+from repro.core import quantized as qz
+from repro.launch import autotune
+
+# decode ticks run one token per slot; the smallest M bucket is the
+# schedule every per-token byte count is quoted for
+DECODE_M = 1
+
+METRIC_DEFINITIONS = {
+    "stored": "bytes of the packed + metadata arrays as held in HBM "
+              "(unpadded); read once per token by the XLA fallback",
+    "kernel_read": "bytes a Pallas kernel streams per token: padded "
+                   "packed planes + scale/bias rows (SQ) or codebook "
+                   "(VQ); 0 for fallback leaves",
+    "dequant_write": "bytes the XLA fallback writes materializing the "
+                     "full dequantized weight; 0 for kernel leaves",
+    "dequant_read": "bytes the consuming matmul/emul reads back from "
+                    "the materialized dequant; 0 for kernel leaves",
+    "total": "kernel_read + stored + dequant_write + dequant_read "
+             "(the latter three only on fallback leaves)",
+    "bf16_bytes": "2 * numel: the unquantized bf16 baseline read",
+    "ratio": "total / bf16_bytes over all quantized leaves",
+}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def _roundup(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _leaf_entries(leaf, impl: str) -> List[Dict[str, Any]]:
+    """Coverage rows for one container (FusedHybrid yields one per part)."""
+    if isinstance(leaf, qz.FusedHybrid):
+        out = []
+        for part, tag in ((leaf.sq, "sq"), (leaf.vq, "vq")):
+            if part is not None:
+                for e in _leaf_entries(part, impl):
+                    e["hybrid_part"] = tag
+                    out.append(e)
+        return out
+
+    ic, oc = leaf.shape
+    lead = 1
+    for s in leaf.packed.shape[:-3]:
+        lead *= s
+    numel = lead * ic * oc
+    bf16 = 2 * numel
+
+    sched: Optional[dict] = None
+    if isinstance(leaf, qz.SQTensor):
+        qtype, cls = "sq", "matmul" if oc > 1 else "vector"
+        stored = leaf.nbytes()
+        meta_itemsize = leaf.scales.dtype.itemsize
+        sig = autotune.sq_sig(ic, oc, leaf.bits, leaf.group,
+                              autotune.pad_m(DECODE_M))
+        if impl == "pallas" and oc > 1:
+            sched = autotune.rank_sq(ic, oc, leaf.bits, leaf.group,
+                                     autotune.pad_m(DECODE_M))[0]
+        if sched and sched.get("kernel"):
+            Kp, Np = sched["Kp"], sched["Np"]
+            kernel_read = lead * (
+                leaf.bits * (Kp // autotune.LANES) * Np * 4
+                + 2 * (Kp // leaf.group) * Np * meta_itemsize)
+        else:
+            kernel_read = 0
+    else:
+        n_books = leaf.codebook.shape[-3]
+        stored = leaf.nbytes()
+        qtype = "vq"
+        mp = autotune.pad_m(DECODE_M)
+        if oc == 1:
+            cls = "vector"
+            sig = autotune.vqe_sig(ic, leaf.d, leaf.k, mp)
+            if impl == "pallas":
+                sched = autotune.rank_vqe(ic, leaf.d, leaf.k, n_books,
+                                          mp)[0]
+            kernel_read = lead * (leaf.packed.shape[-3]  # k planes
+                                  * leaf.packed.shape[-2] * 4
+                                  + (2 ** leaf.k) * leaf.d
+                                  * leaf.codebook.dtype.itemsize) \
+                if sched and sched.get("kernel") else 0
+        else:
+            cls = "matmul"
+            sig = autotune.vq_sig(ic, oc, leaf.d, leaf.k, mp)
+            if impl == "pallas":
+                sched = autotune.rank_vq(ic, oc, leaf.d, leaf.k,
+                                         n_books, mp)[0]
+            if sched and sched.get("kernel"):
+                Kp, Np = sched["Kp"], sched["Np"]
+                kernel_read = lead * (
+                    leaf.k * (Kp // leaf.d // autotune.LANES) * Np * 4
+                    + (2 ** leaf.k) * leaf.d
+                    * leaf.codebook.dtype.itemsize)
+            else:
+                kernel_read = 0
+
+    hit = bool(sched and sched.get("kernel"))
+    if hit:
+        comp = {"stored": 0, "kernel_read": int(kernel_read),
+                "dequant_write": 0, "dequant_read": 0}
+    else:
+        dtype_b = (leaf.scales.dtype.itemsize
+                   if isinstance(leaf, qz.SQTensor)
+                   else leaf.codebook.dtype.itemsize)
+        comp = {"stored": int(stored), "kernel_read": 0,
+                "dequant_write": int(numel * dtype_b),
+                "dequant_read": int(numel * dtype_b)}
+    comp["total"] = sum(comp.values())
+    return [{
+        "type": qtype, "class": cls, "shape": [ic, oc], "lead": lead,
+        "kernel": hit,
+        "schedule": sched.get("schedule") if hit else None,
+        "why": None if hit else (
+            (sched or {}).get("why", "xla impl" if impl == "xla"
+                              else "no schedule")),
+        "sig": sig, "stored_bytes": int(stored),
+        "bytes": comp, "bf16_bytes": int(bf16),
+    }]
+
+
+def coverage_report(obj, impl: str = "pallas",
+                    hlo: bool = False) -> Dict[str, Any]:
+    """Kernel-vs-fallback status + decode bytes for every quantized leaf.
+
+    ``obj`` is a ``QuantizedArtifact`` or a (preferably decode-prepared)
+    param pytree.  ``impl`` selects the execution path being accounted
+    ('pallas' or 'xla' — under 'xla' every leaf is a fallback by
+    definition).  With ``hlo=True`` each fallback leaf additionally gets
+    a compiler-side cost estimate from ``launch.hlo_cost`` over the
+    lowered dequant HLO (slower; off by default).
+    """
+    params = getattr(obj, "params", obj)
+    flat = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=qz.is_serializable_container)[0]
+    leaves = []
+    for path, leaf in flat:
+        if not qz.is_serializable_container(leaf):
+            continue
+        for e in _leaf_entries(leaf, impl):
+            e["path"] = _path_str(path)
+            leaves.append(e)
+
+    if hlo:
+        _attach_hlo_costs(params, leaves)
+
+    totals = {k: 0 for k in ("stored", "kernel_read", "dequant_write",
+                             "dequant_read", "total")}
+    bf16 = 0
+    for e in leaves:
+        for k in totals:
+            totals[k] += e["bytes"][k]
+        bf16 += e["bf16_bytes"]
+    n_kernel = sum(1 for e in leaves if e["kernel"])
+    return {
+        "impl": impl,
+        "n_leaves": len(leaves),
+        "n_kernel_leaves": n_kernel,
+        "n_fallback_leaves": len(leaves) - n_kernel,
+        "bytes": totals,
+        "bf16_bytes": int(bf16),
+        "ratio": totals["total"] / max(bf16, 1),
+        "metric": METRIC_DEFINITIONS,
+        "leaves": leaves,
+    }
+
+
+def _attach_hlo_costs(params, leaves) -> None:
+    """Best-effort compiler-side cost of each fallback leaf's dequant."""
+    import jax.numpy as jnp
+
+    from repro.launch import hlo_cost
+
+    by_path = {e["path"]: e for e in leaves}
+    flat = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=qz.is_serializable_container)[0]
+    for path, leaf in flat:
+        e = by_path.get(_path_str(path))
+        if e is None or e["kernel"] or isinstance(leaf, qz.FusedHybrid):
+            continue
+        try:
+            txt = jax.jit(lambda w=leaf: w.dequant().astype(
+                jnp.float32)).lower().as_text()
+            cost = hlo_cost.module_cost(txt)
+            e["hlo_cost"] = {"flops": float(cost.flops),
+                             "bytes": float(cost.bytes)}
+        except Exception:                      # estimate only — never fatal
+            pass
+
+
+def format_table(report: Dict[str, Any]) -> str:
+    """Human-readable per-leaf table (``--coverage`` CLI output)."""
+    rows = [f"decode kernel coverage (impl={report['impl']}): "
+            f"{report['n_kernel_leaves']}/{report['n_leaves']} leaves on "
+            f"kernels, ratio vs bf16 = {report['ratio']:.4f}"]
+    hdr = (f"{'path':<44} {'type':<4} {'cls':<6} {'shape':<12} "
+           f"{'kernel':<8} {'schedule':<22} {'bytes/token':>12}")
+    rows += [hdr, "-" * len(hdr)]
+    for e in report["leaves"]:
+        shape = "x".join(str(s) for s in e["shape"])
+        if e["lead"] > 1:
+            shape = f"{e['lead']}*{shape}"
+        rows.append(
+            f"{e['path']:<44.44} {e['type']:<4} {e['class']:<6} "
+            f"{shape:<12} {str(e['kernel']):<8} "
+            f"{(e['schedule'] or e['why'] or '-'):<22.22} "
+            f"{e['bytes']['total']:>12}")
+    return "\n".join(rows)

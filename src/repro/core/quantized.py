@@ -27,13 +27,30 @@ Dispatch rules (``matmul``):
                              32 — the elastic pool sizes are
                              M-bucketed).  Per token these read
                              ~bits/16 of the bf16 weight bytes.
-  * shapes a kernel cannot tile (tiny reduced-test matrices, N not a
-    lane multiple, multi-book VQ) silently fall back to the xla path
-    inside the ops wrappers.
+  * block schedules (``bn``, ``bk``, padded geometry) come from the
+    roofline-driven autotuner (``launch/autotune``): each leaf shape
+    maps to a signature whose table entry is either a kernel schedule —
+    ``dense``, ``lane_padded`` (N zero-padded to the next 128 multiple;
+    zero scales/biases make the SQ tail exactly 0, VQ tail columns are
+    sliced off), ``k_padded``/``single_k`` (K zero-padded so a K block
+    exists; exact because the padded x columns are 0) — or an explicit
+    fallback sentinel.  Only genuinely unrankable leaves (multi-book
+    VQ, ``group !| K``) fall back to the xla dequant path inside the
+    ops wrappers.  Tables are persisted in the artifact ``tuning``
+    manifest section and installed at load, so serving never re-tunes
+    (``launch.autotune.miss_count()`` stays 0).
+  * ``emul`` on a single-book (n, 1) VQTensor at decode M rides the
+    ``vq_emul`` expand-and-multiply kernel; ``dequant_vec`` gives
+    dequant-class vector consumers (bonus, adapt_k) the same kernel via
+    an exact multiply-by-ones.
 
 ``matmul_fused`` additionally runs P same-shaped stacked weights
-(e.g. RWKV r/k/v/g, stacked once offline by ``models.rwkv6.fuse_rkvg``)
-in a single kernel launch at decode shapes.  Both container types fuse
+(e.g. RWKV r/k/v/g, stacked once offline by :func:`fuse_projections`)
+in a single kernel launch at decode shapes.  ``emul_fused`` is the
+element-wise counterpart: E stacked same-shape (n, 1) vectors (the
+RWKV token-shift mu weights) expand and multiply one shared activation
+in a single grid-(E,) launch, optionally adding per-leaf ddlerp lora
+deltas to the expanded weight before the multiply.  Both container types fuse
 (qmv_fused / vqmv_fused), and a :class:`FusedHybrid` wrapper covers the
 proxy-mixed case where some projections went to SQ and the rest to VQ:
 each quantizer group launches once, so a layer whose r/k/v/g split 3 SQ
@@ -490,10 +507,17 @@ def emul(x: jax.Array, w) -> jax.Array:
     """Element-wise x * w (RWKV token-shift mu weights etc.).
 
     Quantized 1-D vectors are stored as (n, 1) containers; they broadcast
-    back as (n,) against x's trailing axis.
+    back as (n,) against x's trailing axis.  Single-book VQ vectors at
+    decode M ride the ``vq_emul`` expand-and-multiply kernel under the
+    pallas impl.
     """
     if is_quantized(w):
         ic, oc = w.shape
+        if (oc == 1 and isinstance(w, VQTensor) and _IMPL == "pallas"
+                and w.packed.ndim == 3):
+            from repro.kernels.vqmv import ops as vqmv_ops
+            if _eff_m(x) <= vqmv_ops.DECODE_M_MAX:
+                return vqmv_ops.vq_emul(x, w)
         wd = dequant(w)
         if oc == 1:
             wd = wd.reshape(wd.shape[:-2] + (-1,))
@@ -502,6 +526,111 @@ def emul(x: jax.Array, w) -> jax.Array:
             and not isinstance(x, jax.core.Tracer):
         _CAPTURE.record_emul(w, x)
     return x * w
+
+
+def emul_fused(x: jax.Array, w, add: jax.Array = None) -> jax.Array:
+    """x * expand(w_e) [+ add_e] for E stacked (n, 1) quantized vectors.
+
+    ``w`` is a VQTensor whose arrays carry a leading leaf axis E (see
+    ``models.rwkv6.prepare_decode_params``): packed (E, k, nw, 1),
+    codebook (E, 1, 2^k, d); ``x`` is the shared activation (..., n);
+    ``add`` optionally (E, ..., n), added to the expanded weight before
+    the cast-to-x-dtype multiply (the ddlerp lora delta path).  Returns
+    (E, ..., n).  One grid-(E,) kernel launch at decode shapes under the
+    pallas impl; the xla path is bitwise identical to E separate
+    per-leaf ``x * (expand(e) + add_e).astype(x.dtype)`` expressions.
+    """
+    assert isinstance(w, VQTensor), type(w)
+    E = w.packed.shape[0]
+    n, oc = w.shape
+    assert oc == 1, w.shape
+    if _IMPL == "pallas":
+        from repro.kernels.vqmv import ops as vqmv_ops
+        if _eff_m(x) <= vqmv_ops.DECODE_M_MAX:
+            return vqmv_ops.vq_emul_fused(x, w, add)
+    wd = w.dequant().reshape(E, n)
+    wrow = wd.reshape((E,) + (1,) * (x.ndim - 1) + (n,))
+    if add is None:
+        return x[None] * wrow.astype(x.dtype)
+    return x[None] * (wrow + add).astype(x.dtype)
+
+
+def dequant_vec(w) -> jax.Array:
+    """Dequantize an (n, 1) container to its flat (n,) vector.
+
+    Under the pallas impl a single-book VQ vector expands through the
+    ``vq_emul`` kernel (multiply by ones — exact, 1.0 * v == v), so
+    dequant-class vector leaves (RWKV bonus, adapt_k, bonus_rk) read
+    packed planes + codebook instead of a materialized XLA dequant.
+    """
+    if not is_quantized(w):
+        return w
+    n, oc = w.shape
+    assert oc == 1, w.shape
+    if (isinstance(w, VQTensor) and _IMPL == "pallas"
+            and w.packed.ndim == 3):
+        from repro.kernels.vqmv import ops as vqmv_ops
+        if vqmv_ops.emul_tileable(n, w.d, w.n_books):
+            ones = jnp.ones((1, n), w.codebook.dtype)
+            return vqmv_ops.vq_emul(ones, w)[0]
+    return w.dequant().reshape(-1)
+
+
+# --------------------------------------------------------------------------- #
+#  Decode-time projection stacking (shared by the model families)
+# --------------------------------------------------------------------------- #
+def stack_sq(ws):
+    """Stack same-meta SQ containers on a projection axis (after any
+    leading layer axis); None when metadata differs."""
+    w0 = ws[0]
+    if not all((w.shape, w.bits, w.group) == (w0.shape, w0.bits, w0.group)
+               for w in ws):
+        return None
+    axis = w0.packed.ndim - 3
+    return SQTensor(
+        packed=jnp.stack([w.packed for w in ws], axis=axis),
+        scales=jnp.stack([w.scales for w in ws], axis=axis),
+        biases=jnp.stack([w.biases for w in ws], axis=axis),
+        shape=w0.shape, bits=w0.bits, group=w0.group)
+
+
+def stack_vq(ws):
+    """Stack same-meta single-book VQ containers on a projection axis."""
+    w0 = ws[0]
+    if not all((w.shape, w.d, w.k, w.codebook.shape)
+               == (w0.shape, w0.d, w0.k, w0.codebook.shape) for w in ws):
+        return None
+    if w0.codebook.shape[-3] != 1:          # fused kernels: one book/leaf
+        return None
+    axis = w0.packed.ndim - 3
+    return VQTensor(
+        packed=jnp.stack([w.packed for w in ws], axis=axis),
+        codebook=jnp.stack([w.codebook for w in ws], axis=axis),
+        shape=w0.shape, d=w0.d, k=w0.k)
+
+
+def fuse_projections(ws):
+    """Fuse a list of same-shaped quantized projections for single-launch
+    decode GEMV: all-SQ lists stack into one SQTensor, all-VQ lists into
+    one VQTensor, proxy-mixed lists into a :class:`FusedHybrid` holding
+    one stack per quantizer.  Returns None when any projection is
+    unquantized or stack metadata differs (caller stays unfused)."""
+    if not all(is_quantized(w) for w in ws):
+        return None
+    sq_idx = tuple(i for i, w in enumerate(ws) if isinstance(w, SQTensor))
+    vq_idx = tuple(i for i, w in enumerate(ws) if isinstance(w, VQTensor))
+    sq = stack_sq([ws[i] for i in sq_idx]) if sq_idx else None
+    vq = stack_vq([ws[i] for i in vq_idx]) if vq_idx else None
+    if (sq_idx and sq is None) or (vq_idx and vq is None):
+        return None
+    if sq is not None and vq is not None and sq.shape != vq.shape:
+        return None
+    if not vq_idx:
+        return sq
+    if not sq_idx:
+        return vq
+    return FusedHybrid(sq=sq, vq=vq, sq_idx=sq_idx, vq_idx=vq_idx,
+                       shape=ws[0].shape)
 
 
 def param_bytes(tree) -> int:

@@ -2,15 +2,23 @@
 
 ``qmv`` is the decode-shape entry point that ``core/quantized.matmul``
 dispatches to when the effective M (product of leading activation dims)
-is at most :data:`DECODE_M_MAX`.  Shapes the kernel cannot tile fall back
-to the XLA dequant path, mirroring qmm's contract.
+is at most :data:`DECODE_M_MAX`.  Block schedules come from the
+roofline-driven autotuner (:mod:`repro.launch.autotune`): each leaf
+shape maps to a signature whose table entry carries ``(bn, bk)`` plus
+the padded geometry ``(Kp, Np)``.  Zero-padding makes the pad exact —
+padded x columns are 0, padded scale/bias groups dequant padded rows
+and lane columns to exactly 0 — so every SQ leaf with ``group | K``
+runs through Pallas (lane-padded / single-K-block schedules included);
+only a genuinely unrankable leaf falls back to the XLA dequant path.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.qmv.kernel import M_MAX, qmv_fused_pallas, qmv_pallas
+from repro.kernels.qmv.kernel import (LANES, M_MAX, _pad_m,
+                                      qmv_fused_pallas, qmv_pallas)
+from repro.launch import autotune
 
 _INTERPRET = not any(d.platform == "tpu" for d in jax.devices())
 
@@ -18,9 +26,37 @@ DECODE_M_MAX = M_MAX   # rows the M-bucketed GEMV schedule serves (32)
 
 
 def tileable(K: int, N: int, bits: int, group: int) -> bool:
-    """True when the qmv kernel covers an (K, N) SQ weight."""
-    bk = max(group, 256)
-    return K % bk == 0 and bk % group == 0 and N % 128 == 0
+    """True when some qmv schedule covers a (K, N) SQ weight."""
+    return bool(autotune.rank_sq(K, N, bits, group, 8)[0].get("kernel"))
+
+
+def _pad_arrays(packed, scales, biases, *, group: int, Kp: int, Np: int):
+    """Zero-pad planes/metadata to the schedule's (Kp, Np) geometry."""
+    kw, N = packed.shape[-2], packed.shape[-1]
+    dkw, dn = Kp // LANES - kw, Np - N
+    dg = Kp // group - scales.shape[-2]
+    if dkw or dn:
+        packed = jnp.pad(packed, [(0, 0)] * (packed.ndim - 2)
+                         + [(0, dkw), (0, dn)])
+    if dg or dn:
+        cfg = [(0, 0)] * (scales.ndim - 2) + [(0, dg), (0, dn)]
+        scales = jnp.pad(scales, cfg)      # zero scale/bias => padded
+        biases = jnp.pad(biases, cfg)      # rows/columns dequant to 0
+    return packed, scales, biases
+
+
+def qmv_with_schedule(x2: jax.Array, w, sched: dict) -> jax.Array:
+    """Run (M, K) x2 against ``w`` under an explicit schedule entry."""
+    K, N = w.shape
+    Kp, Np = sched["Kp"], sched["Np"]
+    if Kp != K:
+        x2 = jnp.pad(x2, ((0, 0), (0, Kp - K)))
+    packed, scales, biases = _pad_arrays(
+        w.packed, w.scales, w.biases, group=w.group, Kp=Kp, Np=Np)
+    y = qmv_pallas(x2, packed, scales, biases,
+                   bits=w.bits, group=w.group, K=Kp, N=Np,
+                   bn=sched["bn"], bk=sched["bk"], interpret=_INTERPRET)
+    return y[:, :N]
 
 
 def qmv(x: jax.Array, w) -> jax.Array:
@@ -32,13 +68,11 @@ def qmv(x: jax.Array, w) -> jax.Array:
         M *= s
     assert M <= DECODE_M_MAX, (M, DECODE_M_MAX)
     x2 = x.reshape(M, K)
-    if not tileable(K, N, w.bits, w.group):
+    sched = autotune.sq_schedule(K, N, w.bits, w.group, M)
+    if not sched.get("kernel"):
         return jnp.matmul(x2, w.dequant().astype(x.dtype)).reshape(
             lead + (N,))
-    y = qmv_pallas(x2, w.packed, w.scales, w.biases,
-                   bits=w.bits, group=w.group, K=K, N=N,
-                   interpret=_INTERPRET)
-    return y.reshape(lead + (N,))
+    return qmv_with_schedule(x2, w, sched).reshape(lead + (N,))
 
 
 def qmv_fused(x: jax.Array, w, shared: bool = False) -> jax.Array:
@@ -47,7 +81,9 @@ def qmv_fused(x: jax.Array, w, shared: bool = False) -> jax.Array:
     ``w`` is an SQTensor whose arrays carry a leading projection axis:
     packed (P, bits, K/32, N), scales/biases (P, K/group, N); ``w.shape``
     stays the per-projection (K, N).  ``shared=True`` decodes one
-    activation against all P weights without copying it P times.
+    activation against all P weights without copying it P times.  The
+    schedule lookup excludes P, so the fused stack shares the unfused
+    leaf's table entry.
     """
     K, N = w.shape
     P = w.packed.shape[0]
@@ -59,12 +95,20 @@ def qmv_fused(x: jax.Array, w, shared: bool = False) -> jax.Array:
         M *= s
     assert M <= DECODE_M_MAX, (M, DECODE_M_MAX)
     x2 = x.reshape((M, K) if shared else (P, M, K))
-    if not tileable(K, N, w.bits, w.group):
+    sched = autotune.sq_schedule(K, N, w.bits, w.group, M)
+    if not sched.get("kernel"):
         wd = w.dequant().astype(x.dtype)                       # (P, K, N)
         pat = "mk,pkn->pmn" if shared else "pmk,pkn->pmn"
         y = jnp.einsum(pat, x2, wd)
         return y.reshape((P,) + lead + (N,))
-    y = qmv_fused_pallas(x2, w.packed, w.scales, w.biases,
-                         bits=w.bits, group=w.group, K=K, N=N,
+    Kp, Np = sched["Kp"], sched["Np"]
+    if Kp != K:
+        pad = [(0, 0)] * (x2.ndim - 1) + [(0, Kp - K)]
+        x2 = jnp.pad(x2, pad)
+    packed, scales, biases = _pad_arrays(
+        w.packed, w.scales, w.biases, group=w.group, Kp=Kp, Np=Np)
+    y = qmv_fused_pallas(x2, packed, scales, biases,
+                         bits=w.bits, group=w.group, K=Kp, N=Np,
+                         bn=sched["bn"], bk=sched["bk"],
                          interpret=_INTERPRET)
-    return y.reshape((P,) + lead + (N,))
+    return y[:, :, :N].reshape((P,) + lead + (N,))

@@ -17,6 +17,13 @@ assigned to vector quantization) in ONE kernel launch over grid
 projection carries its own codebook, pinned per grid-p step; the
 activation may be shared (one x for all P) or stacked per projection.
 
+An element-wise variant (:func:`vq_emul_pallas`) covers the (n, 1) VQ
+vectors RWKVQuant's codebook optimization produces for the token-shift
+mu / bonus weights: grid (E,) over E stacked same-shape vectors, the
+per-leaf codebook pinned per grid step, output ``x * expand(leaf)``
+(optionally ``x * (expand(leaf) + add)`` for the ddlerp lora deltas) —
+so the paper's emul weights stop being dequantized by XLA.
+
 Constraints: 32·d | bk, 128 | bn, single codebook per projection
 (n_books == 1), M <= 32 (ops layer pads).
 """
@@ -159,4 +166,80 @@ def vqmv_fused_pallas(x: jax.Array, packed: jax.Array, codebook: jax.Array,
         scratch_shapes=[pltpu.VMEM((mp, bn), jnp.float32)],
         interpret=interpret,
     )(x, packed, codebook)
+    return y[:, :M]
+
+
+# --------------------------------------------------------------------------- #
+#  Element-wise multiply variant: (n, 1) VQ vectors (mu / bonus weights)
+# --------------------------------------------------------------------------- #
+def _expand_vec(idx_words, cb, *, k: int, d: int, n: int):
+    """(k, nw, 1) index words + (2^k, d) codebook -> (1, n) weight row.
+
+    ``nw`` may over-cover (packing pads the vector count to a 32
+    multiple with zero words); the excess rows gather codeword 0 and are
+    sliced off, mirroring ``VQTensor._dequant2d`` for oc == 1.
+    """
+    nw = idx_words.shape[1]
+    idx = _unpack_idx(idx_words, k, nw * LANES)                # (nw*32, 1)
+    vecs = cb[idx]                                             # (nw*32, 1, d)
+    flat = vecs.transpose(0, 2, 1).reshape(1, nw * LANES * d)
+    return flat[:, :n]                                         # (1, n)
+
+
+def _vq_emul_kernel(x_ref, i_ref, cb_ref, o_ref, *, k: int, d: int, n: int):
+    w = _expand_vec(i_ref[0], cb_ref[0], k=k, d=d, n=n)
+    o_ref[0] = x_ref[...] * w.astype(x_ref.dtype)
+
+
+def _vq_emul_add_kernel(x_ref, i_ref, cb_ref, a_ref, o_ref, *,
+                        k: int, d: int, n: int):
+    w = _expand_vec(i_ref[0], cb_ref[0], k=k, d=d, n=n)
+    t = (w.astype(jnp.float32)
+         + a_ref[0].astype(jnp.float32)).astype(x_ref.dtype)
+    o_ref[0] = x_ref[...] * t
+
+
+def vq_emul_pallas(x: jax.Array, packed: jax.Array, codebook: jax.Array,
+                   add: jax.Array = None, *, k: int, d: int, n: int,
+                   interpret: bool = False) -> jax.Array:
+    """E stacked (n,)-vector expand-and-multiply in one launch.
+
+    x: (M<=32, n) shared activation; packed: (E, k, nw, 1) uint32 index
+    planes (nw = ceil((n/d)/32)); codebook: (E, 2^k, d) f32; ``add``
+    optionally (E, M, n) — added to the expanded weight in f32 before
+    the cast-to-activation-dtype multiply (the ddlerp delta path).
+    Returns (E, M, n) with row e = ``x * (expand(e) [+ add[e]])``.
+    """
+    E, _, nw, _ = packed.shape
+    M = x.shape[0]
+    assert M <= M_MAX, M
+    assert n % d == 0, (n, d)
+    mp = _pad_m(M)
+    if M != mp:
+        x = jnp.pad(x, ((0, mp - M), (0, 0)))
+        if add is not None:
+            add = jnp.pad(add, ((0, 0), (0, mp - M), (0, 0)))
+    nK = 2 ** k
+
+    in_specs = [
+        pl.BlockSpec((mp, n), lambda e: (0, 0)),               # shared x
+        pl.BlockSpec((1, k, nw, 1), lambda e: (e, 0, 0, 0)),
+        pl.BlockSpec((1, nK, d), lambda e: (e, 0, 0)),         # pinned / e
+    ]
+    operands = [x, packed, codebook]
+    if add is None:
+        body = functools.partial(_vq_emul_kernel, k=k, d=d, n=n)
+    else:
+        body = functools.partial(_vq_emul_add_kernel, k=k, d=d, n=n)
+        in_specs.append(pl.BlockSpec((1, mp, n), lambda e: (e, 0, 0)))
+        operands.append(add)
+
+    y = pl.pallas_call(
+        body,
+        grid=(E,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, mp, n), lambda e: (e, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, mp, n), x.dtype),
+        interpret=interpret,
+    )(*operands)
     return y[:, :M]

@@ -1,19 +1,25 @@
-"""jit'd wrappers: skinny-M VQTensor GEMV through the Pallas vqmv kernels.
+"""jit'd wrappers: skinny-M VQTensor GEMV / emul through the Pallas kernels.
 
 ``vqmv`` is the decode-shape entry point that ``core/quantized.matmul``
 dispatches to when the effective M (product of leading activation dims)
 is at most :data:`DECODE_M_MAX`; ``vqmv_fused`` runs P stacked same-shape
-VQ projections (RWKV r/k/v/g) in one launch — the VQ counterpart of
-``qmv.ops.qmv_fused``.  Shapes the kernels cannot tile fall back to the
-XLA dequant path, mirroring qmm/vqmm's contract.
+VQ projections (RWKV r/k/v/g) in one launch; ``vq_emul`` /
+``vq_emul_fused`` run the (n, 1) codebook-optimized mu/bonus vectors as
+expand-and-multiply launches.  Block schedules come from the
+roofline-driven autotuner (:mod:`repro.launch.autotune`); K is
+zero-padded to a 32·d multiple (exact — padded x columns are 0) and N
+lane-padded to 128 (padded output columns expand codeword 0 garbage and
+are sliced off), so every single-book VQ leaf runs through Pallas.
+Multi-book weights fall back to the XLA dequant path.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.vqmv.kernel import (LANES, M_MAX, vqmv_fused_pallas,
-                                       vqmv_pallas)
+from repro.kernels.vqmv.kernel import (LANES, M_MAX, _pad_m, vq_emul_pallas,
+                                       vqmv_fused_pallas, vqmv_pallas)
+from repro.launch import autotune
 
 _INTERPRET = not any(d.platform == "tpu" for d in jax.devices())
 
@@ -21,10 +27,41 @@ DECODE_M_MAX = M_MAX   # rows the M-bucketed GEMV schedule serves (32)
 
 
 def tileable(K: int, N: int, d: int, n_books: int) -> bool:
-    """True when the vqmv kernel covers a (K, N) VQ weight."""
-    bk = 256 if K % 256 == 0 else K
-    return (n_books == 1 and K % bk == 0 and bk % (LANES * d) == 0
-            and N % 128 == 0)
+    """True when some vqmv schedule covers a (K, N) VQ weight."""
+    return bool(autotune.rank_vq(K, N, d, 1, n_books, 8)[0].get("kernel"))
+
+
+def emul_tileable(n: int, d: int, n_books: int) -> bool:
+    """True when the vq_emul kernel covers an (n, 1) VQ vector."""
+    return n_books == 1 and d > 0 and n % d == 0
+
+
+def _pad_arrays(packed, *, d: int, Kp: int, Np: int):
+    """Zero-pad index planes to the schedule's (Kp, Np) geometry.
+
+    Padded words decode to codeword 0: harmless on the K axis (the
+    matching x columns are 0) and garbage on the N axis (those output
+    columns are sliced off by the caller).
+    """
+    kw, N = packed.shape[-2], packed.shape[-1]
+    dkw, dn = Kp // d // LANES - kw, Np - N
+    if dkw or dn:
+        packed = jnp.pad(packed, [(0, 0)] * (packed.ndim - 2)
+                         + [(0, dkw), (0, dn)])
+    return packed
+
+
+def vqmv_with_schedule(x2: jax.Array, w, sched: dict) -> jax.Array:
+    """Run (M, K) x2 against ``w`` under an explicit schedule entry."""
+    K, N = w.shape
+    Kp, Np = sched["Kp"], sched["Np"]
+    if Kp != K:
+        x2 = jnp.pad(x2, ((0, 0), (0, Kp - K)))
+    packed = _pad_arrays(w.packed, d=w.d, Kp=Kp, Np=Np)
+    y = vqmv_pallas(x2, packed, w.codebook.astype(jnp.float32),
+                    k=w.k, d=w.d, K=Kp, N=Np,
+                    bn=sched["bn"], bk=sched["bk"], interpret=_INTERPRET)
+    return y[:, :N]
 
 
 def vqmv(x: jax.Array, w) -> jax.Array:
@@ -36,12 +73,11 @@ def vqmv(x: jax.Array, w) -> jax.Array:
         M *= s
     assert M <= DECODE_M_MAX, (M, DECODE_M_MAX)
     x2 = x.reshape(M, K)
-    if not tileable(K, N, w.d, w.n_books):
+    sched = autotune.vq_schedule(K, N, w.d, w.k, w.n_books, M)
+    if not sched.get("kernel"):
         return jnp.matmul(x2, w.dequant().astype(x.dtype)).reshape(
             lead + (N,))
-    y = vqmv_pallas(x2, w.packed, w.codebook.astype(jnp.float32),
-                    k=w.k, d=w.d, K=K, N=N, interpret=_INTERPRET)
-    return y.reshape(lead + (N,))
+    return vqmv_with_schedule(x2, w, sched).reshape(lead + (N,))
 
 
 def vqmv_fused(x: jax.Array, w, shared: bool = False) -> jax.Array:
@@ -50,7 +86,9 @@ def vqmv_fused(x: jax.Array, w, shared: bool = False) -> jax.Array:
     ``w`` is a VQTensor whose arrays carry a leading projection axis:
     packed (P, k, (K/d)/32, N), codebook (P, 1, 2^k, d); ``w.shape``
     stays the per-projection (K, N).  ``shared=True`` decodes one
-    activation against all P weights without copying it P times.
+    activation against all P weights without copying it P times.  The
+    schedule lookup excludes P, so the fused stack shares the unfused
+    leaf's table entry.
     """
     K, N = w.shape
     P = w.packed.shape[0]
@@ -62,11 +100,77 @@ def vqmv_fused(x: jax.Array, w, shared: bool = False) -> jax.Array:
         M *= s
     assert M <= DECODE_M_MAX, (M, DECODE_M_MAX)
     x2 = x.reshape((M, K) if shared else (P, M, K))
-    if not tileable(K, N, w.d, w.codebook.shape[-3]):
+    sched = autotune.vq_schedule(K, N, w.d, w.k, w.codebook.shape[-3], M)
+    if not sched.get("kernel"):
         wd = w.dequant().astype(x.dtype)                       # (P, K, N)
         pat = "mk,pkn->pmn" if shared else "pmk,pkn->pmn"
         y = jnp.einsum(pat, x2, wd)
         return y.reshape((P,) + lead + (N,))
-    y = vqmv_fused_pallas(x2, w.packed, w.codebook.astype(jnp.float32),
-                          k=w.k, d=w.d, K=K, N=N, interpret=_INTERPRET)
-    return y.reshape((P,) + lead + (N,))
+    Kp, Np = sched["Kp"], sched["Np"]
+    if Kp != K:
+        pad = [(0, 0)] * (x2.ndim - 1) + [(0, Kp - K)]
+        x2 = jnp.pad(x2, pad)
+    packed = _pad_arrays(w.packed, d=w.d, Kp=Kp, Np=Np)
+    y = vqmv_fused_pallas(x2, packed, w.codebook.astype(jnp.float32),
+                          k=w.k, d=w.d, K=Kp, N=Np,
+                          bn=sched["bn"], bk=sched["bk"],
+                          interpret=_INTERPRET)
+    return y[:, :, :N].reshape((P,) + lead + (N,))
+
+
+# --------------------------------------------------------------------------- #
+#  Element-wise multiply: (n, 1) codebook-optimized mu / bonus vectors
+# --------------------------------------------------------------------------- #
+def vq_emul(x: jax.Array, w) -> jax.Array:
+    """x: (..., n) * expand(VQTensor(n, 1)) -> (..., n), M <= 32.
+
+    Single-leaf wrapper over the stacked kernel (E = 1); the schedule
+    lookup registers the leaf in the autotune table like any other.
+    """
+    n, oc = w.shape
+    assert oc == 1, w.shape
+    lead = x.shape[:-1]
+    M = 1
+    for s in lead:
+        M *= s
+    sched = autotune.vqe_schedule(n, w.d, w.k, w.n_books, M)
+    if not sched.get("kernel") or M > DECODE_M_MAX:
+        wd = w.dequant().reshape(-1)
+        return x * wd.astype(x.dtype)
+    x2 = x.reshape(M, n)
+    packed = w.packed[None]                        # (1, k, nw, 1)
+    cb = w.codebook.astype(jnp.float32)            # (1, 2^k, d) == E axis
+    y = vq_emul_pallas(x2, packed, cb, k=w.k, d=w.d, n=n,
+                       interpret=_INTERPRET)
+    return y[0].reshape(lead + (n,))
+
+
+def vq_emul_fused(x: jax.Array, w, add: jax.Array = None) -> jax.Array:
+    """x: (..., n) * expand(stacked VQTensor) [+ add] -> (E, ..., n).
+
+    ``w`` carries a leading leaf axis: packed (E, k, nw, 1), codebook
+    (E, 1, 2^k, d); ``add`` is optionally (E, ..., n) — added to the
+    expanded weight in f32 before the cast-to-x-dtype multiply (the
+    ddlerp lora delta path).  One launch for all E leaves.
+    """
+    n, oc = w.shape
+    assert oc == 1, w.shape
+    E = w.packed.shape[0]
+    lead = x.shape[:-1]
+    M = 1
+    for s in lead:
+        M *= s
+    sched = autotune.vqe_schedule(n, w.d, w.k, w.codebook.shape[-3], M)
+    if not sched.get("kernel") or M > DECODE_M_MAX:
+        wd = w.dequant().reshape(E, n)                        # (E, n)
+        wrow = wd.reshape((E,) + (1,) * len(lead) + (n,))
+        if add is None:
+            return x[None] * wrow.astype(x.dtype)
+        # natural promotion, matching the per-leaf xla expression
+        return x[None] * (wrow + add).astype(x.dtype)
+    x2 = x.reshape(M, n)
+    add2 = None if add is None else add.reshape(E, M, n)
+    cb = w.codebook.reshape(E, -1, w.d).astype(jnp.float32)
+    y = vq_emul_pallas(x2, w.packed, cb, add2, k=w.k, d=w.d, n=n,
+                       interpret=_INTERPRET)
+    return y.reshape((E,) + lead + (n,))

@@ -1,0 +1,405 @@
+"""Roofline-driven schedule autotuner for the decode (skinny-M) kernels.
+
+PR 3-4 hard-coded the ``(bn, bk)`` block constants of the qmv/vqmv
+kernels and simply fell back to XLA dequant whenever a leaf violated the
+``K % bk == 0`` / ``N % 128 == 0`` tiling constraints.  This module
+replaces both decisions with a table lookup:
+
+* every quantized decode leaf shape maps to a **signature** string
+  (``sq:K256:N160:b3:g128:m8``), and
+* the table entry for a signature is either a kernel **schedule**
+  (``{"kernel": True, "schedule": "lane_padded", "bn": .., "bk": ..,
+  "Kp": .., "Np": .., "mp": ..}``) or the explicit fallback sentinel
+  (``{"kernel": False, "why": ...}``).
+
+Schedules are ranked analytically with the seed's roofline constants
+(:mod:`repro.launch.roofline`): per candidate ``(bn, bk)`` we estimate
+``t = max(bytes / HBM_BW, flops / PEAK_FLOPS) + launch + grid steps``
+over the *padded* geometry ``(Kp, Np)`` — ``Kp`` rounds K up so a K
+block exists at all (zero-padded x columns make the pad exact), ``Np``
+rounds N up to the 128-lane boundary (zero scales/biases make padded SQ
+columns exactly 0; padded VQ columns are garbage and sliced off).  The
+analytic winner is deterministic (ties break on ``(t, -bn, bk)``); on a
+real TPU an optional measured sweep re-times the top candidates and may
+override the analytic pick.
+
+The table produced by :func:`tune_tree` is persisted as the versioned
+``tuning`` section of the ``QuantizedArtifact`` manifest and installed
+into the process-global table by ``serve.engine.from_artifact`` /
+``api.load`` — a reloaded artifact serves with **zero** re-tuning work,
+which :func:`miss_count` makes checkable.
+"""
+from __future__ import annotations
+
+import math
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+TABLE_VERSION = 1
+
+LANES = 32           # uint32 bit-plane packing width (core/packing.py)
+SUBLANE = 8          # f32 sublane: M-bucket granularity
+M_MAX = 32           # widest decode pool the GEMV schedules serve
+
+T_LAUNCH = 5e-6      # fixed kernel launch overhead (s)
+T_STEP = 1e-7        # per-grid-step overhead (s)
+BK_CAP = 2048        # widest K block worth considering
+VMEM_BUDGET = 12 * 2 ** 20   # soft per-step VMEM budget (bytes)
+
+Entry = Dict[str, Any]
+
+
+def _roundup(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pad_m(M: int) -> int:
+    """Next sublane multiple >= M (the M-bucket a GEMV runs at)."""
+    return min(M_MAX, _roundup(max(M, 1), SUBLANE))
+
+
+# --------------------------------------------------------------------------- #
+#  Signatures — P/lead axes are excluded so fused stacks share entries
+# --------------------------------------------------------------------------- #
+def sq_sig(K: int, N: int, bits: int, group: int, mp: int) -> str:
+    return f"sq:K{K}:N{N}:b{bits}:g{group}:m{mp}"
+
+
+def vq_sig(K: int, N: int, d: int, k: int, mp: int) -> str:
+    return f"vq:K{K}:N{N}:d{d}:k{k}:m{mp}"
+
+
+def vqe_sig(n: int, d: int, k: int, mp: int) -> str:
+    return f"vqe:n{n}:d{d}:k{k}:m{mp}"
+
+
+# --------------------------------------------------------------------------- #
+#  Padded geometry
+# --------------------------------------------------------------------------- #
+def sq_geometry(K: int, N: int, bits: int, group: int) -> Optional[dict]:
+    """Padded (Kp, Np) + stored byte counts, or None if untileable."""
+    if group <= 0 or K % group != 0:
+        return None
+    base = math.lcm(LANES, group)
+    Kp, Np = _roundup(K, base), _roundup(N, 128)
+    return {
+        "Kp": Kp, "Np": Np, "bk_base": base,
+        "packed_bytes": bits * (Kp // LANES) * Np * 4,
+        "meta_bytes": 2 * (Kp // group) * Np * 4,
+    }
+
+
+def vq_geometry(K: int, N: int, d: int, k: int,
+                n_books: int) -> Optional[dict]:
+    if n_books != 1 or d <= 0 or K % d != 0:
+        return None
+    base = LANES * d
+    Kp, Np = _roundup(K, base), _roundup(N, 128)
+    return {
+        "Kp": Kp, "Np": Np, "bk_base": base,
+        "packed_bytes": k * (Kp // d // LANES) * Np * 4,
+        "meta_bytes": (2 ** k) * d * 4,
+    }
+
+
+def _schedule_name(K: int, N: int, Kp: int, Np: int, bk: int) -> str:
+    tags = []
+    if Np != N:
+        tags.append("lane_padded")
+    if Kp != K:
+        tags.append("k_padded")
+    if bk == Kp and (Kp != K or Kp < 256):
+        tags.append("single_k")
+    return "+".join(tags) if tags else "dense"
+
+
+# --------------------------------------------------------------------------- #
+#  Candidate enumeration + roofline scoring
+# --------------------------------------------------------------------------- #
+def _rank(geom: dict, mp: int, *, kind: str, K: int, N: int,
+          bits: int = 0, group: int = 0, d: int = 0,
+          k: int = 0) -> List[Entry]:
+    Kp, Np, base = geom["Kp"], geom["Np"], geom["bk_base"]
+    w_bytes = geom["packed_bytes"] + geom["meta_bytes"]
+    io_bytes = w_bytes + mp * Kp * 4 + mp * Np * 4
+    # GEMV flops + a dequant term (scale-mul-add / codebook gather)
+    flops = 2 * mp * Kp * Np + 2 * Kp * Np
+    cands: List[Tuple[Tuple[float, int, int], Entry]] = []
+    bks = [base * i for i in range(1, Kp // base + 1)
+           if Kp % (base * i) == 0 and base * i <= BK_CAP]
+    if not bks:                       # Kp itself exceeds the cap: one block
+        bks = [Kp]
+    for bn in (1024, 512, 256, 128):
+        if Np % bn:
+            continue
+        for bk in bks:
+            if kind == "sq":
+                vmem = (mp * bk + bits * (bk // LANES) * bn
+                        + 2 * (bk // group) * bn + 2 * mp * bn) * 4
+            else:
+                vmem = (mp * bk + k * (bk // d // LANES) * bn
+                        + (2 ** k) * d + 2 * mp * bn) * 4
+            if vmem > VMEM_BUDGET:
+                continue
+            steps = (Np // bn) * (Kp // bk)
+            t = (max(io_bytes / HBM_BW, flops / PEAK_FLOPS)
+                 + T_LAUNCH + steps * T_STEP)
+            entry: Entry = {
+                "kernel": True,
+                "schedule": _schedule_name(K, N, Kp, Np, bk),
+                "bn": bn, "bk": bk, "Kp": Kp, "Np": Np, "mp": mp,
+                "est_us": round(t * 1e6, 4),
+            }
+            cands.append(((t, -bn, bk), entry))
+    cands.sort(key=lambda c: c[0])
+    return [e for _, e in cands]
+
+
+def _fallback(why: str) -> Entry:
+    return {"kernel": False, "why": why}
+
+
+def rank_sq(K: int, N: int, bits: int, group: int, mp: int) -> List[Entry]:
+    geom = sq_geometry(K, N, bits, group)
+    if geom is None:
+        return [_fallback(f"group {group} does not divide K {K}")]
+    out = _rank(geom, mp, kind="sq", K=K, N=N, bits=bits, group=group)
+    return out or [_fallback("no candidate fits the VMEM budget")]
+
+
+def rank_vq(K: int, N: int, d: int, k: int, n_books: int,
+            mp: int) -> List[Entry]:
+    geom = vq_geometry(K, N, d, k, n_books)
+    if geom is None:
+        return [_fallback(f"n_books {n_books} != 1 or d {d} !| K {K}")]
+    out = _rank(geom, mp, kind="vq", K=K, N=N, d=d, k=k)
+    return out or [_fallback("no candidate fits the VMEM budget")]
+
+
+def rank_vqe(n: int, d: int, k: int, n_books: int, mp: int) -> List[Entry]:
+    """Element-wise multiply path for (n, 1) VQ vectors (mu/bonus)."""
+    if n_books != 1 or d <= 0 or n % d != 0:
+        return [_fallback(f"n_books {n_books} != 1 or d {d} !| n {n}")]
+    nw = _roundup(n // d, LANES) // LANES
+    io_bytes = k * nw * 4 + (2 ** k) * d * 4 + 2 * mp * n * 4
+    t = (max(io_bytes / HBM_BW, (3 * n) / PEAK_FLOPS)
+         + T_LAUNCH + T_STEP)
+    return [{"kernel": True, "schedule": "vec", "n": n, "mp": mp,
+             "est_us": round(t * 1e6, 4)}]
+
+
+# --------------------------------------------------------------------------- #
+#  Process-global table
+# --------------------------------------------------------------------------- #
+class ScheduleTable:
+    """sig -> entry mapping, serializable as the artifact ``tuning`` dict."""
+
+    def __init__(self, entries: Optional[Dict[str, Entry]] = None,
+                 version: int = TABLE_VERSION):
+        self.version = version
+        self.entries: Dict[str, Entry] = dict(entries or {})
+
+    def to_dict(self) -> dict:
+        return {"version": self.version,
+                "entries": {k: self.entries[k]
+                            for k in sorted(self.entries)}}
+
+    @classmethod
+    def from_dict(cls, d: Optional[dict]) -> "ScheduleTable":
+        if not d:
+            return cls()
+        return cls(dict(d.get("entries", {})), int(d.get("version", 0)))
+
+
+_TABLE = ScheduleTable()
+_MISSES = 0
+
+
+def install(tuning: Optional[dict]) -> int:
+    """Merge a persisted tuning table into the process-global table.
+
+    Entries from the artifact win over any same-signature entries already
+    present; unknown table versions are ignored (defaults apply).
+    Returns the number of entries installed.
+    """
+    tbl = ScheduleTable.from_dict(tuning)
+    if tbl.version != TABLE_VERSION:
+        return 0
+    _TABLE.entries.update(tbl.entries)
+    return len(tbl.entries)
+
+
+def reset() -> None:
+    """Drop all cached schedules and zero the miss counter (tests)."""
+    global _MISSES
+    _TABLE.entries.clear()
+    _MISSES = 0
+
+
+def miss_count() -> int:
+    """Schedules built on demand since the last :func:`reset`.
+
+    A server that loaded a tuned artifact should report 0 here after
+    serving traffic — the acceptance check for "0 re-tuning work".
+    """
+    return _MISSES
+
+
+def table() -> dict:
+    """Snapshot of the current process-global table (for persisting)."""
+    return _TABLE.to_dict()
+
+
+def _lookup(sig: str, builder: Callable[[], Entry]) -> Entry:
+    global _MISSES
+    e = _TABLE.entries.get(sig)
+    if e is None:
+        _MISSES += 1
+        e = builder()
+        _TABLE.entries[sig] = e
+    return e
+
+
+def sq_schedule(K: int, N: int, bits: int, group: int, M: int) -> Entry:
+    mp = pad_m(M)
+    return _lookup(sq_sig(K, N, bits, group, mp),
+                   lambda: rank_sq(K, N, bits, group, mp)[0])
+
+
+def vq_schedule(K: int, N: int, d: int, k: int, n_books: int,
+                M: int) -> Entry:
+    mp = pad_m(M)
+    return _lookup(vq_sig(K, N, d, k, mp),
+                   lambda: rank_vq(K, N, d, k, n_books, mp)[0])
+
+
+def vqe_schedule(n: int, d: int, k: int, n_books: int, M: int) -> Entry:
+    mp = pad_m(M)
+    return _lookup(vqe_sig(n, d, k, mp),
+                   lambda: rank_vqe(n, d, k, n_books, mp)[0])
+
+
+# --------------------------------------------------------------------------- #
+#  Measured sweep (TPU only — CPU/CI tables stay purely analytic)
+# --------------------------------------------------------------------------- #
+def _should_measure(measure: Optional[bool]) -> bool:
+    if measure is not None:
+        return bool(measure)
+    if os.environ.get("RWKVQUANT_TUNE_MEASURE", "1") == "0":
+        return False
+    return any(d.platform == "tpu" for d in jax.devices())
+
+
+def _time_candidate(run: Callable[[], jax.Array], reps: int = 3) -> float:
+    run().block_until_ready()                        # compile + warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run().block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _measure_sq(w, ranked: List[Entry], mp: int) -> Entry:
+    import jax.numpy as jnp
+    from repro.kernels.qmv import ops as qops
+    K, N = w.shape
+    x = jnp.zeros((mp, K), jnp.float32)
+    best, best_t = ranked[0], float("inf")
+    for e in ranked[:3]:
+        try:
+            t = _time_candidate(lambda e=e: qops.qmv_with_schedule(x, w, e))
+        except Exception:
+            continue
+        if t < best_t:
+            best, best_t = e, t
+    if best_t < float("inf"):
+        best = dict(best, meas_us=round(best_t * 1e6, 4))
+    return best
+
+
+def _measure_vq(w, ranked: List[Entry], mp: int) -> Entry:
+    import jax.numpy as jnp
+    from repro.kernels.vqmv import ops as vops
+    K, N = w.shape
+    x = jnp.zeros((mp, K), jnp.float32)
+    best, best_t = ranked[0], float("inf")
+    for e in ranked[:3]:
+        try:
+            t = _time_candidate(lambda e=e: vops.vqmv_with_schedule(x, w, e))
+        except Exception:
+            continue
+        if t < best_t:
+            best, best_t = e, t
+    if best_t < float("inf"):
+        best = dict(best, meas_us=round(best_t * 1e6, 4))
+    return best
+
+
+# --------------------------------------------------------------------------- #
+#  Whole-tree tuning
+# --------------------------------------------------------------------------- #
+def tune_tree(qparams, m_buckets: Tuple[int, ...] = (8, 16, 24, 32),
+              measure: Optional[bool] = None) -> dict:
+    """Build a schedule table covering every quantized leaf of ``qparams``.
+
+    ``qparams`` should be the *decode-prepared* tree (after
+    ``prepare_decode_params``) so fused/stacked leaves are tuned under
+    the signatures the serving path will actually look up.  The table is
+    installed into the process-global cache and returned as a plain dict
+    ready for the artifact ``tuning`` manifest section.
+
+    The analytic ranking is deterministic; the measured sweep only runs
+    on a real TPU (or with ``measure=True``) so CPU/CI tables are
+    bit-identical across runs.
+    """
+    from repro.core.quantized import (FusedHybrid, SQTensor, VQTensor,
+                                      is_serializable_container)
+
+    do_measure = _should_measure(measure)
+    entries: Dict[str, Entry] = {}
+
+    def visit(w):
+        if isinstance(w, FusedHybrid):
+            for part in (w.sq, w.vq):
+                if part is not None:
+                    visit(part)
+            return
+        if isinstance(w, SQTensor):
+            K, N = w.shape
+            for mp in m_buckets:
+                ranked = rank_sq(K, N, w.bits, w.group, mp)
+                best = ranked[0]
+                if do_measure and best.get("kernel") and len(ranked) > 1 \
+                        and w.packed.ndim == 3:
+                    best = _measure_sq(w, ranked, mp)
+                entries[sq_sig(K, N, w.bits, w.group, mp)] = best
+        elif isinstance(w, VQTensor):
+            K, N = w.shape
+            n_books = w.codebook.shape[-3]
+            if N == 1:
+                for mp in m_buckets:
+                    entries[vqe_sig(K, w.d, w.k, mp)] = \
+                        rank_vqe(K, w.d, w.k, n_books, mp)[0]
+                return
+            for mp in m_buckets:
+                ranked = rank_vq(K, N, w.d, w.k, n_books, mp)
+                best = ranked[0]
+                if do_measure and best.get("kernel") and len(ranked) > 1 \
+                        and w.packed.ndim == 3:
+                    best = _measure_vq(w, ranked, mp)
+                entries[vq_sig(K, N, w.d, w.k, mp)] = best
+
+    leaves = jax.tree_util.tree_leaves(
+        qparams, is_leaf=is_serializable_container)
+    for leaf in leaves:
+        if is_serializable_container(leaf):
+            visit(leaf)
+
+    _TABLE.entries.update(entries)
+    return ScheduleTable(entries).to_dict()

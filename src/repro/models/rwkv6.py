@@ -203,10 +203,20 @@ def _ddlerp(tm, x, x_prev):
     lo = jnp.tanh(q.matmul(xxx, tm["lora_maa_A"]))
     B_, S_, _ = lo.shape
     lo = lo.reshape(B_, S_, 5, TM_LORA)
-    deltas = jnp.einsum("bsfr,frd->bsfd", lo,
-                        q.dequant(tm["lora_maa_B"]).astype(lo.dtype)
-                        if q.is_quantized(tm["lora_maa_B"])
-                        else tm["lora_maa_B"].astype(lo.dtype))
+    if q.is_quantized(tm["lora_maa_B"]):
+        # 5 low-rank heads as one stacked GEMV launch at decode shapes
+        ys = q.matmul_fused(lo.transpose(2, 0, 1, 3), tm["lora_maa_B"])
+        deltas = ys.transpose(1, 2, 0, 3)              # (B, S, 5, d)
+    else:
+        deltas = jnp.einsum("bsfr,frd->bsfd", lo,
+                            tm["lora_maa_B"].astype(lo.dtype))
+    if "mu_wkvrg" in tm:
+        # fused decode layout (prepare_decode_params): the five mu
+        # expand-and-multiplies run as ONE grid-(5,) kernel launch, the
+        # per-leaf ddlerp delta added to the expanded weight in-kernel
+        ys = q.emul_fused(dx, tm["mu_wkvrg"],
+                          add=deltas.transpose(2, 0, 1, 3))
+        return [x + ys[j] for j in range(5)]
     outs = []
     for j, name in enumerate(("mu_w", "mu_k", "mu_v", "mu_r", "mu_g")):
         mu_j = tm[name]
@@ -269,7 +279,8 @@ def time_mix(cfg, tm, x, x_prev, state, mask=None):
     if TP_CONSTRAINTS:
         w = constrain(w, "dp", None, None, None)
 
-    u = q.dequant(tm["bonus"]) if q.is_quantized(tm["bonus"]) else tm["bonus"]
+    u = q.dequant_vec(tm["bonus"]) if q.is_quantized(tm["bonus"]) \
+        else tm["bonus"]
     y, new_state = wkv6(r, k, v, w, u.reshape(H, hd), state)
     y = y.reshape(B, S, d)
     y = L.group_norm(y, tm["ln_x"]["g"], tm["ln_x"]["b"], H, 64e-5)
@@ -282,8 +293,13 @@ def time_mix(cfg, tm, x, x_prev, state, mask=None):
 def channel_mix(cfg, cm, x, x_prev):
     """Megatron pattern: w_ck column-parallel, w_cv row-parallel."""
     dx = x_prev - x
-    xk = x + q.emul(dx, cm["mu_ck"])
-    xr = x + q.emul(dx, cm["mu_cr"])
+    if "mu_ckcr" in cm:
+        # fused decode layout: both channel-mix mu multiplies, one launch
+        ys = q.emul_fused(dx, cm["mu_ckcr"])
+        xk, xr = x + ys[0], x + ys[1]
+    else:
+        xk = x + q.emul(dx, cm["mu_ck"])
+        xr = x + q.emul(dx, cm["mu_cr"])
     if not TP_CONSTRAINTS:
         kk = jnp.square(jax.nn.relu(q.matmul(xk, cm["w_ck"])))
         return jax.nn.sigmoid(q.matmul(xr, cm["w_cr"])) \
@@ -424,33 +440,9 @@ def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:
 #  Decode-time weight layout
 # --------------------------------------------------------------------------- #
 _RKVG = ("w_r", "w_k", "w_v", "w_g")
-
-
-def _stack_sq(ws):
-    """Stack same-meta SQ containers on a projection axis (after layers)."""
-    w0 = ws[0]
-    if not all((w.shape, w.bits, w.group) == (w0.shape, w0.bits, w0.group)
-               for w in ws):
-        return None
-    return q.SQTensor(
-        packed=jnp.stack([w.packed for w in ws], axis=1),
-        scales=jnp.stack([w.scales for w in ws], axis=1),
-        biases=jnp.stack([w.biases for w in ws], axis=1),
-        shape=w0.shape, bits=w0.bits, group=w0.group)
-
-
-def _stack_vq(ws):
-    """Stack same-meta VQ containers on a projection axis (after layers)."""
-    w0 = ws[0]
-    if not all((w.shape, w.d, w.k, w.codebook.shape)
-               == (w0.shape, w0.d, w0.k, w0.codebook.shape) for w in ws):
-        return None
-    if w0.codebook.shape[-3] != 1:          # fused kernel: one book per proj
-        return None
-    return q.VQTensor(
-        packed=jnp.stack([w.packed for w in ws], axis=1),
-        codebook=jnp.stack([w.codebook for w in ws], axis=1),
-        shape=w0.shape, d=w0.d, k=w0.k)
+# ddlerp loop order (matches the deltas index j in _ddlerp)
+_TM_MU = ("mu_w", "mu_k", "mu_v", "mu_r", "mu_g")
+_CM_MU = ("mu_ck", "mu_cr")
 
 
 def fuse_rkvg(params):
@@ -469,32 +461,43 @@ def fuse_rkvg(params):
     No-op when any projection is unquantized or stack metadata differs.
     """
     tm = params.get("blocks", {}).get("tm", {})
-    ws = [tm.get(n) for n in _RKVG]
-    if not all(q.is_quantized(w) for w in ws):
+    fused = q.fuse_projections([tm.get(n) for n in _RKVG])
+    if fused is None:
         return params
-    sq_idx = tuple(i for i, w in enumerate(ws)
-                   if isinstance(w, q.SQTensor))
-    vq_idx = tuple(i for i, w in enumerate(ws)
-                   if isinstance(w, q.VQTensor))
-    sq = _stack_sq([ws[i] for i in sq_idx]) if sq_idx else None
-    vq = _stack_vq([ws[i] for i in vq_idx]) if vq_idx else None
-    if (sq_idx and sq is None) or (vq_idx and vq is None):
-        return params                       # metadata mismatch: stay unfused
-    if sq is not None and vq is not None and sq.shape != vq.shape:
-        return params
-    if not vq_idx:
-        fused = sq
-    elif not sq_idx:
-        fused = vq
-    else:
-        fused = q.FusedHybrid(sq=sq, vq=vq, sq_idx=sq_idx, vq_idx=vq_idx,
-                              shape=ws[0].shape)
     new_tm = {k: v for k, v in tm.items() if k not in _RKVG}
     new_tm["w_rkvg"] = fused
     blocks = dict(params["blocks"], tm=new_tm)
     return dict(params, blocks=blocks)
 
 
+def _fuse_mu(params, sub: str, names, out_key: str):
+    """Stack a block's quantized (n, 1) mu vectors into one emul leaf.
+
+    VQ-only (the emul_fused kernel expands per-leaf codebooks); no-op
+    when any vector is unquantized, SQ, or stack metadata differs.
+    """
+    grp = params.get("blocks", {}).get(sub, {})
+    ws = [grp.get(n) for n in names]
+    if not all(isinstance(w, q.VQTensor) for w in ws):
+        return params
+    stacked = q.stack_vq(ws)
+    if stacked is None:
+        return params
+    new_grp = {k: v for k, v in grp.items() if k not in names}
+    new_grp[out_key] = stacked
+    blocks = dict(params["blocks"], **{sub: new_grp})
+    return dict(params, blocks=blocks)
+
+
 def prepare_decode_params(params):
-    """Registry hook: decode-optimized weight layout (see fuse_rkvg)."""
-    return fuse_rkvg(params)
+    """Registry hook: decode-optimized weight layout.
+
+    Stacks the r/k/v/g projections (``w_rkvg``, see :func:`fuse_rkvg`),
+    the five ddlerp mu vectors (``mu_wkvrg`` — order follows the
+    _ddlerp deltas index) and the two channel-mix mu vectors
+    (``mu_ckcr``) so decode ticks launch one kernel per group.
+    """
+    params = fuse_rkvg(params)
+    params = _fuse_mu(params, "tm", _TM_MU, "mu_wkvrg")
+    params = _fuse_mu(params, "cm", _CM_MU, "mu_ckcr")
+    return params

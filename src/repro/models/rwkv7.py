@@ -120,7 +120,7 @@ def _lora(x, base, A, B, act=jnp.tanh):
     if act is not None:
         h = act(h)
     out = q.matmul(h, B)
-    bb = q.dequant(base).reshape(-1) if q.is_quantized(base) else base
+    bb = q.dequant_vec(base) if q.is_quantized(base) else base
     return out + bb.astype(out.dtype)
 
 
@@ -140,16 +140,28 @@ def time_mix(cfg, tm, x, x_prev, state, v_first, layer_is_first,
     B, S, d = x.shape
     H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
     dx = x_prev - x
-    xr = x + q.emul(dx, tm["mu_r"])
-    xw = x + q.emul(dx, tm["mu_w"])
-    xk = x + q.emul(dx, tm["mu_k"])
-    xv = x + q.emul(dx, tm["mu_v"])
-    xa = x + q.emul(dx, tm["mu_a"])
-    xg = x + q.emul(dx, tm["mu_g"])
+    if "mu_rwkvag" in tm:
+        # fused decode layout (prepare_decode_params): all six token-shift
+        # mu expand-and-multiplies run as ONE grid-(6,) kernel launch
+        ys = q.emul_fused(dx, tm["mu_rwkvag"])
+        xr, xw, xk, xv, xa, xg = (x + ys[j] for j in range(6))
+    else:
+        xr = x + q.emul(dx, tm["mu_r"])
+        xw = x + q.emul(dx, tm["mu_w"])
+        xk = x + q.emul(dx, tm["mu_k"])
+        xv = x + q.emul(dx, tm["mu_v"])
+        xa = x + q.emul(dx, tm["mu_a"])
+        xg = x + q.emul(dx, tm["mu_g"])
 
-    r = q.matmul(xr, tm["w_r"])
-    k = q.matmul(xk, tm["w_k"])
-    v = q.matmul(xv, tm["w_v"])
+    if "w_rkv" in tm:
+        # fused decode layout: the three projections of this token's mixes
+        # run as one stacked GEMV kernel launch
+        ys = q.matmul_fused(jnp.stack([xr, xk, xv]), tm["w_rkv"])
+        r, k, v = ys[0], ys[1], ys[2]
+    else:
+        r = q.matmul(xr, tm["w_r"])
+        k = q.matmul(xk, tm["w_k"])
+        v = q.matmul(xv, tm["w_v"])
 
     # decay: log-decay in (-inf, -0.02], computed in f32
     dl = _lora(xw, tm["decay_w"], tm["lora_decay_A"], tm["lora_decay_B"])
@@ -171,7 +183,7 @@ def time_mix(cfg, tm, x, x_prev, state, v_first, layer_is_first,
 
     kappa = q.emul(k, tm["kappa_k"])
     kappa_hat = _l2norm_heads(kappa, H, hd)
-    adapt = q.dequant(tm["adapt_k"]).reshape(-1) \
+    adapt = q.dequant_vec(tm["adapt_k"]) \
         if q.is_quantized(tm["adapt_k"]) else tm["adapt_k"]
     k = k * (1.0 + (iclr - 1.0) * adapt.astype(x.dtype))
     if mask is not None:
@@ -188,7 +200,7 @@ def time_mix(cfg, tm, x, x_prev, state, v_first, layer_is_first,
                              a4, b4, state)
     y = y.reshape(B, S, d)
     y = L.group_norm(y, tm["ln_x"]["g"], tm["ln_x"]["b"], H, 64e-5)
-    rk = q.dequant(tm["bonus_rk"]) if q.is_quantized(tm["bonus_rk"]) \
+    rk = q.dequant_vec(tm["bonus_rk"]) if q.is_quantized(tm["bonus_rk"]) \
         else tm["bonus_rk"]
     corr = jnp.sum(r.reshape(shape4) * k.reshape(shape4)
                    * rk.reshape(1, 1, H, hd), axis=-1, keepdims=True)
@@ -312,3 +324,42 @@ def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:
     h, new_cache = _cached_stack(cfg, params, cache, x)
     new_cache["index"] = cache["index"] + 1
     return logits(cfg, params, h[:, 0:1, :])[:, 0, :], new_cache
+
+
+# --------------------------------------------------------------------------- #
+#  Decode-time weight layout
+# --------------------------------------------------------------------------- #
+_RKV = ("w_r", "w_k", "w_v")
+# time_mix unpack order (matches the emul_fused leaf index in time_mix)
+_TM_MU = ("mu_r", "mu_w", "mu_k", "mu_v", "mu_a", "mu_g")
+
+
+def _fuse_group(params, sub: str, names, out_key: str, fuse):
+    grp = params.get("blocks", {}).get(sub, {})
+    ws = [grp.get(n) for n in names]
+    fused = fuse(ws)
+    if fused is None:
+        return params
+    new_grp = {k: v for k, v in grp.items() if k not in names}
+    new_grp[out_key] = fused
+    blocks = dict(params["blocks"], **{sub: new_grp})
+    return dict(params, blocks=blocks)
+
+
+def _fuse_mu_vq(ws):
+    if not all(isinstance(w, q.VQTensor) for w in ws):
+        return None
+    return q.stack_vq(ws)
+
+
+def prepare_decode_params(params):
+    """Registry hook: decode-optimized weight layout.
+
+    Stacks the r/k/v projections into ``w_rkv`` (one GEMV launch — SQ,
+    VQ, or proxy-mixed hybrid) and the six quantized token-shift mu
+    vectors into ``mu_rwkvag`` (one grid-(6,) emul launch); each no-ops
+    when a member is unquantized or stack metadata differs.
+    """
+    params = _fuse_group(params, "tm", _RKV, "w_rkv", q.fuse_projections)
+    params = _fuse_group(params, "tm", _TM_MU, "mu_rwkvag", _fuse_mu_vq)
+    return params

@@ -308,6 +308,10 @@ class ServeEngine:
             raise ValueError(
                 f"artifact kind {artifact.kind!r} is not servable; "
                 "ServeEngine.from_artifact needs kind 'tree'")
+        if getattr(artifact, "tuning", None):
+            # persisted autotune table: serving does 0 re-tuning work
+            from repro.launch import autotune
+            autotune.install(artifact.tuning)
         return cls(artifact.cfg, artifact.params, **kw)
 
     def _note_shape(self, which: str, ent: dict, shape_key) -> None:

@@ -276,8 +276,9 @@ def test_truncated_artifact_is_clear_error(tmp_path):
 def test_save_refuses_foreign_format_version(tmp_path):
     cfg = _cfg("rwkv6-3b")
     art = QuantizedArtifact(cfg=cfg, params={}, kind="tree",
-                            format_version=2)
-    with pytest.raises(ArtifactFormatError, match="format_version 2"):
+                            format_version=FORMAT_VERSION + 1)
+    with pytest.raises(ArtifactFormatError,
+                       match=f"format_version {FORMAT_VERSION + 1}"):
         art.save(str(tmp_path / "x.rqa"))
 
 
