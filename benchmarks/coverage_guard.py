@@ -9,6 +9,12 @@ thresholds in ``coverage_threshold.json``:
   to miss the Pallas kernels (0: full coverage is the contract);
 * ``max_byte_ratio`` — whole-model per-token weight traffic vs bf16.
 
+The same gate runs over the self-speculative ladder's ~2-bpw all-VQ
+draft tree (``core.policy.DRAFT_VQ_2``): the draft runs k+1 sequential
+decode steps per launch, so a draft leaf falling off the kernels costs
+more than a target leaf would (``max_draft_fallback_leaves``, default
+0, and ``max_draft_byte_ratio``).
+
 Runs in interpret mode on CPU (the report is analytic — no TPU needed)
 and exits non-zero on regression, so a dispatch-rule change that
 silently drops a leaf back to the XLA dequant path fails CI instead of
@@ -27,7 +33,7 @@ import jax
 from benchmarks.decode_throughput import decode_cfg
 from repro.core import coverage
 from repro.core.hybrid import quantize_tree
-from repro.core.policy import DATAFREE_3_275
+from repro.core.policy import DATAFREE_3_275, DRAFT_VQ_2
 from repro.models import registry as R
 
 THRESHOLDS = os.path.join(os.path.dirname(__file__),
@@ -45,6 +51,12 @@ def main() -> int:
         R.prepare_decode_params(cfg, qparams), impl="pallas")
     print(coverage.format_table(report))
 
+    dqparams, _ = quantize_tree(params, DRAFT_VQ_2, jax.random.PRNGKey(1))
+    draft_report = coverage.coverage_report(
+        R.prepare_decode_params(cfg, dqparams), impl="pallas")
+    print("\n[ladder draft tree: DRAFT_VQ_2]")
+    print(coverage.format_table(draft_report))
+
     failures = []
     if report["n_fallback_leaves"] > thr["max_fallback_leaves"]:
         failures.append(
@@ -54,14 +66,27 @@ def main() -> int:
         failures.append(
             f"byte ratio {report['ratio']:.4f} > "
             f"max_byte_ratio={thr['max_byte_ratio']}")
+    dmax_fb = thr.get("max_draft_fallback_leaves", 0)
+    if draft_report["n_fallback_leaves"] > dmax_fb:
+        failures.append(
+            f"draft n_fallback_leaves={draft_report['n_fallback_leaves']}"
+            f" > max_draft_fallback_leaves={dmax_fb}")
+    dmax_ratio = thr.get("max_draft_byte_ratio", thr["max_byte_ratio"])
+    if draft_report["ratio"] > dmax_ratio:
+        failures.append(
+            f"draft byte ratio {draft_report['ratio']:.4f} > "
+            f"max_draft_byte_ratio={dmax_ratio}")
     if failures:
         print("\ncoverage guard FAILED:")
         for f_ in failures:
             print(f"  - {f_}")
         return 1
-    print(f"\ncoverage guard OK: {report['n_kernel_leaves']}/"
-          f"{report['n_leaves']} leaves on kernels, "
-          f"ratio {report['ratio']:.4f} <= {thr['max_byte_ratio']}")
+    print(f"\ncoverage guard OK: target {report['n_kernel_leaves']}/"
+          f"{report['n_leaves']} leaves on kernels "
+          f"(ratio {report['ratio']:.4f} <= {thr['max_byte_ratio']}), "
+          f"draft {draft_report['n_kernel_leaves']}/"
+          f"{draft_report['n_leaves']} "
+          f"(ratio {draft_report['ratio']:.4f} <= {dmax_ratio})")
     return 0
 
 

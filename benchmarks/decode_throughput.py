@@ -24,11 +24,21 @@ measurements on a reduced RWKV6 with the paper's 3.275-bpw hybrid policy:
   4. BURSTY TRACE — 32 mixed-length requests (prompt lengths spanning
      four power-of-two buckets) arriving in bursts, served by the
      elastic-pool bucketed-admission fast path: tokens/sec, per-request
-     queue wait (ticks), jit-recompile counts (decode-tick pool sizes +
-     prefill (rows, bucket) shapes) and pool resizes, with greedy
-     outputs asserted bit-identical to the slow host loop — for the
-     fast XLA path and the full-coverage Pallas decode path alike.
-  5. COLD START — the quantize-once / serve-anywhere boundary: artifact
+     queue wait (ticks), p50/p99 inter-token latency (tick deltas per
+     stream from ``Request.token_ticks``), jit-recompile counts
+     (decode-tick pool sizes + prefill (rows, bucket) shapes) and pool
+     resizes, with greedy outputs asserted bit-identical to the slow
+     host loop — for the fast XLA path and the full-coverage Pallas
+     decode path alike.
+  5. SPECULATIVE — the self-speculative quantization ladder:
+     ``api.quantize(..., ladder=True)`` carries a ~2-bpw all-VQ draft
+     next to the 3.275-bpw target, and ``speculate=k`` serves with the
+     draft-propose / target-verify tick.  Greedy outputs are asserted
+     bit-identical to the target-only engine (steady trace on both
+     impls AND the bursty trace), with measured acceptance rate,
+     per-stream tokens/launch (> 1.0 asserted) and the analytic
+     effective weight-bytes per emitted token.
+  6. COLD START — the quantize-once / serve-anywhere boundary: artifact
      save/load time vs full re-quantization time, and engine
      construction + first-token latency with a cold vs warm shared
      jit-closure cache (the warm engine must report zero new
@@ -164,13 +174,15 @@ def _bursty_trace(cfg):
     return prompts, arrivals
 
 
-def _drive_bursty(cfg, params, fast_path: bool, impl: str):
+def _drive_bursty(cfg, params, fast_path: bool, impl: str,
+                  engine_factory=None):
     from repro.serve import engine as se
     se.clear_closure_cache()     # recompile counts must measure THIS
     prompts, arrivals = _bursty_trace(cfg)   # trace, not earlier sections
-    eng = ServeEngine(cfg, params, n_slots=BURSTY_N_SLOTS,
-                      max_len=BURSTY_MAX_LEN, fast_path=fast_path,
-                      impl=impl)
+    eng = engine_factory() if engine_factory is not None else \
+        ServeEngine(cfg, params, n_slots=BURSTY_N_SLOTS,
+                    max_len=BURSTY_MAX_LEN, fast_path=fast_path,
+                    impl=impl)
     i = steps = 0
     t0 = time.time()
     while True:
@@ -194,11 +206,115 @@ def _drive_bursty(cfg, params, fast_path: bool, impl: str):
         "queue_wait_ticks": {"mean": float(np.mean(waits)),
                              "p50": float(np.median(waits)),
                              "max": int(max(waits))},
+        "inter_token_ticks": _inter_token_ticks(eng.completed),
         "jit_recompiles": eng.jit_recompiles,
         "pool_resizes": eng.pool_resizes,
         "length_buckets": buckets,
         "outputs": {r.uid: r.out_tokens for r in eng.completed},
     }
+
+
+def _inter_token_ticks(requests):
+    """p50/p99 of per-stream inter-token latency, in engine ticks.
+
+    Each request records the tick at which every output token was first
+    observed on the host (``Request.token_ticks``); consecutive deltas
+    within one stream are its inter-token latencies.  Under speculative
+    decode several tokens can land in the same tick (delta 0), which is
+    exactly the latency win being measured."""
+    deltas = []
+    for r in requests:
+        deltas.extend(np.diff(r.token_ticks).tolist())
+    if not deltas:
+        return {"n": 0}
+    return {"n": len(deltas),
+            "mean": float(np.mean(deltas)),
+            "p50": float(np.percentile(deltas, 50)),
+            "p99": float(np.percentile(deltas, 99)),
+            "max": int(max(deltas))}
+
+
+# --------------------------------------------------------------------------- #
+#  Self-speculative decode: quantization ladder + draft-verify engine
+# --------------------------------------------------------------------------- #
+SPEC_K = 3      # draft proposals per launch (pool*(k+1) stays on GEMV)
+
+
+def _speculative(cfg, params, bursty_ref):
+    """Ladder quantize + draft-verify serving vs the target-only engine.
+
+    Greedy outputs must be bit-identical to the plain engine (the whole
+    contract of ``serve.speculate``) — on the steady 4-request trace for
+    both impls AND under the bursty mixed-length trace.  Reports the
+    measured acceptance rate, per-stream tokens/launch (must beat the
+    plain tick's 1.0) and the analytic effective weight-bytes per
+    emitted token of a launch (draft read k+1 times + target read once).
+    """
+    from repro import api
+
+    out = {"k": SPEC_K}
+    t0 = time.time()
+    art = api.quantize(cfg, params, DATAFREE_3_275, ladder=True)
+    out["ladder_quantize_s"] = time.time() - t0
+    out["draft_policy"] = "DRAFT_VQ_2 (~2 bpw all-VQ, data-free)"
+    out["target_bpw"] = float(art.report.mean_bpw)
+    out["draft_bpw"] = float(art.draft_report.mean_bpw)
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=5 + (i % 3))
+               .astype(np.int32) for i in range(N_REQ)]
+
+    def serve(speculate, impl):
+        eng = ServeEngine.from_artifact(
+            art, n_slots=N_SLOTS, max_len=MAX_LEN, impl=impl,
+            speculate=speculate)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=NEW_TOKENS)
+        t0 = time.time()
+        done = eng.run_until_drained()
+        dt = time.time() - t0
+        return {r.uid: r.out_tokens for r in done}, eng, dt
+
+    ref, _, _ = serve(0, "xla")
+    for impl in ("xla", "pallas"):
+        outs, eng, dt = serve(SPEC_K, impl)
+        assert outs == ref, \
+            f"speculative greedy decode ({impl}) diverged from target-only"
+        st = eng.speculative_stats
+        assert st["acceptance_rate"] > 0.0, st
+        assert st["tokens_per_launch"] > 1.0, st
+        n_tok = sum(len(v) for v in outs.values())
+        out[impl] = dict(st, tokens=n_tok, seconds=dt,
+                         tokens_per_sec=n_tok / dt,
+                         greedy_bit_identical=True,
+                         inter_token_ticks=_inter_token_ticks(
+                             eng.completed))
+
+    # bursty mixed-length trace under speculation: same outputs again
+    bspec = _drive_bursty(
+        cfg, None, True, "xla",
+        engine_factory=lambda: ServeEngine.from_artifact(
+            art, n_slots=BURSTY_N_SLOTS, max_len=BURSTY_MAX_LEN,
+            impl="xla", speculate=SPEC_K))
+    assert bspec["outputs"] == bursty_ref, \
+        "speculative bursty trace diverged from the plain engine"
+    bspec["greedy_bit_identical"] = True
+    del bspec["outputs"]
+    out["bursty"] = bspec
+
+    # analytic effective weight traffic per emitted token
+    tgt_rep = coverage.coverage_report(
+        R.prepare_decode_params(cfg, art.params), impl="pallas")
+    drf_rep = coverage.coverage_report(
+        R.prepare_decode_params(cfg, art.draft_params), impl="pallas")
+    assert drf_rep["n_fallback_leaves"] == 0, \
+        f"{drf_rep['n_fallback_leaves']} draft leaves missed the kernels"
+    out["effective_bytes"] = coverage.speculative_effective_bytes(
+        tgt_rep, drf_rep, SPEC_K, out["xla"]["tokens_per_launch"])
+    out["metric"] = {
+        "speculative_effective_bytes":
+            coverage.METRIC_DEFINITIONS["speculative_effective_bytes"]}
+    return out
 
 
 # --------------------------------------------------------------------------- #
@@ -312,6 +428,10 @@ def run(print_csv=print):
     assert bursty["fast_pallas"]["outputs"] == \
         bursty["slow_xla"]["outputs"], \
         "bursty pallas decode diverged from the xla fallback path"
+
+    # 5. self-speculative decode: ladder artifact + draft-verify engine
+    spec = _speculative(cfg, params, bursty["slow_xla"]["outputs"])
+
     for tag, r in bursty.items():
         r["greedy_bit_identical"] = True
         del r["outputs"]                 # checked above; keep JSON small
@@ -320,10 +440,24 @@ def run(print_csv=print):
             r["seconds"] / max(r["tokens"], 1) * 1e6,
             f"tokens_per_sec={r['tokens_per_sec']:.2f};"
             f"queue_wait_mean={r['queue_wait_ticks']['mean']:.2f};"
+            f"itl_p50={r['inter_token_ticks']['p50']:.1f};"
+            f"itl_p99={r['inter_token_ticks']['p99']:.1f};"
             f"recompiles={sum(r['jit_recompiles'].values())};"
             f"pool_resizes={r['pool_resizes']}"))
+    for impl in ("xla", "pallas"):
+        r = spec[impl]
+        print_csv(csv_row(
+            f"decode/speculative/{impl}",
+            r["seconds"] / max(r["tokens"], 1) * 1e6,
+            f"k={spec['k']};acceptance={r['acceptance_rate']:.3f};"
+            f"tokens_per_launch={r['tokens_per_launch']:.3f};"
+            f"bit_identical={r['greedy_bit_identical']}"))
+    print_csv(csv_row(
+        "decode/speculative/effective_bytes", t.lap() * 1e6,
+        f"per_token={spec['effective_bytes']['effective_bytes_per_token']:.0f};"
+        f"vs_plain={spec['effective_bytes']['vs_plain_ratio']:.3f}"))
 
-    # 5. cold start: artifact boundary + shared closure cache
+    # 6. cold start: artifact boundary + shared closure cache
     cold = _cold_start(cfg, params, qp, DATAFREE_3_275)
     print_csv(csv_row(
         "decode/cold_start", t.lap() * 1e6,
@@ -350,6 +484,7 @@ def run(print_csv=print):
                        n_requests=BURSTY_N_REQ,
                        n_slots=BURSTY_N_SLOTS,
                        new_tokens=BURSTY_NEW_TOKENS),
+        "speculative": spec,
         "cold_start": cold,
     }
     with open(OUT_JSON, "w") as f:

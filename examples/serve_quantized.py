@@ -17,6 +17,19 @@ pool with the load, reporting queue waits, pool resizes and jit
 retraces.
 
     PYTHONPATH=src python examples/serve_quantized.py --bursty
+
+``--speculate K`` serves self-speculatively: quantization builds a
+*ladder* (``api.quantize(..., ladder=True)``) whose aggressive ~2-bpw
+all-VQ draft rung (``core.policy.DRAFT_VQ_2``) proposes K tokens per
+launch and the target rung verifies them in one batched pass — greedy
+outputs stay bit-identical to plain serving, and the demo reports the
+measured acceptance rate and tokens/launch.  The draft rung is a knob:
+pass any ``QuantPolicy`` as ``ladder=`` (e.g. larger ``vq_d`` /
+smaller ``vq_k`` for a cheaper, less accurate draft; acceptance rate
+trades against draft read traffic).  ``--load`` of a pre-ladder (v1/v2)
+artifact refuses ``--speculate`` with a clear error.
+
+    PYTHONPATH=src python examples/serve_quantized.py --speculate 3
 """
 import argparse
 import dataclasses
@@ -32,7 +45,7 @@ from repro.train.optimizer import AdamWConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
 
-def _train_and_quantize() -> api.QuantizedArtifact:
+def _train_and_quantize(ladder: bool = False) -> api.QuantizedArtifact:
     cfg = dataclasses.replace(reduced(ARCHS["rwkv6-3b"]),
                               n_layers=3, vocab_size=256)
     print("training a tiny RWKV-6 ...")
@@ -43,17 +56,30 @@ def _train_and_quantize() -> api.QuantizedArtifact:
                  AdamWConfig(lr=2e-3, warmup_steps=10, total_steps=60))
     state = tr.run(resume=False)
 
-    print("quantizing ...")
-    art = api.quantize(cfg, state.params, DATAFREE_3_275)
+    print("quantizing" + (" (with draft ladder)" if ladder else "")
+          + " ...")
+    art = api.quantize(cfg, state.params, DATAFREE_3_275, ladder=ladder)
     print(" ", art.report.summary())
     print(f"  {qz.param_bytes(state.params)/1e6:.1f} MB -> "
           f"{qz.param_bytes(art.params)/1e6:.1f} MB")
+    if ladder:
+        print(f"  draft rung: {qz.param_bytes(art.draft_params)/1e6:.1f} "
+              f"MB ({art.draft_report.summary()})")
     return art
 
 
-def steady(art: api.QuantizedArtifact):
+def _spec_report(eng):
+    s = eng.speculative_stats
+    print(f"  speculative (k={eng.speculate}): acceptance rate "
+          f"{s['acceptance_rate']:.3f}, {s['tokens_per_launch']:.2f} "
+          f"tokens/launch ({s['emitted']} tokens over "
+          f"{s['slot_launches']} slot-launches)")
+
+
+def steady(art: api.QuantizedArtifact, speculate: int = 0):
     print("serving with continuous batching (4 slots, 6 requests) ...")
-    eng = api.Engine.from_artifact(art, n_slots=4, max_len=96)
+    eng = api.Engine.from_artifact(art, n_slots=4, max_len=96,
+                                   speculate=speculate)
     corpus = SyntheticCorpus(CorpusConfig(vocab_size=256))
     for i in range(5):
         prompt = corpus.batch(i, 1, 12)["tokens"][0]
@@ -74,16 +100,19 @@ def steady(art: api.QuantizedArtifact):
     n_tok = sum(len(r.out_tokens) for r in done)
     print(f"on-device decode loop: {eng.host_syncs} host syncs for "
           f"{n_tok} tokens ({eng.host_syncs / max(n_tok, 1):.2f}/token)")
+    if speculate:
+        _spec_report(eng)
 
 
-def bursty(art: api.QuantizedArtifact):
+def bursty(art: api.QuantizedArtifact, speculate: int = 0):
     print("serving a bursty mixed-length trace "
           "(elastic pools, bucketed prefill) ...")
     rng = np.random.default_rng(0)
     lens = [int(x) for x in rng.integers(3, 60, size=24)]
     arrivals = sorted(int(a) for a in rng.integers(0, 8, size=24))
     prompts = [rng.integers(0, 256, size=n).astype(np.int32) for n in lens]
-    eng = api.Engine.from_artifact(art, n_slots=16, max_len=96)
+    eng = api.Engine.from_artifact(art, n_slots=16, max_len=96,
+                                   speculate=speculate)
     i = 0
     while True:
         while i < len(prompts) and arrivals[i] <= eng.tick_no:
@@ -103,6 +132,8 @@ def bursty(art: api.QuantizedArtifact):
           f"(final pool {eng.pool} of max {eng.n_slots})")
     print(f"  jit retraces: {eng.jit_recompiles}")
     print(f"  host syncs/token: {eng.host_syncs / max(n_tok, 1):.2f}")
+    if speculate:
+        _spec_report(eng)
 
 
 def main():
@@ -115,6 +146,13 @@ def main():
     ap.add_argument("--load", metavar="PATH", default=None,
                     help="serve from a saved artifact (skips training and "
                          "quantization entirely)")
+    ap.add_argument("--speculate", metavar="K", type=int, default=0,
+                    help="self-speculative decode: the ~2-bpw all-VQ "
+                         "draft rung proposes K tokens per launch, the "
+                         "target verifies them in one batched pass "
+                         "(greedy outputs are bit-identical; requires a "
+                         "ladder artifact, which --save/--train builds "
+                         "automatically when K > 0)")
     args = ap.parse_args()
     if args.load:
         print(f"loading artifact {args.load} ...")
@@ -122,15 +160,15 @@ def main():
         print(f"  cfg={art.cfg.name} cfg_hash={art.cfg_hash} "
               f"kind={art.kind}")
     else:
-        art = _train_and_quantize()
+        art = _train_and_quantize(ladder=args.speculate > 0)
         if args.save:
             api.save(art, args.save)
             print(f"saved artifact -> {args.save} "
                   f"(reload with --load {args.save})")
     if args.bursty:
-        bursty(art)
+        bursty(art, speculate=args.speculate)
     else:
-        steady(art)
+        steady(art, speculate=args.speculate)
 
 
 if __name__ == "__main__":

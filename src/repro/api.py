@@ -56,7 +56,8 @@ __all__ = ["quantize", "save", "load", "lm", "coverage_report", "Engine",
 
 def quantize(cfg, params, policy: QuantPolicy = PAPER_3_275, *,
              batches: Optional[List[Dict[str, Any]]] = None,
-             seed: int = 0) -> QuantizedArtifact:
+             seed: int = 0,
+             ladder: Any = False) -> QuantizedArtifact:
     """Run the paper's proxy-guided hybrid SQ/VQ quantization.
 
     Without ``batches`` the data-free variant quantizes the stacked
@@ -64,21 +65,53 @@ def quantize(cfg, params, policy: QuantPolicy = PAPER_3_275, *,
     calibration ``batches`` the block-wise pipeline runs GPTQ/GPTVQ with
     exact per-layer Eq. 18 decisions (kind 'blockwise_lm', for the
     paper-fidelity quality evals — rebuild with :func:`lm`).
+
+    ``ladder`` opts into the multi-fidelity quantization ladder for
+    self-speculative decode: ``True`` re-quantizes the same float
+    weights under the aggressive ~2-bit all-VQ draft preset
+    (``core.policy.DRAFT_VQ_2``); pass a :class:`QuantPolicy` to choose
+    the draft rung yourself.  The draft tree rides in the same artifact
+    (``format_version`` 3 ``ladder`` section) and unlocks
+    ``Engine.from_artifact(..., speculate=k)``.  Tree kind only.
     """
     key = jax.random.PRNGKey(seed)
     if batches is None:
+        from repro.core.pipeline import quantize_ladder
+        from repro.core.policy import DRAFT_VQ_2
         from repro.launch import autotune
         from repro.models import registry as _R
 
-        qparams, report = quantize_tree(params, policy, key)
+        draft_params = draft_policy = draft_report = None
+        if ladder:
+            draft_policy = ladder if isinstance(ladder, QuantPolicy) \
+                else DRAFT_VQ_2
+            qparams, report, draft_params, draft_report = quantize_ladder(
+                params, policy, draft_policy, key)
+        else:
+            qparams, report = quantize_tree(params, policy, key)
         # Tune decode schedules against the decode-prepared view of the
         # tree (fused projections / stacked mu leaves) so the persisted
         # table matches exactly what the engine will launch; serving a
         # reloaded artifact then needs zero re-tuning work.
         tuning = autotune.tune_tree(_R.prepare_decode_params(cfg, qparams))
+        if draft_params is not None:
+            # one merged table serves both rungs (schedule entries are
+            # keyed by leaf signature; target entries win on collision)
+            dtuning = autotune.tune_tree(
+                _R.prepare_decode_params(cfg, draft_params))
+            tuning = dict(tuning, entries={**dtuning["entries"],
+                                           **tuning["entries"]})
         return QuantizedArtifact(cfg=cfg, params=qparams, policy=policy,
                                  report=report, kind="tree",
-                                 tuning=tuning)
+                                 tuning=tuning,
+                                 draft_params=draft_params,
+                                 draft_policy=draft_policy,
+                                 draft_report=draft_report)
+    if ladder:
+        raise ValueError(
+            "ladder=... is only supported for the data-free tree pipeline "
+            "(no calibration batches): the blockwise_lm kind is not "
+            "servable and has no speculative path")
     qlm = blockwise_quantize(cfg, params, batches, policy, key)
     return qlm.to_artifact(policy=policy)
 

@@ -23,6 +23,9 @@ One uncompressed numpy zip with two kinds of entries:
         "policy": {...QuantPolicy fields...} | null,
         "report": {"tau_c", "tau_f", "records": [...]} | null,
         "tuning": {"version": 1, "entries": {"<sig>": {...}}} | null,
+        "ladder": {"policy": {...}, "report": {...} | null,
+                   "leaves": [...]} | null,   # draft rung (same leaf
+                                              # schema, shared tensor pool)
         "leaves": [
           {"path":  [["k", "blocks"], ["k", "tm"], ["k", "w_r"]],
            "spec":  {"type": "array"}            # plain tensor, or
@@ -56,10 +59,14 @@ Versioning rules
   naming both versions — never a silent best-effort parse; ``save``
   refuses to write any version but the current one.  Version history:
   1 — initial layout; 2 — adds the optional ``tuning`` manifest section
-  (the autotuned kernel-schedule table, ``launch.autotune`` format).
-  Version-1 artifacts load with ``tuning = None`` (schedules rebuild
-  from the analytic defaults on first use) and are upgraded in memory,
-  so re-saving writes a current-version file.
+  (the autotuned kernel-schedule table, ``launch.autotune`` format);
+  3 — adds the optional ``ladder`` manifest section: a second, cheaper
+  quantization rung of the SAME weights (aggressive draft policy) for
+  self-speculative decode, encoded with the identical leaf schema into
+  the shared tensor pool.  Older artifacts load with the missing
+  sections as ``None`` (v1/v2: ``tuning``/``ladder``; no draft means
+  speculation is refused loudly, plain serving is unchanged) and are
+  upgraded in memory, so re-saving writes a current-version file.
 * Unknown ``cfg``/``policy``/report fields (written by a newer schema
   within the same format version) also raise, with the offending names.
 * The manifest is strict RFC-8259 JSON: non-finite floats (report taus,
@@ -93,8 +100,8 @@ from repro.core.policy import QuantPolicy
 from repro.models import registry as R
 
 MAGIC = "rwkvquant-artifact"
-FORMAT_VERSION = 2
-SUPPORTED_VERSIONS = (1, 2)      # readable; only FORMAT_VERSION is written
+FORMAT_VERSION = 3
+SUPPORTED_VERSIONS = (1, 2, 3)   # readable; only FORMAT_VERSION is written
 KINDS = ("tree", "blockwise_lm")
 
 
@@ -202,6 +209,12 @@ class QuantizedArtifact:
     kind: str = "tree"
     format_version: int = FORMAT_VERSION
     tuning: Optional[dict] = None             # launch.autotune table dict
+    # quantization-ladder draft rung (format_version >= 3): a second,
+    # aggressively quantized tree of the SAME weights for self-speculative
+    # decode; None on plain artifacts and on anything loaded from v1/v2
+    draft_params: Any = None
+    draft_policy: Optional[QuantPolicy] = None
+    draft_report: Optional[QuantReport] = None
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -225,7 +238,6 @@ class QuantizedArtifact:
             raise ArtifactFormatError(
                 f"cannot save format_version {self.format_version}: this "
                 f"build writes version {FORMAT_VERSION}")
-        leaves = []
         tensors: Dict[str, np.ndarray] = {}
 
         def add_array(arr) -> Dict[str, Any]:
@@ -234,19 +246,34 @@ class QuantizedArtifact:
             tensors[key] = buf
             return dict(meta, npz=key)
 
-        flat = jax.tree_util.tree_flatten_with_path(
-            self.params, is_leaf=qz.is_serializable_container)[0]
-        for tree_path, leaf in flat:
-            if qz.is_serializable_container(leaf):
-                spec, arrays = qz.container_to_spec(leaf)
-            elif isinstance(leaf, (jax.Array, np.ndarray)):
-                spec, arrays = {"type": "array"}, [leaf]
-            else:
-                raise TypeError(
-                    f"cannot serialize leaf of type {type(leaf)} at "
-                    f"{_encode_path(tree_path)}")
-            leaves.append({"path": _encode_path(tree_path), "spec": spec,
-                           "arrays": [add_array(a) for a in arrays]})
+        def encode_tree(tree) -> List[Dict[str, Any]]:
+            out = []
+            flat = jax.tree_util.tree_flatten_with_path(
+                tree, is_leaf=qz.is_serializable_container)[0]
+            for tree_path, leaf in flat:
+                if qz.is_serializable_container(leaf):
+                    spec, arrays = qz.container_to_spec(leaf)
+                elif isinstance(leaf, (jax.Array, np.ndarray)):
+                    spec, arrays = {"type": "array"}, [leaf]
+                else:
+                    raise TypeError(
+                        f"cannot serialize leaf of type {type(leaf)} at "
+                        f"{_encode_path(tree_path)}")
+                out.append({"path": _encode_path(tree_path), "spec": spec,
+                            "arrays": [add_array(a) for a in arrays]})
+            return out
+
+        leaves = encode_tree(self.params)
+        ladder = None
+        if self.draft_params is not None:
+            # the draft rung shares the tensor pool: one npz, one manifest
+            ladder = {
+                "policy": self.draft_policy.to_dict()
+                if self.draft_policy else None,
+                "report": self.draft_report.to_dict()
+                if self.draft_report else None,
+                "leaves": encode_tree(self.draft_params),
+            }
 
         manifest = {
             "magic": MAGIC,
@@ -257,6 +284,7 @@ class QuantizedArtifact:
             "policy": self.policy.to_dict() if self.policy else None,
             "report": self.report.to_dict() if self.report else None,
             "tuning": self.tuning,
+            "ladder": ladder,
             "leaves": leaves,
         }
         mbuf = np.frombuffer(
@@ -305,26 +333,41 @@ class QuantizedArtifact:
                 raise ArtifactFormatError(
                     f"{path}: unknown artifact kind "
                     f"{manifest.get('kind')!r}; this build knows {KINDS}")
-            entries = []
-            for ent in manifest["leaves"]:
-                arrays = [_decode_array(m, zf[m["npz"]])
-                          for m in ent["arrays"]]
-                spec = ent["spec"]
-                if spec["type"] == "array":
-                    (leaf,) = arrays
-                else:
-                    leaf = qz.container_from_spec(spec, arrays)
-                entries.append((ent["path"], leaf))
+            def decode_tree(leaf_entries):
+                entries = []
+                for ent in leaf_entries:
+                    arrays = [_decode_array(m, zf[m["npz"]])
+                              for m in ent["arrays"]]
+                    spec = ent["spec"]
+                    if spec["type"] == "array":
+                        (leaf,) = arrays
+                    else:
+                        leaf = qz.container_from_spec(spec, arrays)
+                    entries.append((ent["path"], leaf))
+                return _build_tree(entries)
+
+            params = decode_tree(manifest["leaves"])
+            ladder = manifest.get("ladder")
+            draft_params = draft_policy = draft_report = None
+            if ladder is not None:
+                draft_params = decode_tree(ladder["leaves"])
+                if ladder.get("policy"):
+                    draft_policy = QuantPolicy.from_dict(ladder["policy"])
+                if ladder.get("report"):
+                    draft_report = QuantReport.from_dict(ladder["report"])
         # older versions upgrade in memory: re-saving writes the current
         # layout (missing sections default to None)
         return cls(cfg=R.cfg_from_dict(manifest["cfg"]),
-                   params=_build_tree(entries),
+                   params=params,
                    policy=QuantPolicy.from_dict(manifest["policy"])
                    if manifest["policy"] else None,
                    report=QuantReport.from_dict(manifest["report"])
                    if manifest["report"] else None,
                    kind=manifest["kind"],
-                   tuning=manifest.get("tuning"))
+                   tuning=manifest.get("tuning"),
+                   draft_params=draft_params,
+                   draft_policy=draft_policy,
+                   draft_report=draft_report)
 
 
 def save(artifact: QuantizedArtifact, path: str) -> str:

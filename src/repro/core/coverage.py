@@ -52,6 +52,11 @@ METRIC_DEFINITIONS = {
              "(the latter three only on fallback leaves)",
     "bf16_bytes": "2 * numel: the unquantized bf16 baseline read",
     "ratio": "total / bf16_bytes over all quantized leaves",
+    "speculative_effective_bytes": "weight bytes read per *emitted* "
+        "token under self-speculative decode: one launch reads the "
+        "draft tree (k+1) times plus the target tree once (the batched "
+        "verify streams target weights once for all k+1 positions), "
+        "amortized over tokens_per_launch emitted tokens",
 }
 
 
@@ -202,6 +207,37 @@ def coverage_report(obj, impl: str = "pallas",
         "ratio": totals["total"] / max(bf16, 1),
         "metric": METRIC_DEFINITIONS,
         "leaves": leaves,
+    }
+
+
+def speculative_effective_bytes(target_report: Dict[str, Any],
+                                draft_report: Dict[str, Any],
+                                k: int,
+                                tokens_per_launch: float) -> Dict[str, Any]:
+    """Per-emitted-token weight traffic of a draft-verify launch.
+
+    One speculative launch runs k+1 sequential draft decode steps (each
+    streams the full draft tree) and ONE batched target verify pass over
+    all k+1 positions (the target tree is streamed once per launch —
+    that is the whole point), then emits ``tokens_per_launch`` tokens on
+    average.  Inputs are two :func:`coverage_report` results over the
+    decode-prepared target and draft trees and the measured
+    ``tokens_per_launch`` from ``ServeEngine.speculative_stats``.
+    """
+    tgt = target_report["bytes"]["total"]
+    drf = draft_report["bytes"]["total"]
+    tpl = max(tokens_per_launch, 1e-9)
+    per_launch = (k + 1) * drf + tgt
+    return {
+        "k": k,
+        "target_bytes_per_token": int(tgt),
+        "draft_bytes_per_token": int(drf),
+        "launch_bytes": int(per_launch),
+        "tokens_per_launch": float(tokens_per_launch),
+        "effective_bytes_per_token": per_launch / tpl,
+        # < 1.0 means speculation reads fewer weight bytes per emitted
+        # token than the plain target-only tick
+        "vs_plain_ratio": (per_launch / tpl) / max(tgt, 1),
     }
 
 

@@ -266,6 +266,28 @@ def blockwise_quantize(cfg, params, batches: List[Dict], policy: QuantPolicy,
                        tail=tail, report=report)
 
 
+def quantize_ladder(params, policy: QuantPolicy, draft_policy: QuantPolicy,
+                    key) -> Tuple[Any, QuantReport, Any, QuantReport]:
+    """Quantize the SAME float tree at two fidelities (data-free).
+
+    The target rung runs the proxy-guided hybrid under ``policy``; the
+    draft rung re-quantizes the *original* float params under the
+    aggressive ``draft_policy`` (self-speculative decode: the draft
+    proposes, the target verifies — see ``serve/speculate.py``).  Both
+    rungs see the float weights, so draft error never compounds into the
+    target.  Returns ``(qparams, report, draft_params, draft_report)``.
+
+    The target rung consumes ``key`` itself (NOT a split of it): adding
+    a ladder to an existing quantize call must keep the target tree —
+    and therefore every greedy decode — bit-identical to the
+    ladder-free run.  The draft rung gets a folded-in derivation.
+    """
+    qparams, report = quantize_tree(params, policy, key)
+    draft_params, draft_report = quantize_tree(
+        params, draft_policy, jax.random.fold_in(key, 0x5bec))
+    return qparams, report, draft_params, draft_report
+
+
 def float_lm(cfg, params) -> QuantizedLM:
     """Wrap unquantized params in the same eval interface."""
     ad = adapter_for(cfg, params)

@@ -71,6 +71,11 @@ VQ_ONLY_3_5 = replace(PAPER_3_275, force_method="vq")
 RTN_3_5 = replace(SQ_ONLY_3_5, sq_method="rtn")
 KMEANS_3_5 = replace(VQ_ONLY_3_5, vq_method="kmeans")
 DATAFREE_3_275 = replace(PAPER_3_275, sq_method="rtn", vq_method="kmeans")
+# aggressive all-VQ draft rung for the self-speculative ladder: d=2/k=4
+# gives a nominal 2.0 bpw, data-free (kmeans) so `api.quantize(...,
+# ladder=True)` never needs calibration batches for the draft tree
+DRAFT_VQ_2 = replace(PAPER_3_275, force_method="vq", vq_d=2, vq_k=4,
+                     sq_method="rtn", vq_method="kmeans")
 
 
 # --------------------------------------------------------------------------- #

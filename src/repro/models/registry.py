@@ -55,6 +55,28 @@ def decode_step(cfg, params, cache, tokens):
     return module_for(cfg).decode_step(cfg, params, cache, tokens)
 
 
+def supports_speculative(cfg) -> bool:
+    """True when the family defines ``verify_chunk`` — the batched
+    target-verify pass of self-speculative decode (RWKV families: the
+    O(1) recurrent state makes per-position snapshots cheap)."""
+    return hasattr(module_for(cfg), "verify_chunk")
+
+
+def verify_chunk(cfg, params, cache, tokens):
+    """Score all positions of ``tokens`` (B, T) in one batched pass and
+    return ``(logits (B,T,V), snaps)`` — per-position cache snapshots
+    for rollback (time axis right after each leaf's batch axis).  With
+    greedy sampling the per-position logits are bitwise-identical to T
+    isolated ``decode_step`` calls; families without the hook raise."""
+    fn = getattr(module_for(cfg), "verify_chunk", None)
+    if fn is None:
+        raise NotImplementedError(
+            f"model family {module_for(cfg).__name__!r} does not implement "
+            "verify_chunk; speculative decode is only available for "
+            "families with supports_speculative(cfg) == True")
+    return fn(cfg, params, cache, tokens)
+
+
 def supports_ragged_prefill(cfg) -> bool:
     """True when the family's ``prefill`` accepts ``batch['lengths']``
     (right-padded mixed-length prompts with exact state/cache masking).

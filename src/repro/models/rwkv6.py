@@ -108,12 +108,15 @@ def init(cfg, key) -> Dict[str, Any]:
 # --------------------------------------------------------------------------- #
 #  WKV recurrence
 # --------------------------------------------------------------------------- #
-def wkv6_scan(r, k, v, w, u, state):
+def wkv6_scan(r, k, v, w, u, state, collect: bool = False):
     """Sequential oracle / decode path.
 
     r,k,v: (B,T,H,hd); w: (B,T,H,hd) decay multiplier in (0,1);
     u: (H,hd) bonus; state: (B,H,hd,hd) f32 (k-dim rows, v-dim cols).
-    Returns (y (B,T,H,hd), final state).
+    Returns (y (B,T,H,hd), final state); with ``collect=True`` also the
+    per-step states (T,B,H,hd,hd) — the same arithmetic (scan outputs
+    don't feed back into the carry), just every intermediate S exposed
+    for speculative-decode rollback.
     """
     B, T, H, hd = r.shape
     rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
@@ -124,9 +127,12 @@ def wkv6_scan(r, k, v, w, u, state):
         kv = kt[..., :, None] * vt[..., None, :]       # (B,H,hd,hd)
         y = jnp.einsum("bhi,bhij->bhj", rt, S + uf[:, :, None] * kv)
         S = S * wt[..., :, None] + kv
-        return S, y
+        return S, ((y, S) if collect else y)
 
     xs = tuple(t.transpose(1, 0, 2, 3) for t in (rf, kf, vf, wf))
+    if collect:
+        state, (ys, Ss) = lax.scan(step, state, xs)
+        return ys.transpose(1, 0, 2, 3).astype(r.dtype), state, Ss
     state, ys = lax.scan(step, state, xs)
     return ys.transpose(1, 0, 2, 3).astype(r.dtype), state
 
@@ -225,7 +231,7 @@ def _ddlerp(tm, x, x_prev):
     return outs
 
 
-def time_mix(cfg, tm, x, x_prev, state, mask=None):
+def time_mix(cfg, tm, x, x_prev, state, mask=None, collect=False):
     """x: (B,S,d) post-ln; x_prev: shifted x; state: (B,H,hd,hd).
 
     ``mask`` (B,S) bool marks valid positions of a right-padded prefill
@@ -281,13 +287,21 @@ def time_mix(cfg, tm, x, x_prev, state, mask=None):
 
     u = q.dequant_vec(tm["bonus"]) if q.is_quantized(tm["bonus"]) \
         else tm["bonus"]
-    y, new_state = wkv6(r, k, v, w, u.reshape(H, hd), state)
+    if collect:
+        # speculative verify: pin the sequential scan (the T=1 decode
+        # path under BOTH impls) so every position's arithmetic matches
+        # an isolated decode_step bitwise, and keep per-step states
+        y, new_state, states = wkv6_scan(r, k, v, w, u.reshape(H, hd),
+                                         state, collect=True)
+    else:
+        y, new_state = wkv6(r, k, v, w, u.reshape(H, hd), state)
     y = y.reshape(B, S, d)
     y = L.group_norm(y, tm["ln_x"]["g"], tm["ln_x"]["b"], H, 64e-5)
     yg = y * g
     if TP_CONSTRAINTS:
         yg = constrain(yg, "dp", None, "tp")            # shard for row-par
-    return q.matmul(yg, tm["w_o"]), new_state
+    out = q.matmul(yg, tm["w_o"])
+    return (out, new_state, states) if collect else (out, new_state)
 
 
 def channel_mix(cfg, cm, x, x_prev):
@@ -323,12 +337,16 @@ def _last_real(xn, last_idx):
 
 
 def _block_apply(cfg, blk, x, state=None, shifts=None, mask=None,
-                 last_idx=None):
+                 last_idx=None, collect=False):
     """state: (B,H,hd,hd) or zeros; shifts: (tm_last, cm_last) (B,d) or None.
 
     ``mask``/``last_idx`` carry the right-padded mixed-length prefill:
     padded steps leave the WKV state untouched and the shift registers
     are read at each row's true last position.
+
+    ``collect=True`` (speculative verify) additionally returns the
+    per-position WKV states plus the post-ln streams xn/xn2 whose
+    position-t slices are the shift-register values after step t.
     """
     B, S, d = x.shape
     H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
@@ -340,7 +358,12 @@ def _block_apply(cfg, blk, x, state=None, shifts=None, mask=None,
     tm_last = _last_real(xn, last_idx)
     if state is None:
         state = jnp.zeros((B, H, hd, hd), jnp.float32)
-    h, new_state = time_mix(cfg, blk["tm"], xn, x_prev, state, mask=mask)
+    if collect:
+        h, new_state, states = time_mix(cfg, blk["tm"], xn, x_prev, state,
+                                        mask=mask, collect=True)
+    else:
+        h, new_state = time_mix(cfg, blk["tm"], xn, x_prev, state, mask=mask)
+        states = None
     x = x + h
 
     xn2 = L.layer_norm(x, blk["ln2"]["g"], blk["ln2"]["b"], cfg.norm_eps)
@@ -350,6 +373,8 @@ def _block_apply(cfg, blk, x, state=None, shifts=None, mask=None,
         x_prev2 = jnp.concatenate([shifts[1][:, None], xn2[:, :-1]], axis=1)
     cm_last = _last_real(xn2, last_idx)
     x = x + channel_mix(cfg, blk["cm"], xn2, x_prev2)
+    if collect:
+        return x, new_state, (tm_last, cm_last), (states, xn, xn2)
     return x, new_state, (tm_last, cm_last)
 
 
@@ -434,6 +459,43 @@ def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:
     h, new_cache = _cached_stack(cfg, params, cache, x)
     new_cache["index"] = cache["index"] + 1
     return logits(cfg, params, h[:, 0:1, :])[:, 0, :], new_cache
+
+
+def verify_chunk(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:
+    """Target-verify pass for self-speculative decode.
+
+    ``tokens`` (B, T): position 0 is the last emitted token, positions
+    1..T-1 the draft proposals.  The block stack runs in strict
+    sequential-scan mode (``wkv6_scan`` — never the chunked/kernel WKV
+    path), which is exactly the arithmetic T isolated ``decode_step``
+    calls from the same cache would perform, so verify logits are
+    bitwise-identical to plain decode at every position.
+
+    Returns ``(logits (B, T, V), snaps)`` where the snaps hold the full
+    per-position cache for rollback: ``snaps[leaf][:, :, t]`` is the
+    cache leaf after consuming ``tokens[:, :t+1]`` (the time axis sits
+    right after the batch axis of each cache leaf; ``index`` is omitted
+    — the engine tracks positions itself).
+    """
+    x = _embed(cfg, params, {"tokens": tokens})
+    x = constrain(x, "dp", None, None)
+
+    def body(x, scanned):
+        blk, st, s_tm, s_cm = scanned
+        y, _, _, (states, xn, xn2) = _block_apply(
+            cfg, blk, x, state=st, shifts=(s_tm, s_cm), collect=True)
+        return y, (states, xn.astype(s_tm.dtype), xn2.astype(s_cm.dtype))
+
+    h, (st, s_tm, s_cm) = lax.scan(
+        body, x, (params["blocks"], cache["state"],
+                  cache["shift_tm"], cache["shift_cm"]))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    snaps = {
+        "state": jnp.moveaxis(st, 1, 2),     # (L,T,B,...) -> (L,B,T,...)
+        "shift_tm": s_tm,                    # (L,B,T,d)
+        "shift_cm": s_cm,
+    }
+    return logits(cfg, params, h), snaps
 
 
 # --------------------------------------------------------------------------- #

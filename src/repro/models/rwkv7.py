@@ -98,8 +98,13 @@ def init(cfg, key) -> Dict[str, Any]:
 # --------------------------------------------------------------------------- #
 #  WKV7 recurrence
 # --------------------------------------------------------------------------- #
-def wkv7_scan(r, w, k, v, a, b, state):
-    """r,w,k,v,a,b: (B,T,H,hd); state: (B,H,hd_v,hd_k) f32."""
+def wkv7_scan(r, w, k, v, a, b, state, collect: bool = False):
+    """r,w,k,v,a,b: (B,T,H,hd); state: (B,H,hd_v,hd_k) f32.
+
+    ``collect=True`` additionally returns the per-step states
+    (T,B,H,hd,hd) for speculative-decode rollback — identical
+    arithmetic, every intermediate S exposed as a scan output.
+    """
     fs = tuple(t.astype(jnp.float32).transpose(1, 0, 2, 3)
                for t in (r, w, k, v, a, b))
 
@@ -109,8 +114,11 @@ def wkv7_scan(r, w, k, v, a, b, state):
         S = S * wt[..., None, :] + sa[..., :, None] * bt[..., None, :] \
             + vt[..., :, None] * kt[..., None, :]
         y = jnp.einsum("bhvk,bhk->bhv", S, rt)
-        return S, y
+        return S, ((y, S) if collect else y)
 
+    if collect:
+        state, (ys, Ss) = lax.scan(step, state, fs)
+        return ys.transpose(1, 0, 2, 3).astype(r.dtype), state, Ss
     state, ys = lax.scan(step, state, fs)
     return ys.transpose(1, 0, 2, 3).astype(r.dtype), state
 
@@ -132,7 +140,7 @@ def _l2norm_heads(x, H, hd):
 
 
 def time_mix(cfg, tm, x, x_prev, state, v_first, layer_is_first,
-             mask=None):
+             mask=None, collect=False):
     """``mask`` (B,S) marks real positions of a right-padded prefill:
     padded steps run with w = 1, k = 0 and kappa_hat = 0, so the
     delta-rule state update S*diag(w) + S a^T b + v^T k degenerates to
@@ -195,9 +203,13 @@ def time_mix(cfg, tm, x, x_prev, state, v_first, layer_is_first,
     shape4 = (B, S, H, hd)
     a4 = (-kappa_hat).reshape(shape4)
     b4 = (kappa_hat * iclr).reshape(shape4)
-    y, new_state = wkv7_scan(r.reshape(shape4), w.reshape(shape4),
-                             k.reshape(shape4), v.reshape(shape4),
-                             a4, b4, state)
+    out = wkv7_scan(r.reshape(shape4), w.reshape(shape4),
+                    k.reshape(shape4), v.reshape(shape4),
+                    a4, b4, state, collect=collect)
+    if collect:
+        y, new_state, states = out
+    else:
+        y, new_state = out
     y = y.reshape(B, S, d)
     y = L.group_norm(y, tm["ln_x"]["g"], tm["ln_x"]["b"], H, 64e-5)
     rk = q.dequant_vec(tm["bonus_rk"]) if q.is_quantized(tm["bonus_rk"]) \
@@ -205,7 +217,10 @@ def time_mix(cfg, tm, x, x_prev, state, v_first, layer_is_first,
     corr = jnp.sum(r.reshape(shape4) * k.reshape(shape4)
                    * rk.reshape(1, 1, H, hd), axis=-1, keepdims=True)
     y = y + (corr * v.reshape(shape4)).reshape(B, S, d)
-    return q.matmul(y * g, tm["w_o"]), new_state, v_first_new
+    out = q.matmul(y * g, tm["w_o"])
+    if collect:
+        return out, new_state, v_first_new, states
+    return out, new_state, v_first_new
 
 
 def channel_mix(cfg, cm, x, x_prev):
@@ -219,7 +234,7 @@ def _shift(x):
 
 
 def _block_apply(cfg, blk, x, v_first, layer_is_first, state=None,
-                 shifts=None, mask=None, last_idx=None):
+                 shifts=None, mask=None, last_idx=None, collect=False):
     B, S, d = x.shape
     H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
     xn = L.layer_norm(x, blk["ln1"]["g"], blk["ln1"]["b"], cfg.norm_eps)
@@ -228,14 +243,22 @@ def _block_apply(cfg, blk, x, v_first, layer_is_first, state=None,
     tm_last = L.last_real(xn, last_idx)[:, 0]
     if state is None:
         state = jnp.zeros((B, H, hd, hd), jnp.float32)
-    h, new_state, v_first = time_mix(cfg, blk["tm"], xn, x_prev, state,
-                                     v_first, layer_is_first, mask=mask)
+    if collect:
+        h, new_state, v_first, states = time_mix(
+            cfg, blk["tm"], xn, x_prev, state, v_first, layer_is_first,
+            mask=mask, collect=True)
+    else:
+        h, new_state, v_first = time_mix(cfg, blk["tm"], xn, x_prev, state,
+                                         v_first, layer_is_first, mask=mask)
+        states = None
     x = x + h
     xn2 = L.layer_norm(x, blk["ln2"]["g"], blk["ln2"]["b"], cfg.norm_eps)
     x_prev2 = _shift(xn2) if shifts is None else \
         jnp.concatenate([shifts[1][:, None], xn2[:, :-1]], axis=1)
     cm_last = L.last_real(xn2, last_idx)[:, 0]
     x = x + channel_mix(cfg, blk["cm"], xn2, x_prev2)
+    if collect:
+        return x, new_state, v_first, (tm_last, cm_last), (states, xn, xn2)
     return x, new_state, v_first, (tm_last, cm_last)
 
 
@@ -324,6 +347,41 @@ def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:
     h, new_cache = _cached_stack(cfg, params, cache, x)
     new_cache["index"] = cache["index"] + 1
     return logits(cfg, params, h[:, 0:1, :])[:, 0, :], new_cache
+
+
+def verify_chunk(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:
+    """Target-verify pass for self-speculative decode (see rwkv6 twin).
+
+    ``tokens`` (B, T): position 0 is the last emitted token, the rest
+    draft proposals.  RWKV-7 always evaluates via ``wkv7_scan``, so the
+    chunk pass is bitwise-identical to T isolated ``decode_step`` calls
+    (the v-residual stream ``v_first`` is positionwise across layers).
+    Returns ``(logits (B,T,V), snaps)`` with per-position cache leaves
+    (time axis after the batch axis; ``index`` omitted).
+    """
+    x = _embed(cfg, params, {"tokens": tokens})
+    B, S, d = x.shape
+    v0 = jnp.zeros((B, S, d), x.dtype)
+
+    def body(carry, scanned):
+        x, v_first = carry
+        blk, idx, st, s_tm, s_cm = scanned
+        y, _, v_first, _, (states, xn, xn2) = _block_apply(
+            cfg, blk, x, v_first, idx == 0, state=st, shifts=(s_tm, s_cm),
+            collect=True)
+        return (y, v_first), (states, xn.astype(s_tm.dtype),
+                              xn2.astype(s_cm.dtype))
+
+    (h, _), (st, s_tm, s_cm) = lax.scan(
+        body, (x, v0), (params["blocks"], jnp.arange(cfg.n_layers),
+                        cache["state"], cache["shift_tm"], cache["shift_cm"]))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    snaps = {
+        "state": jnp.moveaxis(st, 1, 2),     # (L,T,B,...) -> (L,B,T,...)
+        "shift_tm": s_tm,                    # (L,B,T,d)
+        "shift_cm": s_cm,
+    }
+    return logits(cfg, params, h), snaps
 
 
 # --------------------------------------------------------------------------- #

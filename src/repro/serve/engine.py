@@ -75,6 +75,25 @@ decodes them (interleaving fairly with other live requests) and supports
 cancellation: closing the generator — or ``cancel(uid)`` — frees the
 slot immediately.  ``ServeEngine.from_artifact`` boots an engine
 directly from a saved ``QuantizedArtifact`` (kind 'tree').
+
+Self-speculative decode
+-----------------------
+
+``speculate=k`` (with ``draft_params`` — or via
+``from_artifact(art, speculate=k)`` on a ladder artifact) swaps the
+decode tick for the draft-propose-k / target-verify-batched schedule in
+``serve.speculate``: an aggressive ~2-bit draft quantization of the
+same weights proposes k greedy tokens, the target scores all k+1
+positions in one batched GEMV pass, and both RWKV caches roll back to
+the longest accepted prefix.  Greedy outputs are bit-identical to the
+plain engine (the verify pass reuses the T=1 scan arithmetic and the
+slot pool is clamped so pool*(k+1) stays on the M-bucketed decode
+kernels); temperature>0 requests degrade to one sampled token per tick.
+The speculative tick closure gets its own shared-cache key
+(``("spec_tick", cfg_hash, impl, max_len, k)``), so plain engines see
+zero extra recompiles.  ``speculative_stats`` reports proposed /
+accepted / emitted totals and launches; per-request inter-token tick
+timestamps land on ``Request.token_ticks``.
 """
 from __future__ import annotations
 
@@ -150,6 +169,10 @@ class Request:
     cancelled: bool = False              # aborted via cancel()/generate close
     submit_tick: int = 0                 # engine tick at submit()
     admit_tick: int = -1                 # engine tick at admission
+    # tick number at which each output token was first observed on the
+    # host (admission for token 0, then one entry per harvested token):
+    # consecutive deltas are the inter-token latencies in engine ticks
+    token_ticks: List[int] = field(default_factory=list)
 
     @property
     def queue_wait(self) -> int:
@@ -230,14 +253,37 @@ class ServeEngine:
     def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 512,
                  seed: int = 0, fast_path: bool = True, impl: str = "auto",
                  ticks_per_sync: int = 1, elastic: bool = True,
-                 min_bucket: int = MIN_BUCKET):
+                 min_bucket: int = MIN_BUCKET, speculate: int = 0,
+                 draft_params=None):
         if impl == "auto":
             impl = "pallas" if any(d.platform == "tpu"
                                    for d in jax.devices()) else "xla"
         assert impl in ("xla", "pallas"), impl
+        speculate = int(speculate)
+        if speculate:
+            from repro.serve import speculate as spec_mod
+            if not fast_path:
+                raise ValueError(
+                    "speculate=k requires the fast path: the draft-verify "
+                    "tick is a device-resident jitted schedule")
+            if draft_params is None:
+                raise ValueError(
+                    "speculate=k needs draft_params — a cheaper "
+                    "quantization of the same weights.  Quantize with "
+                    "api.quantize(..., ladder=True) to get a ladder "
+                    "artifact carrying one")
+            if not R.supports_speculative(cfg):
+                raise NotImplementedError(
+                    f"model family of {cfg.name!r} has no verify_chunk; "
+                    "speculative decode supports the RWKV families")
+            # pool*(k+1) verify rows must stay on the M-bucketed decode
+            # GEMV kernels (see serve.speculate.SPEC_M_MAX)
+            cap = spec_mod.max_pool_for(speculate)
+            n_slots = min(n_slots, cap)
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_len = n_slots, max_len
         self.fast_path, self.impl = fast_path, impl
+        self.speculate = speculate
         self.ticks_per_sync = max(1, ticks_per_sync)
         self.min_bucket = min_bucket
         self.key = jax.random.PRNGKey(seed)
@@ -247,6 +293,8 @@ class ServeEngine:
         self.host_syncs = 0           # device->host pulls (perf counter)
         self.tick_no = 0              # step() calls (queue-wait clock)
         self.pool_resizes = 0
+        self.spec_launches = 0        # speculative ticks run (host count)
+        self._cancel_freed = False    # slots freed by cancel() since harvest
         self._axes = _batch_axes(cfg, max_len)
         self._ragged = R.supports_ragged_prefill(cfg)
         # shapes THIS engine traced that the shared cache had not seen
@@ -267,6 +315,10 @@ class ServeEngine:
         self._dparams = R.prepare_decode_params(cfg, params) \
             if fast_path else params
         self._params_digest = _tree_digest(self._dparams)
+        self._draft = None
+        if speculate:
+            self._draft = R.prepare_decode_params(cfg, draft_params)
+            self._draft_digest = _tree_digest(self._draft)
 
         def _with_impl(fn):
             def wrapped(*a):
@@ -291,6 +343,15 @@ class ServeEngine:
         self._decode = self._decode_ent["fn"]
         self._prefill = self._prefill_ent["fn"]
         self._tick = self._tick_ent["fn"]
+        if speculate:
+            # own cache key: plain engines never trace (or pay for) it
+            from repro.serve.speculate import spec_tick
+            self._spec_ent = _shared_closure(
+                ("spec_tick", chash, impl, max_len, speculate),
+                lambda: jax.jit(partial(spec_tick, cfg, impl, max_len,
+                                        speculate, self._axes)))
+            self._spec_tick = self._spec_ent["fn"]
+            self._new_shapes["spec_tick"] = 0
 
         if fast_path:
             self._init_buffers(self.pool, seed)
@@ -303,11 +364,24 @@ class ServeEngine:
         Accepts kind 'tree' (a servable stacked param pytree); blockwise
         LM artifacts evaluate through ``core.pipeline.lm_from_artifact``
         instead.  Keyword args are forwarded to the constructor.
+
+        ``speculate=k`` additionally requires a *ladder* artifact
+        (``api.quantize(..., ladder=True)``, format_version >= 3): the
+        draft rung rides in ``artifact.draft_params`` and is forwarded
+        as the engine's ``draft_params``.
         """
         if artifact.kind != "tree":
             raise ValueError(
                 f"artifact kind {artifact.kind!r} is not servable; "
                 "ServeEngine.from_artifact needs kind 'tree'")
+        if kw.get("speculate"):
+            if getattr(artifact, "draft_params", None) is None:
+                raise ValueError(
+                    "speculate=k needs a quantization-ladder artifact, "
+                    "but this one carries no draft rung (format_version "
+                    "< 3 or quantized without ladder=...).  Re-quantize "
+                    "with api.quantize(cfg, params, ladder=True)")
+            kw.setdefault("draft_params", artifact.draft_params)
         if getattr(artifact, "tuning", None):
             # persisted autotune table: serving does 0 re-tuning work
             from repro.launch import autotune
@@ -335,6 +409,12 @@ class ServeEngine:
         self._host_tcount = None        # host copy, refreshed by _harvest
         if seed is not None:
             self._dkey = jax.random.PRNGKey(seed + 1)
+        if self.speculate:
+            # draft cache mirrors the target cache slot-for-slot; stats
+            # accumulate [proposed, accepted_drafts, emitted] on device
+            self._dcache = dict(R.init_cache(self.cfg, pool, self.max_len),
+                                index=jnp.zeros((pool,), jnp.int32))
+            self._spec_stats = jnp.zeros((4,), jnp.int32)
 
     # ------------------------------------------------------------------ #
     def submit(self, prompt, max_new_tokens: int = 32,
@@ -369,6 +449,10 @@ class ServeEngine:
                 self.slot_req[s] = None
                 if self.fast_path:
                     self._live = self._live.at[s].set(False)
+                    # the freed slot produces no completion, so the next
+                    # _harvest may see nothing "finished" — flag it so
+                    # the elastic shrink check still runs
+                    self._cancel_freed = True
                 self.completed.append(r)
                 return True
         return False
@@ -423,6 +507,28 @@ class ServeEngine:
         finally:
             if not req.done:
                 self.cancel(uid)
+
+    @property
+    def speculative_stats(self) -> Dict[str, float]:
+        """Cumulative draft-verify counters (speculative engines only).
+
+        ``acceptance_rate`` = accepted draft proposals / proposed;
+        ``tokens_per_launch`` = emitted tokens / per-stream launches
+        (a slot live in a tick counts one launch — 1.0 matches the plain
+        one-token tick regardless of batch width; the speedup story is
+        this number against the draft:target weight-byte ratio — see
+        ``core.coverage.speculative_effective_bytes``).
+        """
+        if not self.speculate:
+            raise ValueError("engine was built without speculate=k")
+        proposed, accepted, emitted, slot_launches = (
+            int(x) for x in jax.device_get(self._spec_stats))
+        return {"proposed": proposed, "accepted_drafts": accepted,
+                "emitted": emitted, "launches": self.spec_launches,
+                "slot_launches": slot_launches,
+                "acceptance_rate": accepted / proposed if proposed else 0.0,
+                "tokens_per_launch": emitted / slot_launches
+                if slot_launches else 0.0}
 
     @property
     def jit_recompiles(self) -> Dict[str, int]:
@@ -484,6 +590,10 @@ class ServeEngine:
         self.cache = dict(
             jax.tree.map(remap, self.cache, self._axes),
             index=jnp.zeros((new_pool,), jnp.int32))
+        if self.speculate:
+            self._dcache = dict(
+                jax.tree.map(remap, self._dcache, self._axes),
+                index=jnp.zeros((new_pool,), jnp.int32))
         (self._tok, self._pos, self._tcount, self._live, self._temps,
          self._maxnew, self._out) = (
             remap_buf(b) for b in
@@ -570,6 +680,16 @@ class ServeEngine:
                          (self._params_digest, rows, bucket, self.max_len))
         scratch = R.init_cache(self.cfg, rows, self.max_len)
         logits, scratch = self._prefill(self._dparams, batch, scratch)
+        dscratch = None
+        if self.speculate:
+            # the draft rung prefills the same prompt so its state agrees
+            # with the tokens the target has committed (draft logits are
+            # only proposals — the prefill token still comes from target)
+            self._note_shape("prefill", self._prefill_ent,
+                             (self._draft_digest, rows, bucket,
+                              self.max_len))
+            dscratch = R.init_cache(self.cfg, rows, self.max_len)
+            _, dscratch = self._prefill(self._draft, batch, dscratch)
         temps = jnp.asarray([r.temperature for r in reqs]
                             + [0.0] * (rows - nb), jnp.float32)
         self.key, sub = jax.random.split(self.key)
@@ -578,6 +698,7 @@ class ServeEngine:
         for b, req in enumerate(reqs):
             s = free[b]
             req.admit_tick = self.tick_no
+            req.token_ticks = [self.tick_no]      # prefill token
             # the prefill token may already complete the request (same
             # liveness rule as the decode tick: tcount < maxnew, room
             # in the cache)
@@ -593,6 +714,9 @@ class ServeEngine:
                 continue
             self.cache = _slot_write(self.cache, scratch, self._axes,
                                      s, b)
+            if dscratch is not None:
+                self._dcache = _slot_write(self._dcache, dscratch,
+                                           self._axes, s, b)
             self.slot_req[s] = req
             self.slot_pos[s] = len(req.prompt)
             self._tok = self._tok.at[s, 0].set(first[b])
@@ -615,6 +739,7 @@ class ServeEngine:
             self.host_syncs += 1
             req.out_tokens.append(int(tok))
             req.admit_tick = self.tick_no
+            req.token_ticks.append(self.tick_no)
             if req.max_new_tokens <= 1 \
                     or len(req.prompt) >= self.max_len - 1:
                 req.done = True              # prefill token completed it
@@ -666,7 +791,11 @@ class ServeEngine:
     def _step_device(self) -> int:
         live_before = sum(r is not None for r in self.slot_req)
         if live_before == 0:
+            if self._cancel_freed:
+                self._harvest()          # run the elastic shrink check
             return 0
+        if self.speculate:
+            return self._step_speculative(live_before)
         self._note_shape("decode_tick", self._tick_ent,
                          (self._params_digest, self.pool))
         ticks = 0
@@ -680,6 +809,26 @@ class ServeEngine:
         self._harvest()
         return live_before * ticks
 
+    def _step_speculative(self, live_before: int) -> int:
+        """``ticks_per_sync`` draft-propose / target-verify launches."""
+        self._note_shape("spec_tick", self._spec_ent,
+                         (self._params_digest, self._draft_digest,
+                          self.pool))
+        ticks = 0
+        for _ in range(self.ticks_per_sync):
+            (self.cache, self._dcache, self._tok, self._pos, self._tcount,
+             self._live, self._out, self._dkey, self._spec_stats) = \
+                self._spec_tick(
+                    self._dparams, self._draft, self.cache, self._dcache,
+                    self._tok, self._pos, self._tcount, self._live,
+                    self._temps, self._maxnew, self._out, self._dkey,
+                    self._spec_stats)
+            self.spec_launches += 1
+            ticks += 1
+        self._harvest()
+        # upper bound: each launch emits 1..k+1 tokens per live slot
+        return live_before * ticks * (self.speculate + 1)
+
     def _harvest(self) -> None:
         """Completion check: one pull of the live mask + counters."""
         live, tcount, pos = jax.device_get(
@@ -689,16 +838,26 @@ class ServeEngine:
         finished = [s for s in range(self.pool)
                     if self.slot_req[s] is not None and not live[s]]
         self.slot_pos[:] = pos
-        if not finished:
-            return
-        out = np.asarray(self._out)          # one pull for all completions
-        self.host_syncs += 1
-        for s in finished:
+        for s in range(self.pool):      # inter-token tick timestamps
             req = self.slot_req[s]
-            req.out_tokens = [int(t) for t in out[s, :tcount[s]]]
-            req.done = True
-            self.completed.append(req)
-            self.slot_req[s] = None
+            if req is not None:
+                n_new = int(tcount[s]) - len(req.token_ticks)
+                req.token_ticks.extend([self.tick_no] * max(0, n_new))
+        if not finished and not self._cancel_freed:
+            return
+        if finished:
+            out = np.asarray(self._out)      # one pull for all completions
+            self.host_syncs += 1
+            for s in finished:
+                req = self.slot_req[s]
+                req.out_tokens = [int(t) for t in out[s, :tcount[s]]]
+                req.done = True
+                self.completed.append(req)
+                self.slot_req[s] = None
+        # cancel() frees slots without producing a completion, so the
+        # shrink check must also run on its flag — otherwise an elastic
+        # pool drained by cancellations stays wide until the next finish
+        self._cancel_freed = False
         if self.elastic and not self.queue:
             n_live = sum(r is not None for r in self.slot_req)
             self._resize(self._pool_for(n_live))
@@ -724,6 +883,7 @@ class ServeEngine:
         for s in live:
             req = self.slot_req[s]
             req.out_tokens.append(int(nxt[s]))
+            req.token_ticks.append(self.tick_no)
             self.slot_pos[s] += 1
             emitted += 1
             if len(req.out_tokens) >= req.max_new_tokens \

@@ -1,0 +1,188 @@
+"""Self-speculative decode: draft-propose-k / target-verify-batched tick.
+
+The quantization ladder (``api.quantize(..., ladder=...)``) carries TWO
+quantizations of the SAME weights in one artifact: the serving target
+(~3.275 bpw hybrid) and an aggressive ~2-bit all-VQ draft.  Decode is
+weight-bandwidth-bound, so the draft proposes ``k`` greedy tokens with k
+cheap sequential steps, and the target then scores all ``k+1`` positions
+in ONE batched pass — target weight bytes are read once per launch
+instead of once per token.  RWKV makes the bookkeeping cheap: state is
+O(1) per layer, so snapshotting every per-position state for rollback
+costs (k+1) small tensors, not a KV cache.
+
+The tick (``spec_tick``, jitted per (cfg, impl, max_len, k)):
+
+1. **Draft propose** — k+1 draft ``decode_step`` calls from the draft
+   cache: greedy proposals d_1..d_k plus the per-step draft cache
+   snapshots D_1..D_{k+1} (D_i = draft state after consuming i chunk
+   positions).
+2. **Target verify** — ``registry.verify_chunk`` scores the chunk
+   ``[tok, d_1..d_k]`` (B, k+1) in one batched pass and returns target
+   snapshots T_1..T_{k+1}.  The verify pass pins the sequential-scan WKV
+   path (identical to the T=1 decode arithmetic under both impls), and
+   at pool*(k+1) <= ``SPEC_M_MAX`` rows every quantized matmul stays on
+   the same M-bucketed GEMV kernels the plain tick uses — so position-j
+   verify logits are bitwise-identical to a plain decode tick at that
+   position.
+3. **Accept + rollback** — longest matching prefix m of proposals vs
+   target argmaxes; a = min(m+1, remaining budget) tokens are emitted
+   (the +1 is the "bonus" target token at the first mismatch — always
+   target-distributed).  Both caches roll back to snapshot index a-1 by
+   a per-slot gather over the snapshot time axis.
+
+Greedy invariant: every emitted token equals the target argmax
+conditioned on a prefix of previously emitted tokens, and the caps on
+``a`` replicate the plain tick's liveness rules exactly — so a greedy
+request's output stream is **bit-identical** to the target-only engine,
+whatever the draft proposes (acceptance rate only changes how many
+launches that stream takes).  Temperature rows fall back to one
+sampled token per tick from the position-0 verify logits (structurally
+identical slot accounting; sampling parity is not a contract, matching
+the fast/slow path behavior).
+
+Snapshot layout: for a cache leaf with batch axis ``ax``, its snapshot
+carries an extra time axis at ``ax+1`` (length k+1); leaves without a
+batch axis (e.g. ``index``) are not snapshotted — the engine owns
+positions.  ``SPEC_M_MAX`` mirrors the decode GEMV kernels' M ceiling:
+the engine clamps its slot pool so pool*(k+1) never leaves them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantized as qz
+from repro.models import registry as R
+
+# the M-bucketed skinny-GEMV schedules (kernels/qmv, kernels/vqmv) serve
+# at most this many rows; beyond it quantized.matmul would dispatch to
+# the tiled qmm/vqmm kernels whose row-parity with the GEMV path is not
+# an established invariant, so speculative engines stay under it
+from repro.kernels.qmv.ops import DECODE_M_MAX as SPEC_M_MAX
+
+_NO_BATCH_AX = -1      # mirrors serve.engine's sentinel
+
+
+def max_pool_for(k: int) -> int:
+    """Largest decode pool a k-speculative engine may run."""
+    return max(1, SPEC_M_MAX // (k + 1))
+
+
+def _stack_snaps(snaps, axes):
+    """Stack a list of per-step cache trees into snapshot layout.
+
+    Each leaf with batch axis ``ax`` gains a time axis at ``ax+1``;
+    no-batch leaves keep the final step's value (positions are engine
+    state, not snapshot state)."""
+    def stk(ax, *leaves):
+        if ax == _NO_BATCH_AX:
+            return leaves[-1]
+        return jnp.stack(leaves, axis=ax + 1)
+    return jax.tree.map(stk, axes, *snaps)
+
+
+def _gather_time(leaf, ax, idx):
+    """Per-slot pick along the snapshot time axis: leaf has batch at
+    ``ax`` and time at ``ax+1``; idx (B,) selects one step per slot."""
+    x2 = jnp.moveaxis(leaf, ax, 0)             # batch to front; time at ax
+    g = jax.vmap(lambda row, i: jnp.take(row, i, axis=ax))(x2, idx)
+    return jnp.moveaxis(g, 0, ax)
+
+
+def rollback(snaps, axes, idx, fallback):
+    """Per-slot cache rollback to snapshot index ``idx`` (B,).
+
+    Leaves present in ``snaps`` gather their per-slot step; leaves of
+    the engine cache without a snapshot (no batch axis — ``index``)
+    pass through from ``fallback``."""
+    out = dict(fallback)
+    for name, leaf in snaps.items():
+        ax = axes[name]
+        if ax == _NO_BATCH_AX:
+            out[name] = leaf
+        else:
+            out[name] = _gather_time(leaf, ax, idx).astype(
+                fallback[name].dtype)
+    return out
+
+
+def spec_tick(cfg, impl, max_len, k, axes, params, draft_params,
+              cache, dcache, tok, pos, tcount, live, temps, maxnew, out,
+              key, stats):
+    """One speculative decode tick; everything stays on device.
+
+    Buffer contract matches ``serve.engine._tick`` (tok/pos/tcount/live/
+    temps/maxnew/out), plus the draft cache ``dcache`` and a (4,) int32
+    ``stats`` accumulator [proposed, accepted_drafts, emitted,
+    slot_launches] counted over live slots (slot_launches counts one per
+    live slot per tick, so emitted/slot_launches is the *per-stream*
+    tokens-per-launch — 1.0 matches the plain tick).  Emits between 1
+    and k+1 tokens per live slot.
+    """
+    from repro.serve.engine import _choose_tokens
+
+    B = tok.shape[0]
+
+    # -- 1) draft proposes k greedy tokens (k+1 steps: the last one only
+    #       advances the draft state to cover the all-accepted case)
+    props = []
+    dsteps = []
+    t, dc = tok, dcache
+    for j in range(k + 1):
+        with qz.use_impl(impl):
+            dlogits, dc = R.decode_step(cfg, draft_params,
+                                        dict(dc, index=pos + j), t)
+        dsteps.append(dc)
+        if j < k:
+            nxt = jnp.argmax(dlogits, axis=-1).astype(jnp.int32)
+            props.append(nxt)
+            t = nxt[:, None]
+    dsnaps = _stack_snaps(dsteps, axes)
+
+    # -- 2) target verifies the whole chunk in one batched pass
+    chunk = jnp.concatenate([tok] + [p[:, None] for p in props], axis=1)
+    with qz.use_impl(impl):
+        vlogits, tsnaps = R.verify_chunk(cfg, params,
+                                         dict(cache, index=pos), chunk)
+
+    # -- 3) longest accepted prefix + emission
+    tgt = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)      # (B, k+1)
+    key, sub = jax.random.split(key)
+    emit0 = _choose_tokens(vlogits[:, 0], temps, sub)
+    emit = jnp.concatenate([emit0[:, None], tgt[:, 1:]], axis=1)
+    if k > 0:
+        eq = (jnp.stack(props, axis=1) == tgt[:, :k]).astype(jnp.int32)
+        m = jnp.sum(jnp.cumprod(eq, axis=1), axis=1)          # (B,)
+    else:
+        m = jnp.zeros((B,), jnp.int32)
+    # remaining per-slot budget replicates the plain tick's liveness
+    # rules (tcount < maxnew, pos < max_len-1 checked after each token)
+    budget = jnp.minimum(maxnew - tcount, (max_len - 1) - pos)
+    a = jnp.minimum(m + 1, budget)
+    a = jnp.where(temps > 0, 1, a)     # sampled rows: one token per tick
+    a = jnp.maximum(a, 1)              # dead rows: keep indexing in range
+
+    rows = jnp.arange(B)
+    for j in range(k + 1):
+        valid = live & (j < a)
+        col = jnp.clip(tcount + j, 0, out.shape[1] - 1)
+        out = out.at[rows, col].set(
+            jnp.where(valid, emit[:, j], out[rows, col]))
+    last = jnp.take_along_axis(emit, (a - 1)[:, None], axis=1)
+    tok = jnp.where(live[:, None], last, tok)
+
+    # -- 4) per-slot rollback of both caches to the last accepted step
+    idx = a - 1
+    cache = rollback(tsnaps, axes, idx, cache)
+    # draft snapshots D_1..D_{k+1} line up with accepted counts 1..k+1
+    dcache = rollback(dsnaps, axes, idx, dcache)
+
+    n_live = live.astype(jnp.int32)
+    stats = stats + jnp.stack([jnp.sum(n_live * k),
+                               jnp.sum(n_live * (a - 1)),
+                               jnp.sum(n_live * a),
+                               jnp.sum(n_live)])
+    pos = jnp.where(live, pos + a, pos)
+    tcount = jnp.where(live, tcount + a, tcount)
+    live = live & (tcount < maxnew) & (pos < max_len - 1)
+    return cache, dcache, tok, pos, tcount, live, out, key, stats

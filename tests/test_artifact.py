@@ -171,6 +171,45 @@ def test_blockwise_lm_artifact_roundtrip(tmp_path):
         api.Engine.from_artifact(api.load(path))
 
 
+def test_ladder_roundtrip_and_v2_compat(tmp_path):
+    """The draft rung round-trips bit-exactly, and a v2 manifest (no
+    ``ladder`` section) still loads — with no draft, so speculation is
+    refused loudly while plain serving is unchanged."""
+    from repro.core.policy import DRAFT_VQ_2
+    cfg = _cfg("rwkv6-3b")
+    params = R.init_params(cfg, KEY)
+    art = api.quantize(cfg, params, DATAFREE_3_275, ladder=True)
+    assert art.draft_params is not None
+    assert art.draft_policy == DRAFT_VQ_2
+    path = str(tmp_path / "l.rqa")
+    api.save(art, path)
+    art2 = api.load(path)
+    _assert_trees_equal(art.params, art2.params)
+    _assert_trees_equal(art.draft_params, art2.draft_params)
+    assert art2.draft_policy == DRAFT_VQ_2
+    assert len(art2.draft_report.records) == len(art.draft_report.records)
+
+    # ladder=True must not perturb the target rung: same key -> the
+    # target tree is bit-identical to a ladder-free quantize
+    plain = api.quantize(cfg, params, DATAFREE_3_275)
+    _assert_trees_equal(plain.params, art.params)
+
+    # simulate a pre-ladder (v2) artifact: strip the section + downversion
+    def _downgrade(m):
+        m.pop("ladder")
+        m["format_version"] = 2
+    _rewrite_manifest(path, _downgrade)
+    old = api.load(path)
+    assert old.draft_params is None and old.draft_policy is None
+    _assert_trees_equal(plain.params, old.params)
+    with pytest.raises(ValueError, match="ladder"):
+        api.Engine.from_artifact(old, n_slots=2, max_len=48, speculate=2)
+    # re-saving the in-memory upgrade writes a current-version file
+    path2 = str(tmp_path / "l2.rqa")
+    api.save(old, path2)
+    assert api.load(path2).format_version == FORMAT_VERSION
+
+
 def _rewrite_manifest(path, mutate):
     with np.load(path, allow_pickle=False) as zf:
         data = {k: zf[k] for k in zf.files}

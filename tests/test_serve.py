@@ -327,3 +327,264 @@ def test_engine_elastic_pool_grows_and_shrinks():
     eng.run_until_drained()
     assert len(eng.completed) == 10
     assert eng.pool == 1                 # drained engine shrank back
+
+
+# --------------------------------------------------------------------------- #
+#  Queued-request cancellation (regression: cancel must be inert for
+#  survivors and must still drive the elastic shrink)
+# --------------------------------------------------------------------------- #
+def test_cancel_queued_never_admitted_is_inert():
+    """cancel() on a never-admitted request removes it from the queue,
+    frees no slot, and harvest never touches the dead uid; the
+    survivors' greedy outputs are bit-identical to a run that never saw
+    the doomed request."""
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=1, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    rng = np.random.default_rng(9)
+    survivors = [rng.integers(0, 64, size=n).astype(np.int32)
+                 for n in (4, 7, 5, 6, 3)]
+    doomed_prompt = rng.integers(0, 64, size=6).astype(np.int32)
+
+    def drive(with_doomed):
+        eng = ServeEngine(cfg, params, n_slots=2, max_len=48)
+        uids = [eng.submit(p, max_new_tokens=4) for p in survivors[:2]]
+        doomed = eng.submit(doomed_prompt, max_new_tokens=4) \
+            if with_doomed else None
+        uids += [eng.submit(p, max_new_tokens=4) for p in survivors[2:]]
+        eng.step()                       # admits the first two only
+        if with_doomed:
+            assert any(r.uid == doomed for r in eng.queue)  # still queued
+            assert eng.cancel(doomed) is True
+            assert all(r.uid != doomed for r in eng.queue)
+            assert all(r is None or r.uid != doomed for r in eng.slot_req)
+        eng.run_until_drained()
+        by_uid = {r.uid: r for r in eng.completed}
+        if with_doomed:
+            d = by_uid.pop(doomed)
+            assert d.cancelled and d.out_tokens == []
+            assert d.admit_tick == -1 and d.queue_wait == -1
+            assert d.token_ticks == []
+            # harvested exactly once, by cancel() itself
+            assert sum(r.uid == doomed for r in eng.completed) == 1
+        assert len(by_uid) == len(survivors)
+        return {tuple(r.prompt.tolist()): r.out_tokens
+                for r in by_uid.values()}
+
+    assert drive(True) == drive(False)
+
+
+def test_cancel_freed_slots_trigger_elastic_shrink():
+    """Slots freed only by cancel() (no completion in the same harvest)
+    must still shrink the elastic pool once the queue is empty."""
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=1, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, n_slots=8, max_len=64)
+    uids = [eng.submit(np.arange(4 + i % 3, dtype=np.int32),
+                       max_new_tokens=40) for i in range(8)]
+    eng.step()
+    assert eng.pool == 8                 # burst grew the pool
+    for u in uids[1:]:
+        assert eng.cancel(u) is True
+    resizes = eng.pool_resizes
+    eng.step()                           # no completion, only freed slots
+    assert eng.pool == 1 and eng.pool_resizes > resizes
+    done = eng.run_until_drained()
+    assert sum(not r.cancelled for r in done) == 1
+
+
+def test_cancel_all_live_then_step_shrinks_idle_pool():
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=1, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, n_slots=8, max_len=64)
+    uids = [eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=40)
+            for _ in range(8)]
+    eng.step()
+    assert eng.pool == 8
+    for u in uids:
+        assert eng.cancel(u) is True
+    eng.step()                           # nothing live: still shrinks
+    assert eng.pool == 1
+    assert all(r is None for r in eng.slot_req)
+
+
+def test_cancel_twice_and_after_completion_returns_false():
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=1, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=64)
+    u1 = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=20)
+    u2 = eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=3)
+    eng.step()
+    assert eng.cancel(u1) is True        # running
+    assert eng.cancel(u1) is False       # already cancelled
+    eng.run_until_drained()
+    assert eng.cancel(u2) is False       # already finished
+
+
+# --------------------------------------------------------------------------- #
+#  Self-speculative decode (serve.speculate): draft-propose-k /
+#  target-verify-batched, greedy outputs bit-identical to the plain tick
+# --------------------------------------------------------------------------- #
+def _spec_setup(n_layers=2, vocab=64, seed=3, scale=0.05):
+    """Float target + perturbed-copy draft (partial acceptance without
+    paying for a quantization run in every test)."""
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=n_layers, vocab_size=vocab)
+    params = R.init_params(cfg, KEY)
+    rng = np.random.default_rng(seed)
+    draft = jax.tree.map(
+        lambda x: x + scale * jnp.asarray(rng.standard_normal(x.shape),
+                                          x.dtype), params)
+    return cfg, params, draft
+
+
+@pytest.mark.parametrize("k", [1, 3])
+def test_speculative_greedy_bit_identical(k):
+    cfg, params, draft = _spec_setup()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 64, size=n).astype(np.int32)
+               for n in (5, 9, 3, 12)]
+    outs = {}
+    for spec in (0, k):
+        eng = ServeEngine(cfg, params, n_slots=4, max_len=48,
+                          speculate=spec,
+                          draft_params=draft if spec else None)
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new_tokens=5 + i)
+        done = eng.run_until_drained()
+        assert len(done) == len(prompts)
+        outs[spec] = {r.uid: r.out_tokens for r in done}
+    assert outs[k] == outs[0]
+
+
+def test_speculative_bursty_trace_bit_identical():
+    """Mixed lengths + staggered arrivals + elastic pool: the
+    speculative engine must reproduce the plain engine token-for-token
+    even as acceptance shifts admission timing."""
+    cfg, params, draft = _spec_setup(n_layers=1)
+    rng = np.random.default_rng(5)
+    lens = [3, 12, 20, 6, 2, 9, 15, 4, 7, 11]
+    arrivals = sorted(int(a) for a in rng.integers(0, 6, size=len(lens)))
+    prompts = [rng.integers(0, 64, size=n).astype(np.int32) for n in lens]
+
+    def drive(spec):
+        eng = ServeEngine(cfg, params, n_slots=4, max_len=48,
+                          speculate=spec,
+                          draft_params=draft if spec else None)
+        i = steps = 0
+        while True:
+            while i < len(prompts) and arrivals[i] <= eng.tick_no:
+                eng.submit(prompts[i], max_new_tokens=4)
+                i += 1
+            emitted = eng.step()
+            steps += 1
+            assert steps < 500
+            if i >= len(prompts) and emitted == 0 and not eng.queue:
+                break
+        assert len(eng.completed) == len(prompts)
+        return {r.uid: r.out_tokens for r in eng.completed}
+
+    assert drive(2) == drive(0)
+
+
+def test_speculative_stats_and_token_ticks():
+    cfg, params, draft = _spec_setup(n_layers=1, scale=0.01)
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=48, speculate=2,
+                      draft_params=draft)
+    for n in (4, 6):
+        eng.submit(np.arange(n, dtype=np.int32), max_new_tokens=6)
+    eng.run_until_drained()
+    st = eng.speculative_stats
+    total = sum(len(r.out_tokens) for r in eng.completed)
+    assert st["emitted"] == total - 2    # prefill emits one per request
+    assert st["proposed"] == 2 * st["slot_launches"]
+    assert 0.0 <= st["acceptance_rate"] <= 1.0
+    assert st["tokens_per_launch"] >= 1.0
+    assert st["launches"] == eng.spec_launches > 0
+    for r in eng.completed:
+        assert len(r.token_ticks) == len(r.out_tokens)
+        assert r.token_ticks[0] == r.admit_tick
+        assert all(b >= a for a, b in
+                   zip(r.token_ticks, r.token_ticks[1:]))
+
+
+def test_speculative_pool_clamped_to_gemv_rows():
+    from repro.serve.speculate import SPEC_M_MAX, max_pool_for
+    cfg, params, draft = _spec_setup(n_layers=1)
+    k = 3
+    eng = ServeEngine(cfg, params, n_slots=32, max_len=48, speculate=k,
+                      draft_params=draft)
+    assert eng.n_slots == max_pool_for(k) == SPEC_M_MAX // (k + 1)
+    assert eng.n_slots * (k + 1) <= SPEC_M_MAX
+
+
+def test_speculative_validation_errors():
+    cfg, params, draft = _spec_setup(n_layers=1)
+    with pytest.raises(ValueError, match="ladder"):
+        ServeEngine(cfg, params, n_slots=2, max_len=48, speculate=2)
+    with pytest.raises(ValueError, match="fast path"):
+        ServeEngine(cfg, params, n_slots=2, max_len=48, speculate=2,
+                    draft_params=draft, fast_path=False)
+    tcfg = reduced(ARCHS["llama3-8b"], n_layers=1, vocab_size=64)
+    tparams = R.init_params(tcfg, KEY)
+    with pytest.raises(NotImplementedError, match="verify_chunk"):
+        ServeEngine(tcfg, tparams, n_slots=2, max_len=48, speculate=2,
+                    draft_params=tparams)
+
+
+def test_speculative_temperature_rows_still_sample():
+    """temperature>0 rows degrade to one sampled token per launch but
+    must complete with the requested token count; the greedy row in the
+    same pool stays bit-identical to the plain engine."""
+    cfg, params, draft = _spec_setup(n_layers=1)
+    gprompt = np.arange(4, dtype=np.int32)
+    outs = {}
+    for spec in (0, 2):
+        eng = ServeEngine(cfg, params, n_slots=2, max_len=48,
+                          speculate=spec,
+                          draft_params=draft if spec else None)
+        eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=6,
+                   temperature=0.9)
+        guid = eng.submit(gprompt, max_new_tokens=6)
+        done = eng.run_until_drained()
+        assert len(done) == 2
+        assert all(len(r.out_tokens) == 6 for r in done)
+        outs[spec] = next(r.out_tokens for r in done if r.uid == guid)
+    assert outs[2] == outs[0]
+
+
+def test_from_artifact_without_ladder_refuses_speculate():
+    # n_layers=2: quantizing a 1-layer stacked tree trips a pre-existing
+    # scan-stacking bug unrelated to speculation
+    from repro import api
+    from repro.core.policy import DATAFREE_3_275
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=2, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    art = api.quantize(cfg, params, DATAFREE_3_275)     # no ladder
+    with pytest.raises(ValueError, match="ladder"):
+        ServeEngine.from_artifact(art, n_slots=2, max_len=48, speculate=2)
+    # plain serving of the same artifact is untouched
+    eng = ServeEngine.from_artifact(art, n_slots=2, max_len=48)
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=3)
+    assert len(eng.run_until_drained()) == 1
+
+
+def test_speculative_from_ladder_artifact_matches_plain():
+    """End-to-end through the api facade: quantize with a ladder, serve
+    with speculate=k, outputs bit-identical to the plain engine."""
+    from repro import api
+    from repro.core.policy import DATAFREE_3_275
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=2, vocab_size=128)
+    params = R.init_params(cfg, KEY)
+    art = api.quantize(cfg, params, DATAFREE_3_275, ladder=True)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, 128, size=n).astype(np.int32)
+               for n in (5, 8, 3)]
+    outs = {}
+    for spec in (0, 2):
+        eng = ServeEngine.from_artifact(art, n_slots=2, max_len=48,
+                                        speculate=spec)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=5)
+        done = eng.run_until_drained()
+        assert len(done) == len(prompts)
+        outs[spec] = {r.uid: r.out_tokens for r in done}
+    assert outs[2] == outs[0]

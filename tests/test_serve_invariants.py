@@ -10,7 +10,14 @@ schedule.  Invariants:
     (admission is strictly FIFO at tick granularity);
   * ``host_syncs`` stays within the completion-check budget
     (<= 2 pulls per step on the fast path: live-mask + completions);
-  * every request emits exactly its max_new_tokens.
+  * every request emits exactly its max_new_tokens;
+  * per-token tick stamps (``token_ticks``) are well-formed: one stamp
+    per emitted token, starting at the admit tick, nondecreasing.
+
+The trace space also spans a ``speculate`` dimension: the self-
+speculative draft-verify path (``serve/speculate.py``) must keep every
+structural invariant and stay greedy-bit-identical to the plain fast
+path under the same arrival schedule.
 """
 import numpy as np
 import pytest
@@ -27,6 +34,13 @@ from repro.serve.engine import ServeEngine  # noqa: E402
 
 CFG = reduced(ARCHS["rwkv6-3b"], n_layers=2, vocab_size=64)
 PARAMS = R.init_params(CFG, jax.random.PRNGKey(0))
+# draft rung for the speculate dimension: a perturbed copy of the target
+# weights (cheap stand-in for an aggressively quantized ladder rung —
+# close enough to accept some drafts, wrong enough to reject others)
+_drng = np.random.default_rng(7)
+DRAFT_PARAMS = jax.tree.map(
+    lambda x: x + 0.05 * _drng.standard_normal(x.shape).astype(x.dtype),
+    PARAMS)
 MAX_LEN = 48
 MAX_STEPS = 500
 
@@ -41,7 +55,8 @@ SETTINGS = dict(max_examples=5, deadline=None,
                                        HealthCheck.data_too_large])
 
 
-def _drive(trace, fast: bool, n_slots: int = 4, seed: int = 0):
+def _drive(trace, fast: bool, n_slots: int = 4, seed: int = 0,
+           speculate: int = 0):
     """Run one arrival schedule to completion; returns (engine, steps).
 
     Requests are submitted in arrival-tick order (ties keep trace order),
@@ -51,8 +66,11 @@ def _drive(trace, fast: bool, n_slots: int = 4, seed: int = 0):
     prompts = [rng.integers(0, CFG.vocab_size, size=L).astype(np.int32)
                for (L, _, _, _) in trace]
     order = sorted(range(len(trace)), key=lambda i: trace[i][3])
+    kw = {}
+    if speculate:
+        kw = dict(speculate=speculate, draft_params=DRAFT_PARAMS)
     eng = ServeEngine(CFG, PARAMS, n_slots=n_slots, max_len=MAX_LEN,
-                      fast_path=fast, seed=seed)
+                      fast_path=fast, seed=seed, **kw)
     i = steps = 0
     while True:
         while i < len(order) and trace[order[i]][3] <= eng.tick_no:
@@ -79,9 +97,13 @@ def _check_common(eng, steps, trace):
     assert all(a >= 0 for a in admits)
     assert admits == sorted(admits), admits
     # every request ran to its own max_new_tokens (no truncation at
-    # these sizes: prompt+new < MAX_LEN-1)
+    # these sizes: prompt+new < MAX_LEN-1), with one tick stamp per
+    # emitted token, starting at admission and nondecreasing
     for r in by_uid:
         assert len(r.out_tokens) == r.max_new_tokens, r
+        assert len(r.token_ticks) == len(r.out_tokens), r
+        assert r.token_ticks[0] == r.admit_tick, r
+        assert r.token_ticks == sorted(r.token_ticks), r
     # sync budget: <= 2 completion-check pulls per step, plus one
     # admission pull per request whose prefill token already finishes it
     n_tiny = sum(1 for r in by_uid if r.max_new_tokens <= 1)
@@ -123,3 +145,27 @@ def test_pool_sizes_greedy_identical(trace, n_slots):
     out = {r.uid: r.out_tokens for r in eng.completed}
     out_ref = {r.uid: r.out_tokens for r in ref.completed}
     assert out == out_ref
+
+
+@settings(**SETTINGS)
+@given(trace=TRACE, speculate=st.sampled_from([2, 3]))
+def test_speculative_greedy_bit_identical(trace, speculate):
+    """Draft-propose/target-verify must be a pure latency optimization:
+    greedy outputs match the plain fast path token for token."""
+    trace = [(L, n, 0.0, a) for (L, n, _, a) in trace]
+    spec, steps = _drive(trace, fast=True, speculate=speculate)
+    ref, _ = _drive(trace, fast=True)
+    _check_common(spec, steps, trace)
+    out = {r.uid: r.out_tokens for r in spec.completed}
+    out_ref = {r.uid: r.out_tokens for r in ref.completed}
+    assert out == out_ref
+
+
+@settings(**SETTINGS)
+@given(trace=TRACE, speculate=st.sampled_from([0, 2]))
+def test_speculative_mixed_temperature_invariants(trace, speculate):
+    """Sampled requests under speculation keep slot accounting intact
+    (sampled rows fall back to one accepted token per launch, so only
+    structural invariants are checked — RNG streams differ)."""
+    eng, steps = _drive(trace, fast=True, speculate=speculate)
+    _check_common(eng, steps, trace)
