@@ -15,6 +15,25 @@ decode steps per launch, so a draft leaf falling off the kernels costs
 more than a target leaf would (``max_draft_fallback_leaves``, default
 0, and ``max_draft_byte_ratio``).
 
+The guard also gates serving latency: when ``BENCH_decode.json`` exists
+(the decode benchmark ran earlier in the same CI job), the chunked
+continuous-batching tail metrics are checked against
+
+* ``max_ttft_p99_ticks`` — p99 time-to-first-token of the chunked
+  engine under the long-prompt interference trace, in engine ticks
+  (tick counts are deterministic for a fixed trace, so this is a real
+  regression gate, not a wall-clock coin flip);
+* ``max_queue_wait_ticks`` — worst submit→prefill-start wait on the
+  same trace;
+* ``max_decode_stall_ticks`` — the scheduler's core promise: a prefill
+  never stalls live decode streams for more than one chunk's worth of
+  work per tick.
+
+A scheduler change that lets long prompts starve decode again fails CI
+here rather than shipping as a latency cliff.  Without the JSON the
+latency gate is skipped with a note (the coverage gate above is
+analytic and always runs).
+
 Runs in interpret mode on CPU (the report is analytic — no TPU needed)
 and exits non-zero on regression, so a dispatch-rule change that
 silently drops a leaf back to the XLA dequant path fails CI instead of
@@ -38,6 +57,45 @@ from repro.models import registry as R
 
 THRESHOLDS = os.path.join(os.path.dirname(__file__),
                           "coverage_threshold.json")
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_decode.json")
+
+
+def _latency_failures(thr) -> list:
+    """Chunked-serving tail-latency gate over BENCH_decode.json."""
+    if not os.path.exists(BENCH_JSON):
+        print("\n[latency gate skipped: BENCH_decode.json not found — "
+              "run `python -m benchmarks.run --only decode` first]")
+        return []
+    with open(BENCH_JSON) as f:
+        cb = json.load(f).get("continuous_batching", {}).get("chunked")
+    if cb is None:
+        print("\n[latency gate skipped: no continuous_batching section "
+              "in BENCH_decode.json — re-run the decode benchmark]")
+        return []
+    failures = []
+    ttft = cb["ttft_ticks"]["p99"]
+    if ttft > thr["max_ttft_p99_ticks"]:
+        failures.append(
+            f"chunked ttft p99 {ttft:.1f} ticks > "
+            f"max_ttft_p99_ticks={thr['max_ttft_p99_ticks']}")
+    qwait = cb["queue_wait_ticks"]["max"]
+    if qwait > thr["max_queue_wait_ticks"]:
+        failures.append(
+            f"chunked max queue wait {qwait:.0f} ticks > "
+            f"max_queue_wait_ticks={thr['max_queue_wait_ticks']}")
+    stall = cb["max_decode_stall_ticks"]
+    if stall > thr["max_decode_stall_ticks"]:
+        failures.append(
+            f"max_decode_stall_ticks={stall} > "
+            f"{thr['max_decode_stall_ticks']} — chunked prefill is "
+            "stalling live decode streams beyond its budget")
+    if not failures:
+        print(f"\nlatency gate OK: ttft p99 {ttft:.1f} <= "
+              f"{thr['max_ttft_p99_ticks']} ticks, max queue wait "
+              f"{qwait:.0f} <= {thr['max_queue_wait_ticks']} ticks, "
+              f"stall {stall} <= {thr['max_decode_stall_ticks']}")
+    return failures
 
 
 def main() -> int:
@@ -76,6 +134,7 @@ def main() -> int:
         failures.append(
             f"draft byte ratio {draft_report['ratio']:.4f} > "
             f"max_draft_byte_ratio={dmax_ratio}")
+    failures += _latency_failures(thr)
     if failures:
         print("\ncoverage guard FAILED:")
         for f_ in failures:

@@ -5,13 +5,76 @@
 Prints ``name,us_per_call,derived`` CSV rows (one per measurement).
 Small benchmark models are trained once on the synthetic corpus and
 cached under artifacts/models/.
+
+After the ``decode`` section, a timestamped snapshot of the headline
+``BENCH_decode.json`` metrics (tokens/sec, weight-byte ratios, TTFT and
+inter-token-latency percentiles) is appended to ``BENCH_history.json``
+at the repo root, so the perf trajectory accumulates run-over-run
+instead of each run overwriting the last.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _append_history() -> str | None:
+    """Append the headline BENCH_decode.json metrics to BENCH_history.json."""
+    src = os.path.join(_ROOT, "BENCH_decode.json")
+    dst = os.path.join(_ROOT, "BENCH_history.json")
+    if not os.path.exists(src):
+        return None
+    with open(src) as f:
+        d = json.load(f)
+    eng = d.get("engines", {})
+    bursty = d.get("bursty", {})
+    cb = d.get("continuous_batching", {})
+    snap = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "model": d.get("model"),
+        "policy_bpw": d.get("policy_bpw"),
+        "tokens_per_sec": {
+            tag: eng[tag]["tokens_per_sec"] for tag in eng},
+        "byte_ratio": {
+            impl: r["ratio"] for impl, r in
+            d.get("weight_bytes_per_token", {}).get("by_impl", {}).items()},
+        "bursty_itl": {
+            tag: bursty[tag]["inter_token_ticks"]
+            for tag in ("fast_xla", "fast_pallas") if tag in bursty},
+        "continuous_batching": {
+            tag: {"ttft_ticks": cb[tag]["ttft_ticks"],
+                  "ttft_s": cb[tag]["ttft_s"],
+                  "interactive_ttft_s": cb[tag]["interactive_ttft_s"],
+                  "inter_token_ticks": cb[tag]["inter_token_ticks"],
+                  "queue_wait_ticks": cb[tag]["queue_wait_ticks"],
+                  "max_decode_stall_ticks":
+                      cb[tag]["max_decode_stall_ticks"]}
+            for tag in ("whole_prompt", "chunked") if tag in cb},
+        "speculative": {
+            impl: {k: d["speculative"][impl][k]
+                   for k in ("acceptance_rate", "tokens_per_launch",
+                             "tokens_per_sec")}
+            for impl in ("xla", "pallas")
+            if impl in d.get("speculative", {})},
+    }
+    history = []
+    if os.path.exists(dst):
+        try:
+            with open(dst) as f:
+                history = json.load(f)
+            assert isinstance(history, list)
+        except Exception:
+            history = []                 # never let a bad file kill the run
+    history.append(snap)
+    with open(dst, "w") as f:
+        json.dump(history, f, indent=2)
+    return dst
 
 
 def main() -> None:
@@ -53,6 +116,12 @@ def main() -> None:
             failures.append(name)
             traceback.print_exc(file=sys.stderr)
             print(f"{name}/ERROR,0.00,{type(e).__name__}:{str(e)[:120]}")
+        else:
+            if name == "decode":
+                dst = _append_history()
+                if dst:
+                    print(f"# decode snapshot appended to "
+                          f"{os.path.relpath(dst)}")
         print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
     print(f"# all benchmarks done in {time.time()-t_all:.0f}s; "
           f"failures={failures or 'none'}")

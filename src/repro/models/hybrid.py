@@ -24,6 +24,10 @@ from repro.models.sharding import constrain
 # prefill accepts batch["lengths"]: attention K/V rows zeroed at pads,
 # mamba pad steps run with dt = 0 and a per-row conv-state gather
 SUPPORTS_RAGGED_PREFILL = True
+# prefill_chunk resumes mid-prompt: attention K/V at per-row offsets,
+# mamba SSM state via dt = 0 no-ops and the conv window gathered over
+# [carried conv_state | chunk] (lengths == 0 reproduces the old state)
+SUPPORTS_CHUNKED_PREFILL = True
 
 
 def _period_layout(cfg):
@@ -216,6 +220,31 @@ def prefill(cfg, params, batch, cache) -> Tuple[jax.Array, Dict]:
     h, new_cache = _cached_stack(cfg, params, cache, x, positions, 0,
                                  mask=mask, lengths=lengths)
     new_cache["index"] = jnp.int32(S) if lengths is None else lengths
+    return logits(cfg, params, L.last_real(h, last_idx))[:, 0, :], new_cache
+
+
+def prefill_chunk(cfg, params, batch, cache, offset) -> Tuple[jax.Array, Dict]:
+    """Resume a prompt mid-prefill (contract as in the transformer twin).
+
+    Attention sublayers write K/V at the per-row ``offset`` and mask
+    causally from there; Mamba sublayers continue exactly because padded
+    steps run with dt = 0 (state multiplier 1, input contribution 0) and
+    the depthwise-conv window is gathered over the carried ``conv_state``
+    prepended to the chunk — a row with ``lengths == 0`` gathers its old
+    conv state back unchanged.  Rows with ``lengths == 0`` still return
+    garbage logits and must not be spliced by the caller.
+    """
+    x = _embed(cfg, params, batch)
+    S = x.shape[1]
+    off = jnp.asarray(offset, jnp.int32)
+    positions = off[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = constrain(x, "dp", None, None)
+    lengths, mask, last_idx = L.ragged_args(batch, S)
+    assert lengths is not None, "prefill_chunk requires batch['lengths']"
+    last_idx = jnp.maximum(last_idx, 0)
+    h, new_cache = _cached_stack(cfg, params, cache, x, positions, off,
+                                 mask=mask, lengths=lengths)
+    new_cache["index"] = off + lengths
     return logits(cfg, params, L.last_real(h, last_idx))[:, 0, :], new_cache
 
 

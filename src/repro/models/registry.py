@@ -85,6 +85,42 @@ def supports_ragged_prefill(cfg) -> bool:
     return getattr(module_for(cfg), "SUPPORTS_RAGGED_PREFILL", False)
 
 
+def supports_chunked_prefill(cfg) -> bool:
+    """True when the family defines ``prefill_chunk`` — the resumable
+    mid-prompt continuation hook behind the engine's chunked-prefill
+    scheduler (prompt consumed ``chunk_tokens`` at a time between decode
+    ticks).  Families without it (whisper: the encoder + cross-KV fill
+    is a monolithic launch with no per-row resume point) are served via
+    the documented whole-prompt fallback — ``ServeEngine`` warns loudly
+    and admits with the legacy equal-length/whole-prompt policy."""
+    return getattr(module_for(cfg), "SUPPORTS_CHUNKED_PREFILL", False) \
+        and hasattr(module_for(cfg), "prefill_chunk")
+
+
+def prefill_chunk(cfg, params, batch, cache, offset):
+    """One resumable prefill chunk: consume ``batch['tokens']`` (B, C)
+    with per-row valid counts ``batch['lengths']`` (B,) starting at
+    absolute position ``offset`` (B,), continuing from the recurrent
+    state / KV cache carried in ``cache``.
+
+    Semantics are pinned to whole-prompt ``prefill``: a chain of chunk
+    calls over a split prompt returns the same last-position logits and
+    the same cache rows as one ``prefill`` of the whole prompt (greedy
+    token equality is the serving contract; see tests).  Rows with
+    ``lengths == 0`` are inactive — their logits are garbage and their
+    cache rows may be scribbled, so callers only splice rows whose
+    prompt ended inside the chunk.  Families without the hook raise.
+    """
+    fn = getattr(module_for(cfg), "prefill_chunk", None)
+    if fn is None:
+        raise NotImplementedError(
+            f"model family {module_for(cfg).__name__!r} does not implement "
+            "prefill_chunk; chunked prefill needs "
+            "supports_chunked_prefill(cfg) == True — serve this family "
+            "with chunk_tokens=0 (whole-prompt admission) instead")
+    return fn(cfg, params, batch, cache, offset)
+
+
 def prepare_decode_params(cfg, params):
     """Optional per-family decode-optimized weight layout (identity when
     the family defines none).  The transformed tree remains valid for

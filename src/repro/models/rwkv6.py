@@ -36,6 +36,10 @@ TP_CONSTRAINTS = True
 # prefill accepts batch["lengths"] for right-padded mixed-length prompts
 # (pad steps are made exact no-ops: decay w := 1, k := 0 — see time_mix)
 SUPPORTS_RAGGED_PREFILL = True
+# prefill_chunk resumes a partially-consumed prompt from the cache: the
+# recurrent state + token-shift registers carried in the cache make the
+# continuation exact (see prefill_chunk)
+SUPPORTS_CHUNKED_PREFILL = True
 
 
 # --------------------------------------------------------------------------- #
@@ -459,6 +463,36 @@ def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:
     h, new_cache = _cached_stack(cfg, params, cache, x)
     new_cache["index"] = cache["index"] + 1
     return logits(cfg, params, h[:, 0:1, :])[:, 0, :], new_cache
+
+
+def prefill_chunk(cfg, params, batch, cache, offset) -> Tuple[jax.Array, Dict]:
+    """Resume a prompt mid-prefill: one chunk continuation from ``cache``.
+
+    ``batch['tokens']`` (B, C) carries the next chunk of each row's
+    prompt, ``batch['lengths']`` (B,) the valid token count within the
+    chunk (0..C; 0 marks an inactive row), and ``offset`` (B,) the
+    absolute position of column 0.  The WKV state and both token-shift
+    registers ride in ``cache`` — ``prefill`` already threads them, so
+    a chain of chunk calls performs the same per-position arithmetic as
+    one whole-prompt ``prefill`` (pad steps run the exact no-op w := 1,
+    k := 0).  RWKV needs no positional input, so ``offset`` only feeds
+    the returned ``index = offset + lengths``.
+
+    Returns (logits (B, V) at each row's last valid chunk position,
+    new_cache).  Rows with ``lengths == 0`` return garbage logits and
+    may corrupt their own shift registers (the last-position gather
+    clamps to column 0) — callers must only splice rows whose prompt
+    actually ended in this chunk.
+    """
+    x = _embed(cfg, params, batch)
+    x = constrain(x, "dp", None, None)
+    lengths, mask, last_idx = L.ragged_args(batch, x.shape[1])
+    assert lengths is not None, "prefill_chunk requires batch['lengths']"
+    last_idx = jnp.maximum(last_idx, 0)
+    h, new_cache = _cached_stack(cfg, params, cache, x, mask=mask,
+                                 last_idx=last_idx)
+    new_cache["index"] = jnp.asarray(offset, jnp.int32) + lengths
+    return logits(cfg, params, L.last_real(h, last_idx))[:, 0, :], new_cache
 
 
 def verify_chunk(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:

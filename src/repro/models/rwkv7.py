@@ -32,6 +32,10 @@ GATE_LORA = 128
 # prefill accepts batch["lengths"] for right-padded mixed-length prompts
 # (pad steps are exact no-ops: w := 1, k := 0, kappa_hat := 0)
 SUPPORTS_RAGGED_PREFILL = True
+# prefill_chunk resumes a partially-consumed prompt from the cache (state
+# + shift registers; the v-residual stream v_first is positionwise, so
+# chunk boundaries cannot perturb it)
+SUPPORTS_CHUNKED_PREFILL = True
 
 
 def _block_init(cfg, key, frac: float):
@@ -347,6 +351,26 @@ def decode_step(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:
     h, new_cache = _cached_stack(cfg, params, cache, x)
     new_cache["index"] = cache["index"] + 1
     return logits(cfg, params, h[:, 0:1, :])[:, 0, :], new_cache
+
+
+def prefill_chunk(cfg, params, batch, cache, offset) -> Tuple[jax.Array, Dict]:
+    """Resume a prompt mid-prefill (see the rwkv6 twin for the contract).
+
+    ``batch['tokens']`` (B, C) + ``batch['lengths']`` (B,) in-chunk valid
+    counts; ``offset`` (B,) absolute position of column 0.  The WKV state
+    and shift registers carried in ``cache`` make the continuation exact;
+    the layer-0 value stream ``v_first`` is positionwise, so it is
+    rebuilt correctly inside every chunk.  Rows with ``lengths == 0``
+    return garbage logits/shift rows and must not be spliced.
+    """
+    x = _embed(cfg, params, batch)
+    lengths, mask, last_idx = L.ragged_args(batch, x.shape[1])
+    assert lengths is not None, "prefill_chunk requires batch['lengths']"
+    last_idx = jnp.maximum(last_idx, 0)
+    h, new_cache = _cached_stack(cfg, params, cache, x, mask=mask,
+                                 last_idx=last_idx)
+    new_cache["index"] = jnp.asarray(offset, jnp.int32) + lengths
+    return logits(cfg, params, L.last_real(h, last_idx))[:, 0, :], new_cache
 
 
 def verify_chunk(cfg, params, cache, tokens) -> Tuple[jax.Array, Dict]:

@@ -22,6 +22,9 @@ from repro.models.sharding import constrain
 # prefill accepts batch["lengths"]: right padding + causal masking keep
 # real rows exact; padded K/V cache rows are written as zeros
 SUPPORTS_RAGGED_PREFILL = True
+# prefill_chunk resumes a partially-filled KV cache at a per-row offset
+# (cache_update and the causal q_offset mask both take (B,) vectors)
+SUPPORTS_CHUNKED_PREFILL = True
 
 
 # --------------------------------------------------------------------------- #
@@ -242,6 +245,35 @@ def prefill(cfg, params, batch, cache) -> Tuple[jax.Array, Dict]:
     h, new_cache, _ = _cached_stack(cfg, params, cache, x, positions,
                                     cache["index"] * 0, kv_mask=mask)
     new_cache["index"] = jnp.int32(S) if lengths is None else lengths
+    return logits(cfg, params, L.last_real(h, last_idx))[:, 0, :], new_cache
+
+
+def prefill_chunk(cfg, params, batch, cache, offset) -> Tuple[jax.Array, Dict]:
+    """Resume a prompt mid-prefill: one chunk continuation from ``cache``.
+
+    ``batch['tokens']`` (B, C) is the next chunk of each row's prompt,
+    ``batch['lengths']`` (B,) the valid count within the chunk (0..C),
+    and ``offset`` (B,) the absolute position of column 0.  K/V rows are
+    written at ``offset`` per row (``cache_update`` vmaps the splice) and
+    queries run with per-row rope positions + causal ``q_offset`` masks,
+    so a chain of chunk calls writes the same cache and computes the same
+    last-position logits as one whole-prompt ``prefill`` (padded/unused
+    cache tail stays causally masked either way).  Rows with
+    ``lengths == 0`` return garbage logits and scribble zeros into their
+    own cache rows past ``offset`` — callers must only splice rows whose
+    prompt actually ended in this chunk.
+    """
+    x = embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    off = jnp.asarray(offset, jnp.int32)
+    positions = off[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = constrain(x, "dp", None, None)
+    lengths, mask, last_idx = L.ragged_args(batch, S)
+    assert lengths is not None, "prefill_chunk requires batch['lengths']"
+    last_idx = jnp.maximum(last_idx, 0)
+    h, new_cache, _ = _cached_stack(cfg, params, cache, x, positions,
+                                    off, kv_mask=mask)
+    new_cache["index"] = off + lengths
     return logits(cfg, params, L.last_real(h, last_idx))[:, 0, :], new_cache
 
 

@@ -52,6 +52,72 @@ Admission policy (fast path)
 Per-request queue wait (submit→admit, in engine ticks) is recorded on
 each ``Request`` for the bursty-trace benchmark.
 
+Chunked prefill (continuous batching)
+-------------------------------------
+
+``chunk_tokens=N`` (fast path) interleaves prefill with decode under a
+per-tick token budget instead of running each prompt's prefill as one
+blocking launch:
+
+* **Token budget** — each engine tick runs ONE decode step for every
+  live slot plus at most ``chunk_tokens`` of padded prefill work,
+  packed FIFO across pending jobs.  A long prompt admitted mid-flight
+  therefore stalls live decode streams for at most one chunk's worth of
+  work per tick instead of its whole length.  When no decode stream is
+  live there is nobody to stall: every job advances one full-width
+  chunk that tick, so burst starts drain at whole-prompt speed.
+* **Chunk sizing** — queued requests are grouped FIFO into *prefill
+  jobs* of up to ``chunk_tokens // min_bucket`` rows (row count padded
+  to a power of two); a job's full chunk width ``ccols`` is the largest
+  power-of-two with ``rows * ccols <= chunk_tokens`` (floored at
+  ``min_bucket``, capped at the longest prompt's length bucket), and a
+  launch may narrow to the largest power-of-two width the tick's
+  leftover budget affords.  Chunk shapes are therefore drawn from the
+  same power-of-two grid as whole-prompt prefill, so jit retraces stay
+  bounded by |row buckets| x |chunk buckets|
+  (``jit_recompiles['prefill_chunk']``).
+* **Admission order** — jobs are formed FIFO from the queue head
+  whenever fewer than ``n_slots`` rows are in flight (job rows +
+  parked rows; jobs own NO decode slots, so prefill starts when budget
+  allows, not when a slot frees).  Grouping is latency-first: FIFO
+  neighbours share a job only while one full-width launch covers the
+  group's longest prompt, so short prompts complete in a single chunk.
+  Within a tick the budget is spent shortest-remaining-first and
+  work-conserving — leftover budget flows to the next job at the
+  largest power-of-two width it affords — with an aging escape
+  (``PREFILL_AGING_TICKS``) so a long job starved by a stream of
+  shorts jumps the order instead of waiting forever.
+* **Decode/prefill fairness** — the decode tick runs every tick
+  regardless of pending prefill work; prefill never preempts it for
+  more than the budgeted chunk.  Rows whose prompt ends inside a chunk
+  sample their first token from that chunk's logits (TTFT stops
+  there) and *park* with a 1-row copy of their cache until a decode
+  slot frees (``_fill_slots``, FIFO) — prefill overlaps slot waits
+  instead of extending them.  A request's ``admit_tick`` is the tick
+  its prefill started (``queue_wait`` = time queued before prefill
+  began); ``token_ticks[0]`` is the tick its first token appeared, so
+  TTFT = ``token_ticks[0] - submit_tick``.
+* **Resumability** — each chunk launch continues from the job's scratch
+  cache via the per-family ``registry.prefill_chunk`` continuation hook
+  (semantics pinned to whole-prompt prefill; greedy outputs stay
+  bit-identical to the slow host loop).  Families without the hook
+  (``registry.supports_chunked_prefill``; whisper) fall back LOUDLY to
+  whole-prompt admission — a ``UserWarning`` at construction, then the
+  legacy policy.  ``cancel()`` mid-prefill drops the row at once (and
+  the whole job — scratch cache + budget share — when its last row
+  dies); cancelling a parked row delivers its already-sampled first
+  token with the cancel.
+
+Counters: ``prefill_chunks`` counts prefill launches (chunk launches
+when chunked; whole-prompt launches otherwise);
+``max_prefill_tokens_tick`` is the largest prefill launch grid
+(rows x cols) issued in a single tick while at least one decode stream
+was live; ``max_decode_stall_ticks`` divides that by the chunk budget
+(ceil; reference ``chunk_tokens`` or ``STALL_REF_TOKENS`` when
+unchunked) — the headline "a long prompt never stalls decode for more
+than one chunk's worth of ticks" metric, <= 1 by construction when
+chunked.
+
 Shared jit-closure cache
 ------------------------
 
@@ -113,6 +179,8 @@ _NO_BATCH_AX = -1      # sentinel: leaf has no batch axis (e.g. cache index)
 
 POOL_SIZES = (1, 4, 8, 16, 32)   # decode tick sizes the engine jits
 MIN_BUCKET = 8                   # smallest prompt-length bucket
+STALL_REF_TOKENS = 64            # stall-tick unit for unchunked engines
+PREFILL_AGING_TICKS = 2          # budget-starved job jumps the SRF order
 
 # --------------------------------------------------------------------------- #
 #  Cross-engine jit-closure cache (see module docstring).  LRU-bounded:
@@ -179,6 +247,32 @@ class Request:
         """Ticks spent queued before admission (-1: never admitted)."""
         return self.admit_tick - self.submit_tick \
             if self.admit_tick >= 0 else -1
+
+
+@dataclass
+class _PrefillJob:
+    """One FIFO group of requests mid-chunked-prefill.
+
+    ``reqs`` is padded to ``rows`` with ``None`` (dummy rows are never
+    active); a cancelled or finished row becomes ``None``.
+    ``consumed[i]`` is the absolute prompt offset the next chunk resumes
+    from; ``scratch`` (and ``dscratch`` when speculating) is the
+    (rows, max_len) cache the chunk launches accumulate into.  Jobs own
+    no decode slots — a row that finishes its prompt samples its first
+    token immediately and parks until ``_fill_slots`` seats it, so
+    prefill overlaps slot waits instead of extending them."""
+    reqs: List[Optional[Request]]
+    rows: int
+    ccols: int
+    consumed: np.ndarray
+    scratch: dict
+    dscratch: Optional[dict]
+    skipped: int = 0        # consecutive decode-live ticks with no launch
+
+    def remaining(self) -> int:
+        """Prompt tokens the job's slowest active row still needs."""
+        return max(len(r.prompt) - int(self.consumed[i])
+                   for i, r in enumerate(self.reqs) if r is not None)
 
 
 def _batch_axes(cfg, max_len: int):
@@ -249,16 +343,43 @@ def _next_pow2(n: int) -> int:
     return p
 
 
+def _pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
 class ServeEngine:
     def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 512,
                  seed: int = 0, fast_path: bool = True, impl: str = "auto",
                  ticks_per_sync: int = 1, elastic: bool = True,
                  min_bucket: int = MIN_BUCKET, speculate: int = 0,
-                 draft_params=None):
+                 draft_params=None, chunk_tokens: int = 0):
         if impl == "auto":
             impl = "pallas" if any(d.platform == "tpu"
                                    for d in jax.devices()) else "xla"
         assert impl in ("xla", "pallas"), impl
+        chunk_tokens = int(chunk_tokens)
+        if chunk_tokens and not fast_path:
+            # the slow host loop IS the whole-prompt reference the chunked
+            # scheduler is checked against; it never chunks
+            chunk_tokens = 0
+        if chunk_tokens and not R.supports_chunked_prefill(cfg):
+            import warnings
+            warnings.warn(
+                f"chunk_tokens={chunk_tokens} requested but model family "
+                f"of {cfg.name!r} has no prefill_chunk continuation hook "
+                "(registry.supports_chunked_prefill); falling back to "
+                "whole-prompt admission — long prompts WILL stall decode "
+                "ticks for their full prefill", UserWarning, stacklevel=2)
+            chunk_tokens = 0
+        if chunk_tokens and chunk_tokens < min_bucket:
+            raise ValueError(
+                f"chunk_tokens={chunk_tokens} is below the smallest "
+                f"prefill shape (min_bucket={min_bucket}); the per-tick "
+                "budget cannot fit one chunk launch")
+        self.chunk_tokens = chunk_tokens
         speculate = int(speculate)
         if speculate:
             from repro.serve import speculate as spec_mod
@@ -295,6 +416,13 @@ class ServeEngine:
         self.pool_resizes = 0
         self.spec_launches = 0        # speculative ticks run (host count)
         self._cancel_freed = False    # slots freed by cancel() since harvest
+        self._jobs: List[_PrefillJob] = []   # chunked-prefill FIFO
+        # rows whose prefill finished but no decode slot was free yet:
+        # (req, first-token device scalar, 1-row cache tree, draft tree)
+        self._parked: List[tuple] = []
+        self.prefill_chunks = 0       # prefill launches (chunks or whole)
+        self.max_prefill_tokens_tick = 0   # largest launch grid vs live decode
+        self._tick_prefill_tokens = 0
         self._axes = _batch_axes(cfg, max_len)
         self._ragged = R.supports_ragged_prefill(cfg)
         # shapes THIS engine traced that the shared cache had not seen
@@ -343,6 +471,22 @@ class ServeEngine:
         self._decode = self._decode_ent["fn"]
         self._prefill = self._prefill_ent["fn"]
         self._tick = self._tick_ent["fn"]
+        if self.chunk_tokens:
+            self._chunk_ent = _shared_closure(
+                ("prefill_chunk", chash, impl),
+                lambda: jax.jit(_with_impl(
+                    lambda p, b, c, o: R.prefill_chunk(cfg, p, b, c, o))))
+            self._prefill_chunk = self._chunk_ent["fn"]
+            self._new_shapes["prefill_chunk"] = 0
+            # structural probe: does the cache have max_len capacity axes
+            # (KV-style)?  Chunk writes past max_len would clamp and
+            # silently corrupt, so such prompts are rejected up front —
+            # whole-prompt admission fails the same prompts at trace time.
+            s1 = jax.eval_shape(lambda: R.init_cache(cfg, 1, max_len))
+            s2 = jax.eval_shape(lambda: R.init_cache(cfg, 1, max_len * 2))
+            self._kv_capacity = any(
+                a.shape != b.shape for a, b in
+                zip(jax.tree.leaves(s1), jax.tree.leaves(s2)))
         if speculate:
             # own cache key: plain engines never trace (or pay for) it
             from repro.serve.speculate import spec_tick
@@ -441,6 +585,30 @@ class ServeEngine:
                 r.done = r.cancelled = True
                 self.completed.append(r)
                 return True
+        # mid-chunked-prefill: drop the row at once, and the whole job
+        # (scratch cache + its share of the per-tick budget) when its
+        # last row dies
+        for job in self._jobs:
+            for i, r in enumerate(job.reqs):
+                if r is not None and r.uid == uid:
+                    r.done = r.cancelled = True
+                    job.reqs[i] = None
+                    self._cancel_freed = True
+                    self.completed.append(r)
+                    if all(x is None for x in job.reqs):
+                        self._jobs.remove(job)
+                    return True
+        # prefill done but still waiting for a decode slot: its first
+        # token was already sampled, so deliver it with the cancel
+        for i, (r, first, _, _) in enumerate(self._parked):
+            if r.uid == uid:
+                self._parked.pop(i)
+                r.out_tokens = [int(first)]
+                self.host_syncs += 1
+                r.done = r.cancelled = True
+                self._cancel_freed = True
+                self.completed.append(r)
+                return True
         for s in range(self.pool):
             r = self.slot_req[s]
             if r is not None and r.uid == uid:
@@ -463,6 +631,10 @@ class ServeEngine:
         reused from the completion check ``_harvest`` just made)."""
         if req.done or not self.fast_path:
             return list(req.out_tokens)
+        for r, first, _, _ in self._parked:
+            if r is req:                 # prefill done, awaiting a slot:
+                self.host_syncs += 1     # its first token already exists
+                return [int(first)]
         for s in range(self.pool):
             if self.slot_req[s] is req:
                 if self._host_tcount is not None:
@@ -529,6 +701,18 @@ class ServeEngine:
                 "acceptance_rate": accepted / proposed if proposed else 0.0,
                 "tokens_per_launch": emitted / slot_launches
                 if slot_launches else 0.0}
+
+    @property
+    def max_decode_stall_ticks(self) -> int:
+        """Worst single-tick prefill burst in chunk units: the largest
+        prefill launch grid issued while >= 1 decode stream was live,
+        divided (ceil) by the chunk budget (``chunk_tokens``, or
+        ``STALL_REF_TOKENS`` for an unchunked engine so baselines are
+        comparable).  <= 1 by construction under chunked prefill; a
+        whole-prompt engine admitting a long prompt mid-decode reports
+        how many chunks' worth of work it stalled decode for."""
+        ref = self.chunk_tokens or STALL_REF_TOKENS
+        return -(-self.max_prefill_tokens_tick // ref)
 
     @property
     def jit_recompiles(self) -> Dict[str, int]:
@@ -606,6 +790,9 @@ class ServeEngine:
         for s, j in mapping.items():
             self.slot_req[j] = old_req[s]
             self.slot_pos[j] = old_pos[s]
+        # chunked-prefill jobs and parked rows own no decode slots: job
+        # scratch caches are their own (rows, max_len) trees and parked
+        # rows carry a 1-row tree, so neither migrates with the pool
         self.pool = new_pool
         self.pool_resizes += 1
 
@@ -616,10 +803,12 @@ class ServeEngine:
         return [s for s in range(self.pool) if self.slot_req[s] is None]
 
     def _admit(self) -> None:
-        if self.fast_path:
-            self._admit_batched()
-        else:
+        if not self.fast_path:
             self._admit_host()
+        elif self.chunk_tokens:
+            self._admit_chunked()
+        else:
+            self._admit_batched()
 
     def _bucket(self, L: int) -> int:
         """Power-of-two prompt-length bucket, clipped to max_len.
@@ -678,6 +867,8 @@ class ServeEngine:
         # even though the closure is shared across engines
         self._note_shape("prefill", self._prefill_ent,
                          (self._params_digest, rows, bucket, self.max_len))
+        self.prefill_chunks += 1
+        self._tick_prefill_tokens += rows * bucket
         scratch = R.init_cache(self.cfg, rows, self.max_len)
         logits, scratch = self._prefill(self._dparams, batch, scratch)
         dscratch = None
@@ -727,11 +918,233 @@ class ServeEngine:
             self._temps = self._temps.at[s].set(req.temperature)
             self._maxnew = self._maxnew.at[s].set(req.max_new_tokens)
 
+    def _admit_chunked(self) -> None:
+        """Form FIFO prefill jobs straight from the queue (chunked
+        scheduler).
+
+        Jobs own no decode slots: prefill runs into job-owned scratch
+        regardless of pool state, so a queued prompt starts prefilling
+        the moment budget allows instead of when a slot frees, and a
+        finished row parks (``_fill_slots`` seats it FIFO) rather than
+        holding a slot idle through its remaining chunks.  Rows in
+        flight (job rows + parked) are capped at ``n_slots`` to bound
+        scratch memory.  Grouping is latency-first: FIFO neighbours
+        join a job only while ONE full-width launch covers the group's
+        longest prompt (shorts complete in a single chunk); a longer
+        prompt gets its own job and chunks across ticks.
+        ``admit_tick`` is stamped here — the tick prefill STARTS — so
+        ``queue_wait`` measures time spent queued."""
+        in_flight = len(self._parked) + sum(
+            r is not None for j in self._jobs for r in j.reqs)
+        if self.elastic:
+            n_live = sum(r is not None for r in self.slot_req)
+            self._resize(self._pool_for(
+                n_live + in_flight + len(self.queue)))
+        max_rows = _pow2_floor(max(1, self.chunk_tokens // self.min_bucket))
+        while self.queue and in_flight < self.n_slots:
+            cap = min(len(self.queue), self.n_slots - in_flight, max_rows)
+            take, longest = 1, len(self.queue[0].prompt)
+            while take < cap:
+                nxt = max(longest, len(self.queue[take].prompt))
+                if self._row_bucket(take + 1) * self._bucket(nxt) \
+                        > self.chunk_tokens:
+                    break
+                take, longest = take + 1, nxt
+            if self._kv_capacity:
+                for r in self.queue[:take]:
+                    if len(r.prompt) > self.max_len:
+                        raise ValueError(
+                            f"prompt of length {len(r.prompt)} cannot fit "
+                            f"the (B, {self.max_len}, d) cache; a chunked "
+                            "prefill would clamp its writes and silently "
+                            "corrupt — raise max_len (whole-prompt "
+                            "admission fails the same prompt at trace "
+                            "time)")
+            reqs = [self.queue.pop(0) for _ in range(take)]
+            rows = self._row_bucket(take)
+            # largest pow2 grid with rows*ccols <= chunk_tokens, floored
+            # at min_bucket (rows <= chunk_tokens // min_bucket keeps the
+            # floor within budget), capped at the longest prompt's bucket
+            ccols = max(self.min_bucket,
+                        _pow2_floor(max(1, self.chunk_tokens // rows)))
+            ccols = min(ccols, self._bucket(longest))
+            for r in reqs:
+                r.admit_tick = self.tick_no
+            self._jobs.append(_PrefillJob(
+                reqs=list(reqs) + [None] * (rows - take),
+                rows=rows, ccols=ccols,
+                consumed=np.zeros((rows,), np.int32),
+                scratch=R.init_cache(self.cfg, rows, self.max_len),
+                dscratch=(R.init_cache(self.cfg, rows, self.max_len)
+                          if self.speculate else None)))
+            in_flight += take
+
+    def _advance_prefill(self, decode_live: bool) -> int:
+        """Advance pending prefill jobs under the per-tick token budget.
+
+        Shortest-remaining-first and work-conserving: jobs spend the
+        budget in ascending order of remaining prompt tokens (a short
+        prompt queued behind a long one finishes its one chunk instead
+        of waiting out the long prompt's many), each at the largest
+        power-of-two chunk width the leftover budget affords; a job
+        starved for ``PREFILL_AGING_TICKS`` consecutive decode-live
+        ticks jumps the order, so long prompts cannot starve.  Total
+        padded prefill work in a decode-live tick stays within
+        ``chunk_tokens`` — the stall contract.  When NO decode-live slot
+        exists there is nobody to stall, so every job advances one
+        full-width chunk instead (burst starts drain at whole-prompt
+        speed; ``max_prefill_tokens_tick`` only samples decode-live
+        ticks, so the contract is untouched).  Returns the number of
+        rows worked (step()'s progress accounting)."""
+        worked = 0
+        budget = self.chunk_tokens
+        if decode_live:
+            # shortest-remaining-first: a short prompt's TTFT is won or
+            # lost here, while a long prompt's is dominated by its own
+            # chunk count — but a budget-starved job (skipped
+            # PREFILL_AGING_TICKS decode-live ticks in a row) jumps the
+            # order, FIFO among the aged, so longs can't starve
+            aged, rest = [], []
+            for j in self._jobs:
+                (aged if j.skipped >= PREFILL_AGING_TICKS
+                 else rest).append(j)
+            order = aged + sorted(rest, key=_PrefillJob.remaining)
+        else:
+            order = list(self._jobs)
+        for job in order:
+            if decode_live:
+                if budget // job.rows < self.min_bucket:
+                    job.skipped += 1     # a narrower job may still fit
+                    continue
+                width = min(job.ccols, _pow2_floor(budget // job.rows))
+                job.skipped = 0
+            else:
+                width = job.ccols
+            worked += self._launch_chunk(job, width)
+            budget -= job.rows * width
+        self._jobs = [j for j in self._jobs
+                      if any(r is not None for r in j.reqs)]
+        return worked
+
+    def _launch_chunk(self, job: _PrefillJob, width: int) -> int:
+        """One ``(job.rows, width)`` chunk launch; rows whose prompt ends
+        inside the chunk sample their first token from the chunk logits
+        (TTFT stops here) and seat straight into a free decode slot —
+        or, when none is free, park with a 1-row copy of their cache
+        until ``_fill_slots`` seats them."""
+        active = [i for i, r in enumerate(job.reqs) if r is not None]
+        if not active:                   # every row cancelled mid-flight
+            return 0
+        toks = np.zeros((job.rows, width), np.int32)
+        cl = np.zeros((job.rows,), np.int32)
+        for i in active:
+            r = job.reqs[i]
+            c = int(job.consumed[i])
+            n = min(len(r.prompt) - c, width)
+            toks[i, :n] = r.prompt[c:c + n]
+            cl[i] = n
+        batch = {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(cl)}
+        off = jnp.asarray(job.consumed)
+        self._note_shape("prefill_chunk", self._chunk_ent,
+                         (self._params_digest, job.rows, width,
+                          self.max_len))
+        logits, job.scratch = self._prefill_chunk(
+            self._dparams, batch, job.scratch, off)
+        if job.dscratch is not None:
+            # the draft rung consumes the same chunks in lockstep so its
+            # state agrees with the target's committed prompt
+            self._note_shape("prefill_chunk", self._chunk_ent,
+                             (self._draft_digest, job.rows, width,
+                              self.max_len))
+            _, job.dscratch = self._prefill_chunk(
+                self._draft, batch, job.dscratch, off)
+        self.prefill_chunks += 1
+        self._tick_prefill_tokens += job.rows * width
+        fin = [i for i in active
+               if int(job.consumed[i]) + int(cl[i])
+               == len(job.reqs[i].prompt)]
+        # rebind, never mutate in place: ``off`` above may be a zero-copy
+        # view of this buffer still owned by the async chunk launch
+        job.consumed = job.consumed + cl
+        if fin:
+            temps = np.zeros((job.rows,), np.float32)
+            for i in fin:
+                temps[i] = job.reqs[i].temperature
+            self.key, sub = jax.random.split(self.key)
+            first = _choose_tokens(logits, jnp.asarray(temps), sub)
+            first_host = None
+            free = self._free_slots()
+            for i in fin:
+                req = job.reqs[i]
+                # a finished row must leave the job NOW: riding a later
+                # chunk with lengths==0, its clamped last-index gather
+                # would scribble its own scratch row
+                job.reqs[i] = None
+                req.token_ticks = [self.tick_no]
+                # the prefill token may already complete the request
+                # (same liveness rule as the decode tick)
+                alive = req.max_new_tokens > 1 \
+                    and len(req.prompt) < self.max_len - 1
+                if not alive:
+                    if first_host is None:
+                        first_host = np.asarray(first)   # one pull, rare
+                        self.host_syncs += 1
+                    req.out_tokens = [int(first_host[i])]
+                    req.done = True
+                    self.completed.append(req)
+                    self._cancel_freed = True   # shrink check still runs
+                    continue
+                if free and not self._parked:   # parked rows seat first
+                    self._seat(free.pop(0), req, first[i],
+                               job.scratch, job.dscratch, i)
+                    continue
+                park = _slot_write(
+                    R.init_cache(self.cfg, 1, self.max_len),
+                    job.scratch, self._axes, 0, i)
+                dpark = None
+                if job.dscratch is not None:
+                    dpark = _slot_write(
+                        R.init_cache(self.cfg, 1, self.max_len),
+                        job.dscratch, self._axes, 0, i)
+                self._parked.append((req, first[i], park, dpark))
+        return len(active)
+
+    def _seat(self, s: int, req: Request, first, tree, dtree,
+              row: int) -> None:
+        """Splice a prefill-finished row into decode slot ``s``.  The
+        row's first token is already sampled/stamped, so ``_harvest``
+        sees ``tcount`` 1 with one stamped tick and stamps nothing."""
+        self.cache = _slot_write(self.cache, tree, self._axes, s, row)
+        if dtree is not None:
+            self._dcache = _slot_write(self._dcache, dtree,
+                                       self._axes, s, row)
+        self.slot_req[s] = req
+        self.slot_pos[s] = len(req.prompt)
+        self._tok = self._tok.at[s, 0].set(first)
+        self._out = self._out.at[s, 0].set(first)
+        self._pos = self._pos.at[s].set(len(req.prompt))
+        self._tcount = self._tcount.at[s].set(1)
+        self._live = self._live.at[s].set(True)
+        self._temps = self._temps.at[s].set(req.temperature)
+        self._maxnew = self._maxnew.at[s].set(req.max_new_tokens)
+
+    def _fill_slots(self) -> None:
+        """Seat parked rows (prefill done, first token sampled) into
+        free decode slots, FIFO."""
+        if not self._parked:
+            return
+        free = self._free_slots()
+        while self._parked and free:
+            req, first, park, dpark = self._parked.pop(0)
+            self._seat(free.pop(0), req, first, park, dpark, 0)
+
     def _admit_host(self) -> None:
         for slot in range(self.pool):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
             req = self.queue.pop(0)
+            self.prefill_chunks += 1
+            self._tick_prefill_tokens += len(req.prompt)
             scratch = R.init_cache(self.cfg, 1, self.max_len)
             batch = {"tokens": jnp.asarray(req.prompt[None, :])}
             logits, scratch = self._prefill(self.params, batch, scratch)
@@ -780,13 +1193,26 @@ class ServeEngine:
 
         The fast path runs ``ticks_per_sync`` jitted ticks before the
         completion-check pull; the return value is then an upper bound on
-        tokens emitted (exact at the default of 1).
+        tokens emitted (exact at the default of 1).  Under chunked
+        prefill the pending jobs advance under the tick's token budget
+        first and their worked rows count toward the return value
+        (progress, not tokens), so drive loops don't stop while prefill
+        is pending.
         """
+        decode_live = any(r is not None for r in self.slot_req)
+        self._tick_prefill_tokens = 0
         self._admit()
+        prefill_rows = self._advance_prefill(decode_live) \
+            if self._jobs else 0
+        if self.chunk_tokens:
+            self._fill_slots()
+        if decode_live and self._tick_prefill_tokens:
+            self.max_prefill_tokens_tick = max(
+                self.max_prefill_tokens_tick, self._tick_prefill_tokens)
         emitted = self._step_device() if self.fast_path \
             else self._step_host()
         self.tick_no += 1
-        return emitted
+        return emitted + prefill_rows
 
     def _step_device(self) -> int:
         live_before = sum(r is not None for r in self.slot_req)
@@ -859,7 +1285,11 @@ class ServeEngine:
         # pool drained by cancellations stays wide until the next finish
         self._cancel_freed = False
         if self.elastic and not self.queue:
-            n_live = sum(r is not None for r in self.slot_req)
+            # parked rows and in-flight job rows claim slots next — never
+            # shrink them out from under _fill_slots
+            n_live = sum(r is not None for r in self.slot_req) \
+                + len(self._parked) + sum(
+                    r is not None for j in self._jobs for r in j.reqs)
             self._resize(self._pool_for(n_live))
 
     def _step_host(self) -> int:

@@ -45,6 +45,15 @@ carries an extra time axis at ``ax+1`` (length k+1); leaves without a
 batch axis (e.g. ``index``) are not snapshotted — the engine owns
 positions.  ``SPEC_M_MAX`` mirrors the decode GEMV kernels' M ceiling:
 the engine clamps its slot pool so pool*(k+1) never leaves them.
+
+Chunked prefill composes for free: ``spec_tick`` is decode-only, so an
+engine built with ``chunk_tokens=N`` interleaves its chunk launches
+between speculative ticks exactly as it does between plain ticks.  The
+only coupling is admission-side and lives in the engine: each prefill
+job carries a DRAFT scratch cache that consumes the same chunks in
+lockstep with the target's, so a row spliced into the pool lands with
+both caches agreeing on the committed prompt — the invariant every
+launch of steps 1-3 starts from.
 """
 from __future__ import annotations
 

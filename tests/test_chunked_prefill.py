@@ -1,0 +1,286 @@
+"""Chunked prefill: resumable mid-prompt continuation + engine scheduler.
+
+Two layers under test:
+
+* ``registry.prefill_chunk`` — per-family continuation hook.  A chain of
+  chunk calls over a split prompt must reproduce whole-prompt ``prefill``
+  exactly: same last-position logits (greedy argmax), same cache rows.
+  Rows are spliced out at the chunk where their prompt ends (the engine
+  contract — a ``lengths == 0`` row may scribble its own cache row, so
+  finished rows never ride later chunks).
+* ``ServeEngine(chunk_tokens=N)`` — the token-budget scheduler that
+  interleaves one chunk launch per tick with the decode tick.  Greedy
+  outputs must be bit-identical to the unchunked engine and the slow
+  host loop; cancel() mid-prefill must free the slot, the job's budget
+  share and its scratch cache; non-chunkable families (whisper) must
+  fall back LOUDLY to whole-prompt admission.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_CONFIGS, ARCHS, reduced
+from repro.models import registry as R
+from repro.serve.engine import ServeEngine, _batch_axes, _slot_write
+
+KEY = jax.random.PRNGKey(0)
+CHUNK_ARCHS = ["rwkv6-3b", "rwkv7-0.1b", "llama3-8b", "minicpm3-4b",
+               "jamba-1.5-large-398b"]
+
+
+def _reduced(name):
+    base = ALL_CONFIGS[name]
+    kw = dict(vocab_size=128)
+    kw["n_layers"] = base.attn_every if base.family == "hybrid" else 2
+    return reduced(base, **kw)
+
+
+# --------------------------------------------------------------------------- #
+#  Model layer: chunk-chain == whole-prompt prefill
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("arch", CHUNK_ARCHS)
+def test_chunk_chain_matches_whole_prefill(arch):
+    """C=8 chunk chain over mixed-length prompts: per-row final logits
+    argmax and greedy decode continuation match one whole ragged
+    prefill.  Rows splice out at their finishing chunk, exactly like the
+    engine does."""
+    cfg = _reduced(arch)
+    assert R.supports_chunked_prefill(cfg), arch
+    params = R.init_params(cfg, KEY)
+    rng = np.random.default_rng(0)
+    lens = (5, 21, 13)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in lens]
+    B, P, C, max_len = len(lens), 32, 8, 64
+
+    padded = np.zeros((B, P), np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, :len(p)] = p
+    lg_ref, c_ref = R.prefill(
+        cfg, params, {"tokens": jnp.asarray(padded),
+                      "lengths": jnp.asarray(lens)},
+        R.init_cache(cfg, B, max_len))
+
+    axes = _batch_axes(cfg, max_len)
+    pool = R.init_cache(cfg, B, max_len)     # splice-at-finish target
+    cache = R.init_cache(cfg, B, max_len)
+    offset = np.zeros((B,), np.int32)
+    final_lg = np.zeros((B, cfg.vocab_size), np.float32)
+    for j in range(0, P, C):
+        toks = np.zeros((B, C), np.int32)
+        cl = np.zeros((B,), np.int32)
+        for i, p in enumerate(prompts):
+            n = min(max(0, len(p) - j), C)
+            cl[i] = n
+            toks[i, :n] = p[j:j + n]
+        lg, cache = R.prefill_chunk(
+            cfg, params, {"tokens": jnp.asarray(toks),
+                          "lengths": jnp.asarray(cl)},
+            cache, jnp.asarray(offset))
+        for i in range(B):
+            if cl[i] > 0 and offset[i] + cl[i] == lens[i]:
+                final_lg[i] = np.asarray(lg[i])
+                pool = _slot_write(pool, cache, axes, i, i)
+        offset += cl
+    assert np.array_equal(final_lg.argmax(-1),
+                          np.asarray(lg_ref).argmax(-1)), arch
+
+    # greedy decode continuation from the spliced rows == reference
+    pool = dict(pool, index=jnp.asarray(lens, jnp.int32))
+    t_ref = jnp.argmax(lg_ref, -1).astype(jnp.int32)[:, None]
+    t_chk = jnp.asarray(final_lg.argmax(-1), jnp.int32)[:, None]
+    for _ in range(4):
+        lr, c_ref = R.decode_step(cfg, params, c_ref, t_ref)
+        lc, pool = R.decode_step(cfg, params, pool, t_chk)
+        t_ref = jnp.argmax(lr, -1).astype(jnp.int32)[:, None]
+        t_chk = jnp.argmax(lc, -1).astype(jnp.int32)[:, None]
+        assert np.array_equal(np.asarray(t_ref), np.asarray(t_chk)), arch
+
+
+# --------------------------------------------------------------------------- #
+#  Engine scheduler
+# --------------------------------------------------------------------------- #
+def _drive(cfg, params, prompts, n_new=4, **kw):
+    eng = ServeEngine(cfg, params, n_slots=4, max_len=64, **kw)
+    uids = [eng.submit(p, max_new_tokens=n_new) for p in prompts]
+    done = eng.run_until_drained(max_ticks=800)
+    assert len(done) == len(prompts)
+    by = {r.uid: r for r in done}
+    return eng, [by[u].out_tokens for u in uids]
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "llama3-8b"])
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+def test_engine_chunked_greedy_bit_identical(arch, chunk):
+    cfg = _reduced(arch)
+    params = R.init_params(cfg, KEY)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(n)).astype(np.int32)
+               for n in (5, 21, 13, 30, 2, 17, 9, 26)]
+    _, ref = _drive(cfg, params, prompts, fast_path=False)
+    chk, out = _drive(cfg, params, prompts, chunk_tokens=chunk)
+    assert out == ref
+    assert chk.prefill_chunks > 0
+    assert chk.max_decode_stall_ticks <= 1
+    # retraces bounded by the pow2 chunk-shape grid: (rows, ccols) pairs
+    assert chk.jit_recompiles["prefill_chunk"] <= 4, chk.jit_recompiles
+    for r in chk.completed:
+        assert r.token_ticks[0] >= r.admit_tick >= r.submit_tick
+
+
+def test_engine_long_prompt_interleaves_with_decode():
+    """A long prompt admitted while short streams decode advances one
+    chunk per tick and never stalls decode for more than one chunk's
+    worth of work; inter-token gaps of the live streams stay 1 tick."""
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=2, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    rng = np.random.default_rng(5)
+    eng = ServeEngine(cfg, params, n_slots=4, max_len=256, chunk_tokens=16)
+    short = [eng.submit(rng.integers(0, 64, size=6).astype(np.int32),
+                        max_new_tokens=24) for _ in range(2)]
+    eng.step()                                # shorts admitted + decoding
+    long_uid = eng.submit(
+        rng.integers(0, 64, size=120).astype(np.int32), max_new_tokens=4)
+    done = {r.uid: r for r in eng.run_until_drained(max_ticks=400)}
+    assert len(done) == 3
+    assert eng.max_decode_stall_ticks <= 1
+    # the 120-token prompt took multiple chunk launches
+    assert eng.prefill_chunks >= 120 // 16
+    # short streams kept emitting exactly one token per tick while the
+    # long prefill was in flight (the splice token shares its tick with
+    # the first decode token, same as whole-prompt admission)
+    for u in short:
+        gaps = np.diff(done[u].token_ticks[1:])
+        assert (gaps == 1).all(), done[u].token_ticks
+    assert done[long_uid].token_ticks[0] > done[long_uid].admit_tick
+
+
+def test_cancel_mid_chunked_prefill_frees_slot_budget_and_cache():
+    """cancel() on a request mid-chunked-prefill: the row is dropped at
+    once, the job (scratch cache + per-tick budget share) goes with its
+    last row, and survivors' greedy outputs are bit-identical to a run
+    that never saw the doomed request."""
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=2, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    rng = np.random.default_rng(9)
+    survivors = [rng.integers(0, 64, size=n).astype(np.int32)
+                 for n in (5, 12, 7)]
+    doomed_prompt = rng.integers(0, 64, size=40).astype(np.int32)
+
+    def run(with_doomed):
+        eng = ServeEngine(cfg, params, n_slots=4, max_len=64,
+                          chunk_tokens=8)
+        uids = [eng.submit(p, max_new_tokens=4) for p in survivors[:1]]
+        doomed = eng.submit(doomed_prompt, max_new_tokens=4) \
+            if with_doomed else None
+        uids += [eng.submit(p, max_new_tokens=4) for p in survivors[1:]]
+        eng.step()        # jobs formed; head job advanced one chunk
+        if with_doomed:
+            # the 40-token prompt needs 5 chunks: still mid-prefill
+            assert any(r is not None and r.uid == doomed
+                       for job in eng._jobs for r in job.reqs)
+            n_jobs = len(eng._jobs)
+            assert eng.cancel(doomed) is True
+            # job dropped immediately (single-row job), scheduler budget
+            # + scratch cache released with it
+            assert len(eng._jobs) == n_jobs - 1
+            assert all(r is None or r.uid != doomed for r in eng.slot_req)
+            assert all(r is None or r.uid != doomed
+                       for job in eng._jobs for r in job.reqs)
+        done = {r.uid: r for r in eng.run_until_drained(max_ticks=400)}
+        if with_doomed:
+            # cancelled before the drive: lives in eng.completed, not in
+            # the drive's returned window (run_until_drained contract)
+            done.pop(doomed, None)
+            d = next(r for r in eng.completed if r.uid == doomed)
+            assert d.cancelled and d.done and d.out_tokens == []
+            assert d.token_ticks == []
+        assert not eng._jobs and not eng._parked
+        assert len(done) == len(survivors)
+        return {tuple(r.prompt.tolist()): r.out_tokens
+                for r in done.values()}
+
+    assert run(True) == run(False)
+
+
+def test_cancel_mid_prefill_is_not_double_completed():
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=1, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=64, chunk_tokens=8)
+    uid = eng.submit(np.arange(30, dtype=np.int32), max_new_tokens=4)
+    eng.step()
+    assert eng.cancel(uid) is True       # mid-prefill
+    assert eng.cancel(uid) is False      # already cancelled
+    eng.run_until_drained(max_ticks=50)
+    assert sum(r.uid == uid for r in eng.completed) == 1
+
+
+# --------------------------------------------------------------------------- #
+#  Capability checks and fallbacks
+# --------------------------------------------------------------------------- #
+def test_whisper_reports_no_chunked_support():
+    cfg = ARCHS["whisper-large-v3"]
+    assert not R.supports_chunked_prefill(cfg)
+    with pytest.raises(NotImplementedError, match="prefill_chunk"):
+        R.prefill_chunk(cfg, {}, {}, {}, 0)
+
+
+def test_non_chunkable_family_warns_and_serves_whole_prompt(monkeypatch):
+    """chunk_tokens on a family without prefill_chunk must not silently
+    misbehave: a UserWarning fires at construction and the engine serves
+    via whole-prompt admission, bit-identical to chunk_tokens=0."""
+    from repro.models import rwkv6
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=2, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, 64, size=n).astype(np.int32)
+               for n in (5, 21, 13)]
+    _, ref = _drive(cfg, params, prompts)          # chunk_tokens=0
+    monkeypatch.setattr(rwkv6, "SUPPORTS_CHUNKED_PREFILL", False)
+    with pytest.warns(UserWarning, match="prefill_chunk"):
+        eng, out = _drive(cfg, params, prompts, chunk_tokens=16)
+    assert eng.chunk_tokens == 0                   # loud fallback engaged
+    assert out == ref
+    for r in eng.completed:                        # legacy stamp contract
+        assert r.token_ticks[0] == r.admit_tick
+
+
+def test_chunk_tokens_below_min_bucket_rejected():
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=1, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    with pytest.raises(ValueError, match="chunk_tokens"):
+        ServeEngine(cfg, params, n_slots=1, max_len=64, chunk_tokens=4)
+
+
+def test_chunked_rejects_prompt_overflowing_kv_cache():
+    """KV-cache families: a prompt longer than max_len would silently
+    clamp chunk writes — the scheduler must refuse it up front (the
+    whole-prompt path fails the same prompt at trace time)."""
+    cfg = reduced(ARCHS["llama3-8b"], n_layers=1, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, n_slots=1, max_len=32, chunk_tokens=8)
+    eng.submit(np.zeros(40, np.int32), max_new_tokens=2)
+    with pytest.raises(ValueError, match="cannot fit"):
+        eng.step()
+
+
+def test_chunked_constant_state_serves_prompt_longer_than_max_len():
+    """RWKV's O(1) state has no capacity axis: a prompt longer than
+    max_len still prefills in chunks; the prefill token completes the
+    request (no cache room to decode), matching whole-prompt admission."""
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=1, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    prompt = np.random.default_rng(2).integers(
+        0, 64, size=40).astype(np.int32)
+    outs = {}
+    for chunk in (0, 8):
+        eng = ServeEngine(cfg, params, n_slots=1, max_len=32,
+                          chunk_tokens=chunk)
+        eng.submit(prompt, max_new_tokens=8)
+        done = eng.run_until_drained(max_ticks=100)
+        assert len(done) == 1 and done[0].done
+        outs[chunk] = done[0].out_tokens
+    assert len(outs[8]) == 1 and outs[8] == outs[0]

@@ -18,6 +18,13 @@ The trace space also spans a ``speculate`` dimension: the self-
 speculative draft-verify path (``serve/speculate.py``) must keep every
 structural invariant and stay greedy-bit-identical to the plain fast
 path under the same arrival schedule.
+
+A ``chunk_tokens`` dimension spans the chunked-prefill scheduler:
+random traces must stay greedy-bit-identical across chunk sizes, against
+the unchunked fast path and the slow host loop, and with ``speculate``
+enabled on top.  Chunked admission relaxes exactly one stamp invariant:
+``token_ticks[0] >= admit_tick`` (prefill spans ticks) instead of
+equality.
 """
 import numpy as np
 import pytest
@@ -56,7 +63,7 @@ SETTINGS = dict(max_examples=5, deadline=None,
 
 
 def _drive(trace, fast: bool, n_slots: int = 4, seed: int = 0,
-           speculate: int = 0):
+           speculate: int = 0, chunk_tokens: int = 0):
     """Run one arrival schedule to completion; returns (engine, steps).
 
     Requests are submitted in arrival-tick order (ties keep trace order),
@@ -70,7 +77,8 @@ def _drive(trace, fast: bool, n_slots: int = 4, seed: int = 0,
     if speculate:
         kw = dict(speculate=speculate, draft_params=DRAFT_PARAMS)
     eng = ServeEngine(CFG, PARAMS, n_slots=n_slots, max_len=MAX_LEN,
-                      fast_path=fast, seed=seed, **kw)
+                      fast_path=fast, seed=seed, chunk_tokens=chunk_tokens,
+                      **kw)
     i = steps = 0
     while True:
         while i < len(order) and trace[order[i]][3] <= eng.tick_no:
@@ -86,7 +94,7 @@ def _drive(trace, fast: bool, n_slots: int = 4, seed: int = 0,
     return eng, steps
 
 
-def _check_common(eng, steps, trace):
+def _check_common(eng, steps, trace, chunked: bool = False):
     # no request dropped
     assert len(eng.completed) == len(trace)
     assert sorted(r.uid for r in eng.completed) == \
@@ -102,7 +110,12 @@ def _check_common(eng, steps, trace):
     for r in by_uid:
         assert len(r.out_tokens) == r.max_new_tokens, r
         assert len(r.token_ticks) == len(r.out_tokens), r
-        assert r.token_ticks[0] == r.admit_tick, r
+        if chunked:
+            # prefill spans ticks: the first token lands at or after the
+            # tick prefill started (admit_tick)
+            assert r.token_ticks[0] >= r.admit_tick, r
+        else:
+            assert r.token_ticks[0] == r.admit_tick, r
         assert r.token_ticks == sorted(r.token_ticks), r
     # sync budget: <= 2 completion-check pulls per step, plus one
     # admission pull per request whose prefill token already finishes it
@@ -169,3 +182,44 @@ def test_speculative_mixed_temperature_invariants(trace, speculate):
     structural invariants are checked — RNG streams differ)."""
     eng, steps = _drive(trace, fast=True, speculate=speculate)
     _check_common(eng, steps, trace)
+
+
+@settings(**SETTINGS)
+@given(trace=TRACE, chunk_tokens=st.sampled_from([8, 16, 32]))
+def test_chunked_prefill_greedy_bit_identical(trace, chunk_tokens):
+    """Chunked prefill is a pure scheduling change: greedy outputs are
+    bit-identical across chunk sizes, to the unchunked fast path, and
+    to the slow host loop, under the same arrival schedule."""
+    trace = [(L, n, 0.0, a) for (L, n, _, a) in trace]
+    chk, steps = _drive(trace, fast=True, chunk_tokens=chunk_tokens)
+    ref, _ = _drive(trace, fast=True)
+    slow, _ = _drive(trace, fast=False)
+    _check_common(chk, steps, trace, chunked=True)
+    out = {r.uid: r.out_tokens for r in chk.completed}
+    assert out == {r.uid: r.out_tokens for r in ref.completed}
+    assert out == {r.uid: r.out_tokens for r in slow.completed}
+    assert chk.max_decode_stall_ticks <= 1
+    assert not chk._jobs and not chk._parked      # scheduler drained
+
+
+@settings(**SETTINGS)
+@given(trace=TRACE, chunk_tokens=st.sampled_from([0, 8, 16]))
+def test_chunked_mixed_temperature_invariants(trace, chunk_tokens):
+    """Sampled requests under chunked admission keep the structural
+    invariants (token equality is greedy-only: RNG streams differ)."""
+    eng, steps = _drive(trace, fast=True, chunk_tokens=chunk_tokens)
+    _check_common(eng, steps, trace, chunked=chunk_tokens > 0)
+
+
+@settings(**SETTINGS)
+@given(trace=TRACE, chunk_tokens=st.sampled_from([8, 16]))
+def test_chunked_speculative_greedy_bit_identical(trace, chunk_tokens):
+    """Chunked admission composes with the draft-verify decode tick:
+    greedy outputs still match the plain fast path token for token."""
+    trace = [(L, n, 0.0, a) for (L, n, _, a) in trace]
+    spec, steps = _drive(trace, fast=True, speculate=2,
+                         chunk_tokens=chunk_tokens)
+    ref, _ = _drive(trace, fast=True)
+    _check_common(spec, steps, trace, chunked=True)
+    out = {r.uid: r.out_tokens for r in spec.completed}
+    assert out == {r.uid: r.out_tokens for r in ref.completed}
