@@ -34,6 +34,18 @@ here rather than shipping as a latency cliff.  Without the JSON the
 latency gate is skipped with a note (the coverage gate above is
 analytic and always runs).
 
+The quantized state cache is gated on both sides of its trade:
+
+* ``max_state_bytes_ratio`` — analytic int8 state-bytes-per-slot vs the
+  float cache (from ``coverage.state_cache_report`` over the packed
+  ``init_cache`` tree; always runs).  A pack-layout change that bloats
+  the per-slot footprint — and silently erodes the slots-per-device
+  multiplier — fails here;
+* ``max_state_ppl_delta`` — the measured int8 teacher-forced PPL delta
+  from the ``state_cache`` section of ``BENCH_decode.json`` (skipped
+  with a note when absent, like the latency gate).  A quantizer change
+  that trades memory for too much quality fails here.
+
 Runs in interpret mode on CPU (the report is analytic — no TPU needed)
 and exits non-zero on regression, so a dispatch-rule change that
 silently drops a leaf back to the XLA dequant path fails CI instead of
@@ -98,6 +110,46 @@ def _latency_failures(thr) -> list:
     return failures
 
 
+def _state_cache_failures(thr, cfg) -> list:
+    """Quantized-state gates: analytic bytes-per-slot + measured PPL."""
+    from benchmarks.decode_throughput import BURSTY_MAX_LEN
+    from repro.core.policy import STATE_INT8
+
+    failures = []
+    rep = coverage.state_cache_report(cfg, STATE_INT8, BURSTY_MAX_LEN)
+    max_ratio = thr.get("max_state_bytes_ratio", 0.5)
+    if rep["ratio"] > max_ratio:
+        failures.append(
+            f"int8 state bytes/slot {rep['state_bytes_per_slot']} is "
+            f"{rep['ratio']:.4f} of float > max_state_bytes_ratio="
+            f"{max_ratio}")
+    else:
+        print(f"\nstate-cache bytes gate OK: int8 "
+              f"{rep['state_bytes_per_slot']} B/slot = {rep['ratio']:.4f} "
+              f"of float <= {max_ratio}")
+
+    if not os.path.exists(BENCH_JSON):
+        print("[state-cache PPL gate skipped: BENCH_decode.json not "
+              "found — run `python -m benchmarks.run --only decode` "
+              "first]")
+        return failures
+    with open(BENCH_JSON) as f:
+        sc = json.load(f).get("state_cache", {}).get("int8")
+    if sc is None:
+        print("[state-cache PPL gate skipped: no state_cache section in "
+              "BENCH_decode.json — re-run the decode benchmark]")
+        return failures
+    max_delta = thr.get("max_state_ppl_delta", 0.1)
+    if sc["ppl_delta"] > max_delta:
+        failures.append(
+            f"int8 state-cache ppl delta {sc['ppl_delta']:+.4f} > "
+            f"max_state_ppl_delta={max_delta}")
+    else:
+        print(f"state-cache PPL gate OK: int8 delta "
+              f"{sc['ppl_delta']:+.4f} <= {max_delta}")
+    return failures
+
+
 def main() -> int:
     with open(THRESHOLDS) as f:
         thr = json.load(f)
@@ -134,6 +186,7 @@ def main() -> int:
         failures.append(
             f"draft byte ratio {draft_report['ratio']:.4f} > "
             f"max_draft_byte_ratio={dmax_ratio}")
+    failures += _state_cache_failures(thr, cfg)
     failures += _latency_failures(thr)
     if failures:
         print("\ncoverage guard FAILED:")

@@ -58,6 +58,13 @@ measurements on a reduced RWKV6 with the paper's 3.275-bpw hybrid policy:
      than the baseline — a long prompt's OWN first token lands later by
      design, its prefill being spread across ticks — and chunk retraces
      bounded by the power-of-two (rows, ccols) shape grid.
+  8. STATE CACHE — quantized recurrent-state / KV cache
+     (``StateCacheSpec``): analytic state-bytes-per-slot and
+     slots-per-device at a fixed memory budget for the int8 / fp8 /
+     vq_wkv presets (int8 asserted >= 2x float slots), teacher-forced
+     synthetic-eval PPL delta vs the float cache (int8 asserted
+     < 0.1), and the int8 engine's bursty-trace tokens/sec +
+     greedy-divergence prefix lengths vs the float-state outputs.
 
 Emits ``BENCH_decode.json`` at the repo root so the perf trajectory is
 tracked PR-over-PR, plus the usual CSV rows.
@@ -470,6 +477,115 @@ def _speculative(cfg, params, bursty_ref):
 
 
 # --------------------------------------------------------------------------- #
+#  Quantized state cache: slots at fixed memory, PPL delta, divergence
+# --------------------------------------------------------------------------- #
+STATE_MEM_BUDGET = 8 << 20    # bytes of HBM earmarked for decode state
+STATE_PPL_TOKENS = 48         # teacher-forced eval length
+STATE_PPL_BATCH = 4
+STATE_SLOTS_MIN_GAIN = 2.0    # int8 must at least double slots-per-device
+STATE_PPL_DELTA_MAX = 0.1     # ... at under this synthetic-eval PPL cost
+
+
+def _teacher_forced_ppl(cfg, qp, spec) -> float:
+    """Synthetic-eval perplexity of the quantized model decoding with a
+    (possibly quantized) state cache: teacher-forced ``decode_step``
+    over a fixed random token sequence, so the ONLY difference between
+    specs is the per-step state pack/unpack round-trip."""
+    import jax.numpy as jnp
+
+    B, T = STATE_PPL_BATCH, STATE_PPL_TOKENS
+    rng = np.random.default_rng(23)
+    toks = rng.integers(0, cfg.vocab_size, size=(B, T)).astype(np.int32)
+    cache = dict(R.init_cache(cfg, B, T + 2, spec),
+                 index=jnp.zeros((B,), jnp.int32))
+    step = jax.jit(lambda c, t, i: R.decode_step(
+        cfg, qp, dict(c, index=i), t, state_spec=spec))
+    idx = jnp.zeros((B,), jnp.int32)
+    logp, n = 0.0, 0
+    for i in range(T - 1):
+        logits, cache = step(cache, jnp.asarray(toks[:, i:i + 1]), idx + i)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        logp += float(jnp.sum(lp[jnp.arange(B), toks[:, i + 1]]))
+        n += B
+    return float(np.exp(-logp / n))
+
+
+def _divergence(outputs, ref):
+    """Greedy-divergence stats of quantized-state outputs vs the float
+    reference: per-request length of the matching prefix."""
+    prefix = []
+    for uid, toks in ref.items():
+        got = outputs[uid]
+        m = 0
+        while m < min(len(toks), len(got)) and toks[m] == got[m]:
+            m += 1
+        prefix.append((m, len(toks)))
+    return {
+        "n_requests": len(prefix),
+        "n_identical": sum(1 for m, n in prefix if m == n),
+        "mean_prefix": float(np.mean([m for m, _ in prefix])),
+        "min_prefix": int(min(m for m, _ in prefix)),
+        "mean_tokens": float(np.mean([n for _, n in prefix])),
+    }
+
+
+def _state_cache(cfg, qp, bursty_ref):
+    """Quantized-state serving: memory, quality and throughput.
+
+    * slots-per-device at a fixed state-memory budget (analytic, from
+      ``coverage.state_cache_report`` over the packed init_cache tree);
+    * teacher-forced synthetic-eval PPL delta vs the float state cache;
+    * greedy-divergence prefix lengths and tokens/sec of the int8 engine
+      on the bursty trace, vs the float-state reference outputs.
+
+    Asserts the headline: int8 state at least doubles slots-per-device
+    at the budget AND costs < ``STATE_PPL_DELTA_MAX`` PPL.
+    """
+    from repro.core.policy import STATE_FP8, STATE_INT8, STATE_VQ_WKV
+
+    specs = {"int8": STATE_INT8, "fp8": STATE_FP8, "vq_wkv": STATE_VQ_WKV}
+    out = {"max_len": BURSTY_MAX_LEN, "memory_budget": STATE_MEM_BUDGET,
+           "ppl_eval": {"batch": STATE_PPL_BATCH,
+                        "tokens": STATE_PPL_TOKENS}}
+    ppl_float = _teacher_forced_ppl(cfg, qp, None)
+    out["float"] = {
+        "ppl": ppl_float,
+        "memory": coverage.state_cache_report(
+            cfg, None, BURSTY_MAX_LEN, memory_budget=STATE_MEM_BUDGET)}
+    for name, spec in specs.items():
+        mem = coverage.state_cache_report(
+            cfg, spec, BURSTY_MAX_LEN, memory_budget=STATE_MEM_BUDGET)
+        ppl = _teacher_forced_ppl(cfg, qp, spec)
+        out[name] = {
+            "memory": mem,
+            "slots_gain": mem["slots_at_budget"]["packed"]
+            / max(mem["slots_at_budget"]["float"], 1),
+            "ppl": ppl,
+            "ppl_delta": ppl - ppl_float,
+        }
+
+    # int8 is the operating point: serve the bursty trace with it and
+    # measure divergence + throughput against the float-state outputs
+    b = _drive_bursty(
+        cfg, qp, True, "xla",
+        engine_factory=lambda: ServeEngine(
+            cfg, qp, n_slots=BURSTY_N_SLOTS, max_len=BURSTY_MAX_LEN,
+            fast_path=True, impl="xla", state_spec=STATE_INT8))
+    out["int8"]["divergence"] = _divergence(b["outputs"], bursty_ref)
+    del b["outputs"]
+    out["int8"]["bursty"] = b
+
+    i8 = out["int8"]
+    assert i8["slots_gain"] >= STATE_SLOTS_MIN_GAIN, \
+        (i8["slots_gain"], STATE_SLOTS_MIN_GAIN)
+    assert i8["ppl_delta"] < STATE_PPL_DELTA_MAX, \
+        (i8["ppl_delta"], STATE_PPL_DELTA_MAX)
+    out["metric"] = {"state_bytes_per_slot":
+                     coverage.METRIC_DEFINITIONS["state_bytes_per_slot"]}
+    return out
+
+
+# --------------------------------------------------------------------------- #
 #  Cold start: artifact load vs re-quantization, cold vs warm closure cache
 # --------------------------------------------------------------------------- #
 def _cold_start(cfg, params, qp, policy):
@@ -584,6 +700,24 @@ def run(print_csv=print):
     # 5. self-speculative decode: ladder artifact + draft-verify engine
     spec = _speculative(cfg, params, bursty["slow_xla"]["outputs"])
 
+    # 8. quantized state cache: slots at fixed memory, PPL, divergence
+    sc = _state_cache(cfg, qp, bursty["slow_xla"]["outputs"])
+    for name in ("int8", "fp8", "vq_wkv"):
+        r = sc[name]
+        print_csv(csv_row(
+            f"decode/state_cache/{name}", t.lap() * 1e6,
+            f"bytes_per_slot={r['memory']['state_bytes_per_slot']};"
+            f"slots_gain={r['slots_gain']:.2f}x;"
+            f"ppl_delta={r['ppl_delta']:+.4f}"))
+    print_csv(csv_row(
+        "decode/state_cache/int8_serving",
+        sc["int8"]["bursty"]["seconds"]
+        / max(sc["int8"]["bursty"]["tokens"], 1) * 1e6,
+        f"tokens_per_sec={sc['int8']['bursty']['tokens_per_sec']:.2f};"
+        f"identical={sc['int8']['divergence']['n_identical']}"
+        f"/{sc['int8']['divergence']['n_requests']};"
+        f"min_prefix={sc['int8']['divergence']['min_prefix']}"))
+
     # 7. continuous batching: chunked prefill vs whole-prompt admission
     cb = _continuous_batching(cfg, qp)
     for tag in ("whole_prompt", "chunked"):
@@ -651,6 +785,7 @@ def run(print_csv=print):
                        n_slots=BURSTY_N_SLOTS,
                        new_tokens=BURSTY_NEW_TOKENS),
         "speculative": spec,
+        "state_cache": sc,
         "continuous_batching": cb,
         "cold_start": cold,
     }

@@ -10,22 +10,45 @@ After the ``decode`` section, a timestamped snapshot of the headline
 ``BENCH_decode.json`` metrics (tokens/sec, weight-byte ratios, TTFT and
 inter-token-latency percentiles) is appended to ``BENCH_history.json``
 at the repo root, so the perf trajectory accumulates run-over-run
-instead of each run overwriting the last.
+instead of each run overwriting the last.  One entry per
+(commit, model, policy) identity: re-running at the same commit
+replaces the previous snapshot instead of duplicating it, and the file
+keeps at most ``HISTORY_MAX`` entries (oldest dropped) so it cannot
+grow without bound.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 import traceback
 
 _ROOT = os.path.join(os.path.dirname(__file__), "..")
 
+HISTORY_MAX = 50       # retained BENCH_history.json snapshots
+
+
+def _git_commit() -> str | None:
+    """Current short commit hash, or None outside a git checkout."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=_ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+    except Exception:
+        return None
+
 
 def _append_history() -> str | None:
-    """Append the headline BENCH_decode.json metrics to BENCH_history.json."""
+    """Append the headline BENCH_decode.json metrics to BENCH_history.json.
+
+    Snapshots are identified by (commit, model, policy_bpw): a re-run of
+    the same benchmark config at the same commit REPLACES its previous
+    snapshot (keeping one entry per measured state of the tree), and the
+    history is capped at the newest ``HISTORY_MAX`` entries."""
     src = os.path.join(_ROOT, "BENCH_decode.json")
     dst = os.path.join(_ROOT, "BENCH_history.json")
     if not os.path.exists(src):
@@ -35,8 +58,10 @@ def _append_history() -> str | None:
     eng = d.get("engines", {})
     bursty = d.get("bursty", {})
     cb = d.get("continuous_batching", {})
+    sc = d.get("state_cache", {})
     snap = {
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "commit": _git_commit(),
         "model": d.get("model"),
         "policy_bpw": d.get("policy_bpw"),
         "tokens_per_sec": {
@@ -62,6 +87,12 @@ def _append_history() -> str | None:
                              "tokens_per_sec")}
             for impl in ("xla", "pallas")
             if impl in d.get("speculative", {})},
+        "state_cache": {
+            name: {"state_bytes_per_slot":
+                       sc[name]["memory"]["state_bytes_per_slot"],
+                   "slots_gain": sc[name]["slots_gain"],
+                   "ppl_delta": sc[name]["ppl_delta"]}
+            for name in ("int8", "fp8", "vq_wkv") if name in sc},
     }
     history = []
     if os.path.exists(dst):
@@ -71,7 +102,13 @@ def _append_history() -> str | None:
             assert isinstance(history, list)
         except Exception:
             history = []                 # never let a bad file kill the run
+
+    def ident(s):
+        return (s.get("commit"), s.get("model"), s.get("policy_bpw"))
+
+    history = [s for s in history if ident(s) != ident(snap)]
     history.append(snap)
+    history = history[-HISTORY_MAX:]
     with open(dst, "w") as f:
         json.dump(history, f, indent=2)
     return dst

@@ -57,7 +57,8 @@ __all__ = ["quantize", "save", "load", "lm", "coverage_report", "Engine",
 def quantize(cfg, params, policy: QuantPolicy = PAPER_3_275, *,
              batches: Optional[List[Dict[str, Any]]] = None,
              seed: int = 0,
-             ladder: Any = False) -> QuantizedArtifact:
+             ladder: Any = False,
+             state_cache: Any = None) -> QuantizedArtifact:
     """Run the paper's proxy-guided hybrid SQ/VQ quantization.
 
     Without ``batches`` the data-free variant quantizes the stacked
@@ -73,6 +74,13 @@ def quantize(cfg, params, policy: QuantPolicy = PAPER_3_275, *,
     the draft rung yourself.  The draft tree rides in the same artifact
     (``format_version`` 3 ``ladder`` section) and unlocks
     ``Engine.from_artifact(..., speculate=k)``.  Tree kind only.
+
+    ``state_cache`` (a ``core.policy.StateCacheSpec``, e.g.
+    ``STATE_INT8``) records the decode state-cache quantization the
+    artifact should be served with (``format_version`` 4 ``state_cache``
+    section); ``Engine.from_artifact`` adopts it as the default.  Tree
+    kind only.  Weights are unaffected — the spec only governs the
+    serving-time cache representation.
     """
     key = jax.random.PRNGKey(seed)
     if batches is None:
@@ -106,12 +114,18 @@ def quantize(cfg, params, policy: QuantPolicy = PAPER_3_275, *,
                                  tuning=tuning,
                                  draft_params=draft_params,
                                  draft_policy=draft_policy,
-                                 draft_report=draft_report)
+                                 draft_report=draft_report,
+                                 state_spec=state_cache)
     if ladder:
         raise ValueError(
             "ladder=... is only supported for the data-free tree pipeline "
             "(no calibration batches): the blockwise_lm kind is not "
             "servable and has no speculative path")
+    if state_cache is not None:
+        raise ValueError(
+            "state_cache=... is only supported for the data-free tree "
+            "pipeline: the blockwise_lm kind is not servable, so a "
+            "serving-time state-cache spec has nothing to govern")
     qlm = blockwise_quantize(cfg, params, batches, policy, key)
     return qlm.to_artifact(policy=policy)
 

@@ -26,6 +26,7 @@ One uncompressed numpy zip with two kinds of entries:
         "ladder": {"policy": {...}, "report": {...} | null,
                    "leaves": [...]} | null,   # draft rung (same leaf
                                               # schema, shared tensor pool)
+        "state_cache": {...StateCacheSpec fields...} | null,
         "leaves": [
           {"path":  [["k", "blocks"], ["k", "tm"], ["k", "w_r"]],
            "spec":  {"type": "array"}            # plain tensor, or
@@ -63,10 +64,15 @@ Versioning rules
   3 — adds the optional ``ladder`` manifest section: a second, cheaper
   quantization rung of the SAME weights (aggressive draft policy) for
   self-speculative decode, encoded with the identical leaf schema into
-  the shared tensor pool.  Older artifacts load with the missing
-  sections as ``None`` (v1/v2: ``tuning``/``ladder``; no draft means
-  speculation is refused loudly, plain serving is unchanged) and are
-  upgraded in memory, so re-saving writes a current-version file.
+  the shared tensor pool;
+  4 — adds the optional ``state_cache`` manifest section: the
+  ``StateCacheSpec`` the artifact was validated with
+  (``ServeEngine.from_artifact`` adopts it as the serving default).
+  Older artifacts load with the missing sections as ``None`` (v1/v2:
+  ``tuning``/``ladder``; no draft means speculation is refused loudly,
+  plain serving is unchanged; v1–v3: ``state_cache`` → None, i.e. the
+  bit-exact float state cache) and are upgraded in memory, so
+  re-saving writes a current-version file.
 * Unknown ``cfg``/``policy``/report fields (written by a newer schema
   within the same format version) also raise, with the offending names.
 * The manifest is strict RFC-8259 JSON: non-finite floats (report taus,
@@ -100,8 +106,8 @@ from repro.core.policy import QuantPolicy
 from repro.models import registry as R
 
 MAGIC = "rwkvquant-artifact"
-FORMAT_VERSION = 3
-SUPPORTED_VERSIONS = (1, 2, 3)   # readable; only FORMAT_VERSION is written
+FORMAT_VERSION = 4
+SUPPORTED_VERSIONS = (1, 2, 3, 4)   # readable; only FORMAT_VERSION is written
 KINDS = ("tree", "blockwise_lm")
 
 
@@ -215,6 +221,10 @@ class QuantizedArtifact:
     draft_params: Any = None
     draft_policy: Optional[QuantPolicy] = None
     draft_report: Optional[QuantReport] = None
+    # state-cache quantization spec (format_version >= 4): the
+    # StateCacheSpec serving should default to; None on plain artifacts
+    # and anything loaded from v1-v3 (float state cache)
+    state_spec: Optional[Any] = None
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -285,6 +295,8 @@ class QuantizedArtifact:
             "report": self.report.to_dict() if self.report else None,
             "tuning": self.tuning,
             "ladder": ladder,
+            "state_cache": self.state_spec.to_dict()
+            if self.state_spec is not None else None,
             "leaves": leaves,
         }
         mbuf = np.frombuffer(
@@ -355,6 +367,10 @@ class QuantizedArtifact:
                     draft_policy = QuantPolicy.from_dict(ladder["policy"])
                 if ladder.get("report"):
                     draft_report = QuantReport.from_dict(ladder["report"])
+        state_spec = None
+        if manifest.get("state_cache") is not None:
+            from repro.core.policy import StateCacheSpec
+            state_spec = StateCacheSpec.from_dict(manifest["state_cache"])
         # older versions upgrade in memory: re-saving writes the current
         # layout (missing sections default to None)
         return cls(cfg=R.cfg_from_dict(manifest["cfg"]),
@@ -367,7 +383,8 @@ class QuantizedArtifact:
                    tuning=manifest.get("tuning"),
                    draft_params=draft_params,
                    draft_policy=draft_policy,
-                   draft_report=draft_report)
+                   draft_report=draft_report,
+                   state_spec=state_spec)
 
 
 def save(artifact: QuantizedArtifact, path: str) -> str:

@@ -57,6 +57,10 @@ METRIC_DEFINITIONS = {
         "draft tree (k+1) times plus the target tree once (the batched "
         "verify streams target weights once for all k+1 positions), "
         "amortized over tokens_per_launch emitted tokens",
+    "state_bytes_per_slot": "steady-state decode-cache bytes one slot "
+        "pins in HBM (packed init_cache tree divided by the probe "
+        "batch); transient float chunks inside a launch are not pool "
+        "memory and are not counted",
 }
 
 
@@ -239,6 +243,58 @@ def speculative_effective_bytes(target_report: Dict[str, Any],
         # token than the plain target-only tick
         "vs_plain_ratio": (per_launch / tpl) / max(tgt, 1),
     }
+
+
+def state_cache_report(cfg, state_spec, max_len: int,
+                       memory_budget: Optional[int] = None
+                       ) -> Dict[str, Any]:
+    """Per-slot decode-state memory under a ``StateCacheSpec``.
+
+    Probes the packed ``registry.init_cache`` tree abstractly (two
+    ``eval_shape`` calls — nothing is allocated) and reports, per
+    top-level cache leaf and in total, the bytes ONE slot pins in HBM:
+    the difference between a 2-slot and a 1-slot pool, so batch-
+    independent bookkeeping (``index``) is excluded.  ``float`` numbers
+    are the same probe with the spec disabled — ``ratio`` below 1.0 is
+    the slots-per-device multiplier, and with a ``memory_budget`` (bytes
+    reserved for state) the report also quotes concrete
+    ``slots_at_budget`` for both representations — the benchmark's
+    headline "2x slots at fixed memory" number.
+    """
+    from repro.core.state_quant import tree_nbytes
+    from repro.models import registry as R
+
+    def probe(spec):
+        s1 = jax.eval_shape(lambda: R.init_cache(cfg, 1, max_len, spec))
+        s2 = jax.eval_shape(lambda: R.init_cache(cfg, 2, max_len, spec))
+        per_leaf = {k: tree_nbytes(s2[k]) - tree_nbytes(s1[k])
+                    for k in s1}
+        return per_leaf, sum(per_leaf.values())
+
+    fleaf, fbytes = probe(None)
+    qleaf, qbytes = probe(state_spec)
+    out = {
+        "max_len": int(max_len),
+        "spec": state_spec.to_dict() if state_spec is not None else None,
+        "leaves": {
+            k: {"float_bytes": int(fleaf[k]), "packed_bytes": int(qleaf[k]),
+                "mode": (state_spec.mode_for(k)
+                         if state_spec is not None
+                         and k in R.state_cache_leaves(cfg) else "none")}
+            for k in fleaf},
+        "float_bytes_per_slot": int(fbytes),
+        "state_bytes_per_slot": int(qbytes),
+        "ratio": qbytes / max(fbytes, 1),
+        "metric": {"state_bytes_per_slot":
+                   METRIC_DEFINITIONS["state_bytes_per_slot"]},
+    }
+    if memory_budget is not None:
+        out["memory_budget"] = int(memory_budget)
+        out["slots_at_budget"] = {
+            "float": int(memory_budget // max(fbytes, 1)),
+            "packed": int(memory_budget // max(qbytes, 1)),
+        }
+    return out
 
 
 def _attach_hlo_costs(params, leaves) -> None:

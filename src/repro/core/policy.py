@@ -79,6 +79,81 @@ DRAFT_VQ_2 = replace(PAPER_3_275, force_method="vq", vq_d=2, vq_k=4,
 
 
 # --------------------------------------------------------------------------- #
+#  State-cache quantization spec
+# --------------------------------------------------------------------------- #
+STATE_MODES = ("none", "fp8", "int8", "vq")
+
+
+@dataclass(frozen=True)
+class StateCacheSpec:
+    """Per-cache-leaf quantization of the decode state / KV pools.
+
+    Modes (per leaf, selected by :meth:`mode_for`):
+
+    * ``none`` — float passthrough; the bit-exact default.
+    * ``fp8``  — float8-e4m3 with a power-of-two per-row amax scale.
+    * ``int8`` — symmetric per-channel int8 with a power-of-two scale
+      (``exp2(ceil(log2(amax/127)))``), which makes repacking an already
+      packed row an exact fixpoint — pool rows rewritten every tick
+      cannot drift.
+    * ``vq``   — paper-style elementwise VQ (§3.2 applied to state):
+      nearest-neighbour assignment against a fixed 16-entry normalized
+      codebook, per-row power-of-two amax scale, uint8 codes.
+
+    ``overrides`` maps leaf names (``state``, ``shift_tm``, ``kv``, ...)
+    to a mode, taking precedence over ``default``.  Leaves not listed in
+    a family's ``STATE_CACHE_LEAVES`` (e.g. ``index``) are never packed.
+    """
+    default: str = "none"
+    overrides: Tuple[Tuple[str, str], ...] = ()
+    vq_bits: int = 4                 # codebook size = 2**vq_bits (<= 8)
+
+    def __post_init__(self):
+        for m in (self.default,) + tuple(m for _, m in self.overrides):
+            if m not in STATE_MODES:
+                raise ValueError(f"unknown state-cache mode {m!r}; "
+                                 f"expected one of {STATE_MODES}")
+
+    def mode_for(self, leaf: str) -> str:
+        for name, mode in self.overrides:
+            if name == leaf:
+                return mode
+        return self.default
+
+    def enabled(self) -> bool:
+        """True if any leaf may be packed (spec participates in keys)."""
+        return self.default != "none" or any(
+            m != "none" for _, m in self.overrides)
+
+    def spec_hash(self) -> str:
+        import hashlib
+        import json
+        blob = json.dumps(self.to_dict(), sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+    def to_dict(self) -> dict:
+        return {"default": self.default,
+                "overrides": [list(p) for p in self.overrides],
+                "vq_bits": self.vq_bits}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "StateCacheSpec":
+        from repro.core import dataclass_from_dict
+        d = dict(d)
+        d["overrides"] = tuple(tuple(p) for p in d.get("overrides", ()))
+        return dataclass_from_dict(cls, d)
+
+
+STATE_NONE = StateCacheSpec()
+STATE_INT8 = StateCacheSpec(default="int8")
+STATE_FP8 = StateCacheSpec(default="fp8")
+# paper-style operating point: elementwise VQ on the WKV state matrix,
+# int8 SQ on the (better-conditioned) shift rows / KV pools
+STATE_VQ_WKV = StateCacheSpec(default="int8",
+                              overrides=(("state", "vq"), ("ssm", "vq")))
+
+
+# --------------------------------------------------------------------------- #
 #  Leaf classification
 # --------------------------------------------------------------------------- #
 # element-wise multiplication weights (RWKV μ-class; paper §3.2)

@@ -1,0 +1,141 @@
+"""In-graph pack/unpack for quantized decode-state caches.
+
+The serving stack keeps one cache row per slot; at bf16/f32 the
+``(L, B, H, hd, hd)`` WKV states and ``(n, B, max_len, kvd)`` KV pools
+dominate per-slot memory.  This module packs those leaves on write and
+unpacks them on read, entirely inside the jitted tick (no host copies),
+per a :class:`repro.core.policy.StateCacheSpec`.
+
+Packed representation: each float array becomes ``{"codes", "scale"}``.
+``scale`` is reduced over the last axis with ``keepdims=True`` so every
+batch axis survives — the engine's structural batch-axis probe, slot
+scatter/gather and elastic pool resize all operate on packed trees
+unchanged.
+
+Scales are power-of-two (``exp2(ceil(log2(amax/denom)))``).  For int8
+this makes repacking an already-packed row an *exact* fixpoint: the max
+|code| of a packed row always lands back in the same scale bucket, so
+rows rewritten every tick (decode scatters the whole pool) cannot
+drift.  fp8/vq are near-idempotent; their divergence is bounded and
+exercised by the invariant tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+_TINY = 2.0 ** -40
+
+# NF4 codebook (normalized normal-quantile levels): the fixed-codebook
+# stand-in for the paper's elementwise VQ (§3.2) applied to state — a
+# data-optimized codebook cannot be refit inside the decode tick, so we
+# use the information-theoretically matched static one.
+_NF4 = np.array(
+    [-1.0, -0.6961928010, -0.5250730515, -0.3949174881,
+     -0.2844413817, -0.1847734302, -0.0910500363, 0.0,
+     0.0795802996, 0.1609302014, 0.2461123019, 0.3379152417,
+     0.4407098293, 0.5626170039, 0.7229568362, 1.0], dtype=np.float32)
+
+
+def codebook(vq_bits: int) -> np.ndarray:
+    """Normalized VQ codebook: NF4 at 4 bits, uniform otherwise."""
+    if vq_bits == 4:
+        return _NF4
+    return np.linspace(-1.0, 1.0, 2 ** vq_bits, dtype=np.float32)
+
+
+def _po2_scale(x, denom: float):
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(amax, _TINY) / denom)))
+
+
+def pack_array(x, mode: str, vq_bits: int = 4):
+    """One float array -> ``{"codes", "scale"}`` (or passthrough)."""
+    if mode == "none":
+        return x
+    if mode == "int8":
+        scale = _po2_scale(x, 127.0)
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+        return {"codes": q.astype(jnp.int8), "scale": scale}
+    if mode == "fp8":
+        scale = _po2_scale(x, 448.0)
+        q = (x.astype(jnp.float32) / scale).astype(jnp.float8_e4m3fn)
+        return {"codes": q, "scale": scale}
+    if mode == "vq":
+        cb = jnp.asarray(codebook(vq_bits))
+        scale = _po2_scale(x, 1.0)
+        y = x.astype(jnp.float32) / scale
+        idx = jnp.argmin(jnp.abs(y[..., None] - cb), axis=-1)
+        return {"codes": idx.astype(jnp.uint8), "scale": scale}
+    raise ValueError(f"unknown state-cache mode {mode!r}")
+
+
+def unpack_array(packed, mode: str, dtype, vq_bits: int = 4):
+    """Inverse of :func:`pack_array`, restoring ``dtype``."""
+    if mode == "none":
+        return packed
+    codes, scale = packed["codes"], packed["scale"]
+    if mode == "int8":
+        y = codes.astype(jnp.float32) * scale
+    elif mode == "fp8":
+        y = codes.astype(jnp.float32) * scale
+    elif mode == "vq":
+        cb = jnp.asarray(codebook(vq_bits))
+        y = cb[codes] * scale
+    else:
+        raise ValueError(f"unknown state-cache mode {mode!r}")
+    return y.astype(dtype)
+
+
+def _map1(f, tree):
+    """Map over an array-or-nested-tuple cache leaf (kv is a tuple)."""
+    if isinstance(tree, (tuple, list)):
+        return tuple(_map1(f, t) for t in tree)
+    return f(tree)
+
+
+def _map2(f, a, b):
+    if isinstance(a, (tuple, list)):
+        return tuple(_map2(f, x, y) for x, y in zip(a, b))
+    return f(a, b)
+
+
+def pack_cache(cache: dict, spec, leaves) -> dict:
+    """Pack the listed leaves of one family cache dict per ``spec``."""
+    if spec is None or not spec.enabled():
+        return cache
+    out = dict(cache)
+    for name in leaves:
+        mode = spec.mode_for(name)
+        if name in cache and mode != "none":
+            out[name] = _map1(
+                lambda x: pack_array(x, mode, spec.vq_bits), cache[name])
+    return out
+
+
+def unpack_cache(packed: dict, spec, leaves, float_struct: dict) -> dict:
+    """Inverse of :func:`pack_cache`.
+
+    ``float_struct`` supplies the original dtypes (a ShapeDtypeStruct
+    tree of the unpacked cache, e.g. from ``jax.eval_shape`` of the
+    family's ``init_cache``).
+    """
+    if spec is None or not spec.enabled():
+        return packed
+    out = dict(packed)
+    for name in leaves:
+        mode = spec.mode_for(name)
+        if name in packed and mode != "none":
+            out[name] = _map2(
+                lambda p, s: unpack_array(p, mode, s.dtype, spec.vq_bits),
+                packed[name], float_struct[name])
+    return out
+
+
+def tree_nbytes(tree) -> int:
+    """Total bytes of a (possibly packed) pytree of arrays/structs."""
+    leaves = jax.tree.leaves(tree)
+    return int(sum(np.prod(l.shape) * np.dtype(l.dtype).itemsize
+                   for l in leaves))

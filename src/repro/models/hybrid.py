@@ -28,6 +28,8 @@ SUPPORTS_RAGGED_PREFILL = True
 # mamba SSM state via dt = 0 no-ops and the conv window gathered over
 # [carried conv_state | chunk] (lengths == 0 reproduces the old state)
 SUPPORTS_CHUNKED_PREFILL = True
+# cache leaves eligible for state-cache quantization (core/state_quant)
+STATE_CACHE_LEAVES = ("kv", "ssm", "conv")
 
 
 def _period_layout(cfg):

@@ -43,16 +43,64 @@ def model_logits(cfg, params, hidden):
     return module_for(cfg).logits(cfg, params, hidden)
 
 
-def init_cache(cfg, batch_size: int, max_len: int):
-    return module_for(cfg).init_cache(cfg, batch_size, max_len)
+def init_cache(cfg, batch_size: int, max_len: int, state_spec=None):
+    """Fresh serving cache; with ``state_spec`` the eligible leaves are
+    returned packed (``core/state_quant``) so the pool is allocated at
+    quantized width from the start."""
+    cache = module_for(cfg).init_cache(cfg, batch_size, max_len)
+    return pack_state(cfg, cache, state_spec)
 
 
-def prefill(cfg, params, batch, cache):
-    return module_for(cfg).prefill(cfg, params, batch, cache)
+def state_cache_leaves(cfg):
+    """Cache leaves a StateCacheSpec may pack for this family (families
+    without the attribute — whisper — pack nothing; the spec is inert)."""
+    return getattr(module_for(cfg), "STATE_CACHE_LEAVES", ())
 
 
-def decode_step(cfg, params, cache, tokens):
-    return module_for(cfg).decode_step(cfg, params, cache, tokens)
+def _float_cache_struct(cfg):
+    """ShapeDtypeStruct tree of the *unpacked* cache — dtype source for
+    dequantize-on-read.  Shapes are probe-sized (B=1, S=2); only the
+    dtypes and the leaf structure matter, neither depends on B/S."""
+    key = cfg_hash(cfg)
+    hit = _FLOAT_STRUCTS.get(key)
+    if hit is None:
+        hit = jax.eval_shape(
+            lambda: module_for(cfg).init_cache(cfg, 1, 2))
+        _FLOAT_STRUCTS[key] = hit
+    return hit
+
+
+_FLOAT_STRUCTS: Dict[str, Any] = {}
+
+
+def pack_state(cfg, cache, state_spec):
+    """Quantize-on-write: pack the family's eligible leaves in-graph."""
+    if state_spec is None or not state_spec.enabled():
+        return cache
+    from repro.core import state_quant as SQ
+    return SQ.pack_cache(cache, state_spec, state_cache_leaves(cfg))
+
+
+def unpack_state(cfg, cache, state_spec):
+    """Dequantize-on-read: inverse of :func:`pack_state` (up to the
+    spec's quantization error; exact passthrough for ``none``)."""
+    if state_spec is None or not state_spec.enabled():
+        return cache
+    from repro.core import state_quant as SQ
+    return SQ.unpack_cache(cache, state_spec, state_cache_leaves(cfg),
+                           _float_cache_struct(cfg))
+
+
+def prefill(cfg, params, batch, cache, state_spec=None):
+    logits_, new_cache = module_for(cfg).prefill(
+        cfg, params, batch, unpack_state(cfg, cache, state_spec))
+    return logits_, pack_state(cfg, new_cache, state_spec)
+
+
+def decode_step(cfg, params, cache, tokens, state_spec=None):
+    logits_, new_cache = module_for(cfg).decode_step(
+        cfg, params, unpack_state(cfg, cache, state_spec), tokens)
+    return logits_, pack_state(cfg, new_cache, state_spec)
 
 
 def supports_speculative(cfg) -> bool:
@@ -67,7 +115,12 @@ def verify_chunk(cfg, params, cache, tokens):
     return ``(logits (B,T,V), snaps)`` — per-position cache snapshots
     for rollback (time axis right after each leaf's batch axis).  With
     greedy sampling the per-position logits are bitwise-identical to T
-    isolated ``decode_step`` calls; families without the hook raise."""
+    isolated ``decode_step`` calls; families without the hook raise.
+
+    Deliberately state-spec-unaware: speculative decode keeps the whole
+    draft/verify/rollback window in the float domain (snapshots must be
+    gatherable per position), so ``serve/speculate.py`` unpacks once at
+    tick entry and repacks once at tick exit instead of per call."""
     fn = getattr(module_for(cfg), "verify_chunk", None)
     if fn is None:
         raise NotImplementedError(
@@ -97,7 +150,7 @@ def supports_chunked_prefill(cfg) -> bool:
         and hasattr(module_for(cfg), "prefill_chunk")
 
 
-def prefill_chunk(cfg, params, batch, cache, offset):
+def prefill_chunk(cfg, params, batch, cache, offset, state_spec=None):
     """One resumable prefill chunk: consume ``batch['tokens']`` (B, C)
     with per-row valid counts ``batch['lengths']`` (B,) starting at
     absolute position ``offset`` (B,), continuing from the recurrent
@@ -118,7 +171,9 @@ def prefill_chunk(cfg, params, batch, cache, offset):
             "prefill_chunk; chunked prefill needs "
             "supports_chunked_prefill(cfg) == True — serve this family "
             "with chunk_tokens=0 (whole-prompt admission) instead")
-    return fn(cfg, params, batch, cache, offset)
+    logits_, new_cache = fn(cfg, params, batch,
+                            unpack_state(cfg, cache, state_spec), offset)
+    return logits_, pack_state(cfg, new_cache, state_spec)
 
 
 def prepare_decode_params(cfg, params):

@@ -40,6 +40,9 @@ SUPPORTS_RAGGED_PREFILL = True
 # recurrent state + token-shift registers carried in the cache make the
 # continuation exact (see prefill_chunk)
 SUPPORTS_CHUNKED_PREFILL = True
+# cache leaves eligible for state-cache quantization (core/state_quant);
+# "index" is bookkeeping and never packed
+STATE_CACHE_LEAVES = ("state", "shift_tm", "shift_cm")
 
 
 # --------------------------------------------------------------------------- #

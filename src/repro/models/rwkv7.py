@@ -36,6 +36,8 @@ SUPPORTS_RAGGED_PREFILL = True
 # + shift registers; the v-residual stream v_first is positionwise, so
 # chunk boundaries cannot perturb it)
 SUPPORTS_CHUNKED_PREFILL = True
+# cache leaves eligible for state-cache quantization (core/state_quant)
+STATE_CACHE_LEAVES = ("state", "shift_tm", "shift_cm")
 
 
 def _block_init(cfg, key, frac: float):

@@ -25,6 +25,8 @@ SUPPORTS_RAGGED_PREFILL = True
 # prefill_chunk resumes a partially-filled KV cache at a per-row offset
 # (cache_update and the causal q_offset mask both take (B,) vectors)
 SUPPORTS_CHUNKED_PREFILL = True
+# cache leaves eligible for state-cache quantization (core/state_quant)
+STATE_CACHE_LEAVES = ("kv", "kv_pre")
 
 
 # --------------------------------------------------------------------------- #

@@ -160,6 +160,36 @@ The speculative tick closure gets its own shared-cache key
 zero extra recompiles.  ``speculative_stats`` reports proposed /
 accepted / emitted totals and launches; per-request inter-token tick
 timestamps land on ``Request.token_ticks``.
+
+Quantized state cache
+---------------------
+
+``state_spec`` (a ``core.policy.StateCacheSpec``) quantizes the per-slot
+decode state — the ``(B, max_len, d)`` KV pools and ``(B, H, hd, hd)``
+WKV states that dominate per-slot memory once weights are quantized.
+Eligible cache leaves (per-family ``STATE_CACHE_LEAVES``) are stored
+packed (``{"codes", "scale"}``, int8 / fp8-e4m3 / elementwise-VQ with
+power-of-two per-row scales); every consumer — decode tick, prefill,
+chunked-prefill continuation, speculative draft-verify — dequantizes on
+read and requantizes on write *inside* its jitted launch, so the pool
+stays device-resident and slot splice / elastic resize operate on the
+packed tree unchanged.  Memory accounting: ``core.coverage.
+state_cache_report`` (and the benchmark's ``state_cache`` section)
+measures bytes-per-slot from the packed ``init_cache`` tree, i.e. the
+steady-state pool cost; transient float chunks exist only inside a
+launch.
+
+Parity contract: ``state=none`` (the default) is byte-for-byte the
+unquantized engine — same closures, same trees, bit-identical greedy
+outputs.  Any lossy mode trades exactness for slots: int8 uses
+power-of-two scales so rewriting an unchanged row is an exact fixpoint
+(no per-tick drift), but outputs may diverge from the float engine
+after some prefix; the invariant tests assert ``state=none`` parity
+exactly and lossy divergence stays bounded (structural invariants
+hold; greedy prefixes agree).  The slow host loop (``fast_path=False``)
+is the float reference and ignores ``state_spec``.  The spec hash joins
+every shared jit-closure cache key, so engines with different specs
+never share traces.
 """
 from __future__ import annotations
 
@@ -208,6 +238,21 @@ def _shared_closure(key: tuple, builder) -> dict:
 def clear_closure_cache() -> None:
     """Drop every shared jitted closure (cold-start measurements/tests)."""
     _CLOSURE_CACHE.clear()
+    _PROBE_CACHE.clear()
+
+
+# eval_shape probes memoized alongside the closure cache: `_batch_axes`
+# and the `_kv_capacity` capacity check re-trace init_cache per engine
+# construction otherwise, which dominates cold-start for the cached
+# same-shape engines the invariant harness builds in a loop
+_PROBE_CACHE: Dict[tuple, object] = {}
+
+
+def _probe(key: tuple, compute):
+    hit = _PROBE_CACHE.get(key)
+    if hit is None:
+        hit = _PROBE_CACHE[key] = compute()
+    return hit
 
 
 def _tree_digest(tree) -> str:
@@ -275,10 +320,15 @@ class _PrefillJob:
                    for i, r in enumerate(self.reqs) if r is not None)
 
 
-def _batch_axes(cfg, max_len: int):
-    """Per-cache-leaf batch axis, found structurally (no heuristics)."""
-    s1 = jax.eval_shape(lambda: R.init_cache(cfg, 1, max_len))
-    s2 = jax.eval_shape(lambda: R.init_cache(cfg, 2, max_len))
+def _batch_axes(cfg, max_len: int, state_spec=None):
+    """Per-cache-leaf batch axis, found structurally (no heuristics).
+
+    With ``state_spec`` the probe runs on the *packed* tree: the packed
+    ``{"codes", "scale"}`` leaves keep their batch axes (scales reduce
+    the last axis with keepdims), so slot splice and pool resize work on
+    packed caches through the same machinery."""
+    s1 = jax.eval_shape(lambda: R.init_cache(cfg, 1, max_len, state_spec))
+    s2 = jax.eval_shape(lambda: R.init_cache(cfg, 2, max_len, state_spec))
 
     def ax(a, b):
         for i, (u, v) in enumerate(zip(a.shape, b.shape)):
@@ -310,8 +360,8 @@ def _choose_tokens(logits, temps, key):
     return jnp.where(temps > 0, sampled, greedy)
 
 
-def _tick(cfg, impl: str, max_len: int, params, cache, tok, pos, tcount,
-          live, temps, maxnew, out, key):
+def _tick(cfg, impl: str, max_len: int, state_spec, params, cache, tok,
+          pos, tcount, live, temps, maxnew, out, key):
     """One fused decode+sample step; everything stays on device.
 
     tok (n,1) int32 last token per slot; pos (n,) cache index; tcount (n,)
@@ -319,11 +369,13 @@ def _tick(cfg, impl: str, max_len: int, params, cache, tok, pos, tcount,
     temperature (<=0 greedy); maxnew (n,) int32; out (n, max_len) emitted
     token ring.  Dead slots decode garbage rows that are masked out —
     batch rows are computed independently, so live rows are bit-identical
-    to the host loop.  Retraced once per pool size n.
+    to the host loop.  Retraced once per pool size n.  With a
+    ``state_spec`` the cache arrives packed; dequantize-on-read /
+    requantize-on-write happen inside this launch (registry hooks).
     """
     with qz.use_impl(impl):
         logits, cache = R.decode_step(cfg, params, dict(cache, index=pos),
-                                      tok)
+                                      tok, state_spec=state_spec)
     key, sub = jax.random.split(key)
     nxt = _choose_tokens(logits, temps, sub)
     rows = jnp.arange(tok.shape[0])
@@ -355,7 +407,14 @@ class ServeEngine:
                  seed: int = 0, fast_path: bool = True, impl: str = "auto",
                  ticks_per_sync: int = 1, elastic: bool = True,
                  min_bucket: int = MIN_BUCKET, speculate: int = 0,
-                 draft_params=None, chunk_tokens: int = 0):
+                 draft_params=None, chunk_tokens: int = 0,
+                 state_spec=None):
+        if state_spec is not None and not state_spec.enabled():
+            state_spec = None          # all-none spec IS the float engine
+        if state_spec is not None and not fast_path:
+            # the slow host loop is the float reference every parity test
+            # measures against; it never quantizes state
+            state_spec = None
         if impl == "auto":
             impl = "pallas" if any(d.platform == "tpu"
                                    for d in jax.devices()) else "xla"
@@ -405,6 +464,7 @@ class ServeEngine:
         self.n_slots, self.max_len = n_slots, max_len
         self.fast_path, self.impl = fast_path, impl
         self.speculate = speculate
+        self.state_spec = state_spec
         self.ticks_per_sync = max(1, ticks_per_sync)
         self.min_bucket = min_bucket
         self.key = jax.random.PRNGKey(seed)
@@ -423,7 +483,13 @@ class ServeEngine:
         self.prefill_chunks = 0       # prefill launches (chunks or whole)
         self.max_prefill_tokens_tick = 0   # largest launch grid vs live decode
         self._tick_prefill_tokens = 0
-        self._axes = _batch_axes(cfg, max_len)
+        chash = R.cfg_hash(cfg)
+        sshash = state_spec.spec_hash() if state_spec is not None else "none"
+        # slot splice / resize axes follow the (possibly packed) tree;
+        # speculation additionally needs the float-tree axes because the
+        # whole draft/verify/rollback window runs unpacked (see spec_tick)
+        self._axes = _probe(("axes", chash, max_len, sshash),
+                            lambda: _batch_axes(cfg, max_len, state_spec))
         self._ragged = R.supports_ragged_prefill(cfg)
         # shapes THIS engine traced that the shared cache had not seen
         self._new_shapes = {"decode_tick": 0, "prefill": 0}
@@ -436,7 +502,7 @@ class ServeEngine:
             if self.elastic else (n_slots,)
         self.pool = self.pools[0] if self.elastic else n_slots
 
-        self.cache = R.init_cache(cfg, self.pool, max_len)
+        self.cache = R.init_cache(cfg, self.pool, max_len, state_spec)
         self.slot_req: List[Optional[Request]] = [None] * self.pool
         self.slot_pos = np.zeros(self.pool, np.int32)
 
@@ -455,45 +521,57 @@ class ServeEngine:
             return wrapped
 
         # jitted closures come from the process-wide cache: a second
-        # engine with an equal config + impl reuses every compilation
-        chash = R.cfg_hash(cfg)
+        # engine with an equal config + impl (and state spec) reuses
+        # every compilation
+        spec = state_spec
         self._decode_ent = _shared_closure(
-            ("decode", chash, impl),
+            ("decode", chash, impl, sshash),
             lambda: jax.jit(_with_impl(
-                lambda p, c, t: R.decode_step(cfg, p, c, t))))
+                lambda p, c, t: R.decode_step(cfg, p, c, t,
+                                              state_spec=spec))))
         self._prefill_ent = _shared_closure(
-            ("prefill", chash, impl),
+            ("prefill", chash, impl, sshash),
             lambda: jax.jit(_with_impl(
-                lambda p, b, c: R.prefill(cfg, p, b, c))))
+                lambda p, b, c: R.prefill(cfg, p, b, c, state_spec=spec))))
         self._tick_ent = _shared_closure(
-            ("tick", chash, impl, max_len),
-            lambda: jax.jit(partial(_tick, cfg, impl, max_len)))
+            ("tick", chash, impl, max_len, sshash),
+            lambda: jax.jit(partial(_tick, cfg, impl, max_len, spec)))
         self._decode = self._decode_ent["fn"]
         self._prefill = self._prefill_ent["fn"]
         self._tick = self._tick_ent["fn"]
         if self.chunk_tokens:
             self._chunk_ent = _shared_closure(
-                ("prefill_chunk", chash, impl),
+                ("prefill_chunk", chash, impl, sshash),
                 lambda: jax.jit(_with_impl(
-                    lambda p, b, c, o: R.prefill_chunk(cfg, p, b, c, o))))
+                    lambda p, b, c, o: R.prefill_chunk(
+                        cfg, p, b, c, o, state_spec=spec))))
             self._prefill_chunk = self._chunk_ent["fn"]
             self._new_shapes["prefill_chunk"] = 0
             # structural probe: does the cache have max_len capacity axes
             # (KV-style)?  Chunk writes past max_len would clamp and
             # silently corrupt, so such prompts are rejected up front —
-            # whole-prompt admission fails the same prompts at trace time.
-            s1 = jax.eval_shape(lambda: R.init_cache(cfg, 1, max_len))
-            s2 = jax.eval_shape(lambda: R.init_cache(cfg, 1, max_len * 2))
-            self._kv_capacity = any(
-                a.shape != b.shape for a, b in
-                zip(jax.tree.leaves(s1), jax.tree.leaves(s2)))
+            # whole-prompt admission fails the same prompts at trace
+            # time.  Memoized: same-shape engines skip the two retraces.
+            self._kv_capacity = _probe(
+                ("kv_capacity", chash, max_len),
+                lambda: any(
+                    a.shape != b.shape for a, b in zip(
+                        jax.tree.leaves(jax.eval_shape(
+                            lambda: R.init_cache(cfg, 1, max_len))),
+                        jax.tree.leaves(jax.eval_shape(
+                            lambda: R.init_cache(cfg, 1, max_len * 2))))))
         if speculate:
-            # own cache key: plain engines never trace (or pay for) it
+            # own cache key: plain engines never trace (or pay for) it.
+            # the draft/verify/rollback window runs on unpacked trees, so
+            # spec_tick gets the FLOAT axes plus the spec for the
+            # unpack-at-entry / repack-at-exit boundary
             from repro.serve.speculate import spec_tick
+            axes_f = _probe(("axes", chash, max_len, "none"),
+                            lambda: _batch_axes(cfg, max_len))
             self._spec_ent = _shared_closure(
-                ("spec_tick", chash, impl, max_len, speculate),
+                ("spec_tick", chash, impl, max_len, speculate, sshash),
                 lambda: jax.jit(partial(spec_tick, cfg, impl, max_len,
-                                        speculate, self._axes)))
+                                        speculate, axes_f, spec)))
             self._spec_tick = self._spec_ent["fn"]
             self._new_shapes["spec_tick"] = 0
 
@@ -513,6 +591,11 @@ class ServeEngine:
         (``api.quantize(..., ladder=True)``, format_version >= 3): the
         draft rung rides in ``artifact.draft_params`` and is forwarded
         as the engine's ``draft_params``.
+
+        A state-cache spec saved in the artifact (format_version >= 4,
+        ``api.quantize(..., state_cache=...)``) becomes the engine
+        default; pass ``state_spec=None`` explicitly to serve with a
+        float state cache instead.
         """
         if artifact.kind != "tree":
             raise ValueError(
@@ -526,6 +609,8 @@ class ServeEngine:
                     "< 3 or quantized without ladder=...).  Re-quantize "
                     "with api.quantize(cfg, params, ladder=True)")
             kw.setdefault("draft_params", artifact.draft_params)
+        if getattr(artifact, "state_spec", None) is not None:
+            kw.setdefault("state_spec", artifact.state_spec)
         if getattr(artifact, "tuning", None):
             # persisted autotune table: serving does 0 re-tuning work
             from repro.launch import autotune
@@ -556,7 +641,8 @@ class ServeEngine:
         if self.speculate:
             # draft cache mirrors the target cache slot-for-slot; stats
             # accumulate [proposed, accepted_drafts, emitted] on device
-            self._dcache = dict(R.init_cache(self.cfg, pool, self.max_len),
+            self._dcache = dict(R.init_cache(self.cfg, pool, self.max_len,
+                                             self.state_spec),
                                 index=jnp.zeros((pool,), jnp.int32))
             self._spec_stats = jnp.zeros((4,), jnp.int32)
 
@@ -599,16 +685,26 @@ class ServeEngine:
                         self._jobs.remove(job)
                     return True
         # prefill done but still waiting for a decode slot: its first
-        # token was already sampled, so deliver it with the cancel
-        for i, (r, first, _, _) in enumerate(self._parked):
-            if r.uid == uid:
-                self._parked.pop(i)
-                r.out_tokens = [int(first)]
-                self.host_syncs += 1
-                r.done = r.cancelled = True
-                self._cancel_freed = True
-                self.completed.append(r)
-                return True
+        # token was already sampled, so deliver it with the cancel.
+        # Rebuild the list rather than pop-while-iterating: an in-place
+        # pop shifts the rows after the hit, so a cancel sweep walking
+        # the same list would skip (and leak) the row behind every hit.
+        hit = None
+        kept = []
+        for entry in self._parked:
+            if hit is None and entry[0].uid == uid:
+                hit = entry
+            else:
+                kept.append(entry)
+        if hit is not None:
+            self._parked = kept
+            r, first = hit[0], hit[1]
+            r.out_tokens = [int(first)]
+            self.host_syncs += 1
+            r.done = r.cancelled = True
+            self._cancel_freed = True
+            self.completed.append(r)
+            return True
         for s in range(self.pool):
             r = self.slot_req[s]
             if r is not None and r.uid == uid:
@@ -869,7 +965,8 @@ class ServeEngine:
                          (self._params_digest, rows, bucket, self.max_len))
         self.prefill_chunks += 1
         self._tick_prefill_tokens += rows * bucket
-        scratch = R.init_cache(self.cfg, rows, self.max_len)
+        scratch = R.init_cache(self.cfg, rows, self.max_len,
+                               self.state_spec)
         logits, scratch = self._prefill(self._dparams, batch, scratch)
         dscratch = None
         if self.speculate:
@@ -879,7 +976,8 @@ class ServeEngine:
             self._note_shape("prefill", self._prefill_ent,
                              (self._draft_digest, rows, bucket,
                               self.max_len))
-            dscratch = R.init_cache(self.cfg, rows, self.max_len)
+            dscratch = R.init_cache(self.cfg, rows, self.max_len,
+                                    self.state_spec)
             _, dscratch = self._prefill(self._draft, batch, dscratch)
         temps = jnp.asarray([r.temperature for r in reqs]
                             + [0.0] * (rows - nb), jnp.float32)
@@ -974,8 +1072,10 @@ class ServeEngine:
                 reqs=list(reqs) + [None] * (rows - take),
                 rows=rows, ccols=ccols,
                 consumed=np.zeros((rows,), np.int32),
-                scratch=R.init_cache(self.cfg, rows, self.max_len),
-                dscratch=(R.init_cache(self.cfg, rows, self.max_len)
+                scratch=R.init_cache(self.cfg, rows, self.max_len,
+                                     self.state_spec),
+                dscratch=(R.init_cache(self.cfg, rows, self.max_len,
+                                       self.state_spec)
                           if self.speculate else None)))
             in_flight += take
 
@@ -1099,12 +1199,14 @@ class ServeEngine:
                                job.scratch, job.dscratch, i)
                     continue
                 park = _slot_write(
-                    R.init_cache(self.cfg, 1, self.max_len),
+                    R.init_cache(self.cfg, 1, self.max_len,
+                                 self.state_spec),
                     job.scratch, self._axes, 0, i)
                 dpark = None
                 if job.dscratch is not None:
                     dpark = _slot_write(
-                        R.init_cache(self.cfg, 1, self.max_len),
+                        R.init_cache(self.cfg, 1, self.max_len,
+                                     self.state_spec),
                         job.dscratch, self._axes, 0, i)
                 self._parked.append((req, first[i], park, dpark))
         return len(active)

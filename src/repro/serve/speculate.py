@@ -115,9 +115,9 @@ def rollback(snaps, axes, idx, fallback):
     return out
 
 
-def spec_tick(cfg, impl, max_len, k, axes, params, draft_params,
-              cache, dcache, tok, pos, tcount, live, temps, maxnew, out,
-              key, stats):
+def spec_tick(cfg, impl, max_len, k, axes, state_spec, params,
+              draft_params, cache, dcache, tok, pos, tcount, live, temps,
+              maxnew, out, key, stats):
     """One speculative decode tick; everything stays on device.
 
     Buffer contract matches ``serve.engine._tick`` (tok/pos/tcount/live/
@@ -127,10 +127,19 @@ def spec_tick(cfg, impl, max_len, k, axes, params, draft_params,
     live slot per tick, so emitted/slot_launches is the *per-stream*
     tokens-per-launch — 1.0 matches the plain tick).  Emits between 1
     and k+1 tokens per live slot.
+
+    With a ``state_spec`` both caches arrive packed and are unpacked
+    ONCE here: the whole draft/propose/verify/rollback window runs in
+    the float domain (``axes`` are the float-tree axes — snapshots must
+    be stackable and gatherable per position), and both caches repack
+    once on exit.  One dequant/requant round-trip per launch, exactly
+    like the plain tick.
     """
     from repro.serve.engine import _choose_tokens
 
     B = tok.shape[0]
+    cache = R.unpack_state(cfg, cache, state_spec)
+    dcache = R.unpack_state(cfg, dcache, state_spec)
 
     # -- 1) draft proposes k greedy tokens (k+1 steps: the last one only
     #       advances the draft state to cover the all-accepted case)
@@ -194,4 +203,6 @@ def spec_tick(cfg, impl, max_len, k, axes, params, draft_params,
     pos = jnp.where(live, pos + a, pos)
     tcount = jnp.where(live, tcount + a, tcount)
     live = live & (tcount < maxnew) & (pos < max_len - 1)
+    cache = R.pack_state(cfg, cache, state_spec)
+    dcache = R.pack_state(cfg, dcache, state_spec)
     return cache, dcache, tok, pos, tcount, live, out, key, stats

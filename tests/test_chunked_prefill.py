@@ -218,6 +218,60 @@ def test_cancel_mid_prefill_is_not_double_completed():
     assert sum(r.uid == uid for r in eng.completed) == 1
 
 
+def test_cancel_all_parked_rows_frees_every_row():
+    """Cancel sweep over parked rows (prefill done, awaiting a slot).
+
+    Regression: the parked-row cancel path used to pop from the list it
+    was searching, so cancelling several parked uids back to back could
+    skip the row sitting behind each hit — leaking it (never seated,
+    never completed) and wedging the drain.  Parks two rows behind a
+    full pool (in-flight prefill rows are capped at n_slots, so two is
+    the most a 2-slot engine can park), cancels both, and requires each
+    to complete exactly once with its already-sampled first token, the
+    parked list to come up empty, and the surviving streams to drain
+    untouched."""
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=2, vocab_size=64)
+    params = R.init_params(cfg, KEY)
+    rng = np.random.default_rng(3)
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=64, chunk_tokens=8)
+    # two long-running streams pin the pool at its n_slots=2 ceiling
+    survivors = [eng.submit(rng.integers(0, 64, size=6).astype(np.int32),
+                            max_new_tokens=24) for _ in range(2)]
+    for _ in range(3):
+        eng.step()
+    assert all(r is not None for r in eng.slot_req)
+    # two short prompts: prefill finishes in one chunk each, but no
+    # decode slot is free, so the rows park
+    doomed = [eng.submit(rng.integers(0, 64, size=5).astype(np.int32),
+                         max_new_tokens=8) for _ in range(2)]
+    steps = 0
+    while len(eng._parked) < len(doomed):
+        eng.step()
+        steps += 1
+        assert steps < 50, (len(eng._parked), "rows never parked")
+    parked_uids = [entry[0].uid for entry in eng._parked]
+    assert sorted(parked_uids) == sorted(doomed)
+
+    for uid in doomed:                   # the sweep that used to leak
+        assert eng.cancel(uid) is True
+    assert eng._parked == []
+    for uid in doomed:
+        assert eng.cancel(uid) is False  # already cancelled
+        rs = [r for r in eng.completed if r.uid == uid]
+        assert len(rs) == 1              # completed exactly once
+        assert rs[0].cancelled and rs[0].done
+        # prefill had already sampled the first token: delivered with
+        # the cancel rather than dropped
+        assert len(rs[0].out_tokens) == 1
+
+    done = {r.uid for r in eng.run_until_drained(max_ticks=200)}
+    assert set(survivors) <= done
+    for uid in survivors:
+        r = next(r for r in eng.completed if r.uid == uid)
+        assert len(r.out_tokens) == r.max_new_tokens
+    assert not eng._jobs and not eng._parked
+
+
 # --------------------------------------------------------------------------- #
 #  Capability checks and fallbacks
 # --------------------------------------------------------------------------- #

@@ -25,6 +25,14 @@ the unchunked fast path and the slow host loop, and with ``speculate``
 enabled on top.  Chunked admission relaxes exactly one stamp invariant:
 ``token_ticks[0] >= admit_tick`` (prefill spans ticks) instead of
 equality.
+
+A ``state_spec`` dimension spans the quantized state cache: an
+all-``none`` spec must stay EXACTLY bit-identical to the float engine
+(it normalizes away at construction), while lossy specs (int8 / the
+paper-style elementwise-VQ WKV preset) keep every structural invariant,
+emit the exact per-request token counts, and — with whole-prompt
+admission — match the float engine on each stream's FIRST token, since
+prefill logits are computed in the float domain before the cache packs.
 """
 import numpy as np
 import pytest
@@ -36,6 +44,7 @@ from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E
 import jax  # noqa: E402
 
 from repro.configs import ARCHS, reduced  # noqa: E402
+from repro.core.policy import STATE_INT8, STATE_NONE, STATE_VQ_WKV  # noqa: E402
 from repro.models import registry as R  # noqa: E402
 from repro.serve.engine import ServeEngine  # noqa: E402
 
@@ -63,7 +72,7 @@ SETTINGS = dict(max_examples=5, deadline=None,
 
 
 def _drive(trace, fast: bool, n_slots: int = 4, seed: int = 0,
-           speculate: int = 0, chunk_tokens: int = 0):
+           speculate: int = 0, chunk_tokens: int = 0, state_spec=None):
     """Run one arrival schedule to completion; returns (engine, steps).
 
     Requests are submitted in arrival-tick order (ties keep trace order),
@@ -78,7 +87,7 @@ def _drive(trace, fast: bool, n_slots: int = 4, seed: int = 0,
         kw = dict(speculate=speculate, draft_params=DRAFT_PARAMS)
     eng = ServeEngine(CFG, PARAMS, n_slots=n_slots, max_len=MAX_LEN,
                       fast_path=fast, seed=seed, chunk_tokens=chunk_tokens,
-                      **kw)
+                      state_spec=state_spec, **kw)
     i = steps = 0
     while True:
         while i < len(order) and trace[order[i]][3] <= eng.tick_no:
@@ -223,3 +232,44 @@ def test_chunked_speculative_greedy_bit_identical(trace, chunk_tokens):
     _check_common(spec, steps, trace, chunked=True)
     out = {r.uid: r.out_tokens for r in spec.completed}
     assert out == {r.uid: r.out_tokens for r in ref.completed}
+
+
+@settings(**SETTINGS)
+@given(trace=TRACE, speculate=st.sampled_from([0, 2]),
+       chunk_tokens=st.sampled_from([0, 16]))
+def test_state_none_spec_exactly_bit_identical(trace, speculate,
+                                               chunk_tokens):
+    """An all-none StateCacheSpec IS the float engine: greedy outputs
+    bit-identical across plain/chunked/speculative serving (the spec
+    normalizes to None, so the jitted tick is structurally the same)."""
+    trace = [(L, n, 0.0, a) for (L, n, _, a) in trace]
+    eng, steps = _drive(trace, fast=True, speculate=speculate,
+                        chunk_tokens=chunk_tokens, state_spec=STATE_NONE)
+    assert eng.state_spec is None
+    ref, _ = _drive(trace, fast=True, speculate=speculate,
+                    chunk_tokens=chunk_tokens)
+    _check_common(eng, steps, trace, chunked=chunk_tokens > 0)
+    out = {r.uid: r.out_tokens for r in eng.completed}
+    assert out == {r.uid: r.out_tokens for r in ref.completed}
+
+
+@settings(**SETTINGS)
+@given(trace=TRACE, state_spec=st.sampled_from([STATE_INT8, STATE_VQ_WKV]),
+       speculate=st.sampled_from([0, 2]),
+       chunk_tokens=st.sampled_from([0, 16]))
+def test_quantized_state_structural_invariants(trace, state_spec,
+                                               speculate, chunk_tokens):
+    """Lossy state specs keep every structural invariant (FIFO, counts,
+    stamps, sync budget) and the exact per-request token counts; under
+    whole-prompt admission each stream's first token matches the float
+    engine exactly — prefill logits precede the pack."""
+    trace = [(L, n, 0.0, a) for (L, n, _, a) in trace]
+    eng, steps = _drive(trace, fast=True, speculate=speculate,
+                        chunk_tokens=chunk_tokens, state_spec=state_spec)
+    assert eng.state_spec is state_spec
+    _check_common(eng, steps, trace, chunked=chunk_tokens > 0)
+    if chunk_tokens == 0:
+        ref, _ = _drive(trace, fast=True, speculate=speculate)
+        out = {r.uid: r.out_tokens for r in eng.completed}
+        out_ref = {r.uid: r.out_tokens for r in ref.completed}
+        assert all(out[u][0] == out_ref[u][0] for u in out)

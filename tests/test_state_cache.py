@@ -1,0 +1,287 @@
+"""Quantized state-cache subsystem: pack/unpack, engine, artifact.
+
+Three layers under test:
+
+* ``core.state_quant`` — the per-leaf pack/unpack codecs.  Power-of-two
+  scales make int8 exactly idempotent (pack∘unpack∘pack is a fixpoint:
+  a repacked cache never drifts), fp8/vq carry bounded per-element
+  error; zero state stays exactly zero under every mode.
+* ``models.registry`` + ``serve.engine`` — the spec threads through
+  ``init_cache``/``decode_step``/``prefill_chunk`` so the jitted tick
+  stays device-resident on the packed tree; an all-``none`` spec (or
+  ``state_spec=None``) IS the float engine, byte for byte; the slow
+  host loop is the float reference and ignores the spec.
+* ``core.artifact`` — ``format_version`` 4 carries the spec; v1-v3
+  archives (no ``state_cache`` manifest key) load unchanged with a
+  float state cache, and ``Engine.from_artifact`` adopts a v4 spec.
+
+The randomized engine-invariant dimension (structural invariants +
+first-token exactness under quantized state) lives in
+``test_serve_invariants.py``; the memory/PPL trade is measured in
+``benchmarks.decode_throughput`` section 8 and gated by
+``benchmarks.coverage_guard``.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs import ALL_CONFIGS, ARCHS, reduced
+from repro.core import state_quant as SQ
+from repro.core.coverage import state_cache_report
+from repro.core.policy import (STATE_FP8, STATE_INT8, STATE_NONE,
+                               STATE_VQ_WKV, DATAFREE_3_275, StateCacheSpec)
+from repro.models import registry as R
+from repro.serve.engine import ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+CFG = reduced(ARCHS["rwkv6-3b"], n_layers=2, vocab_size=64)
+PARAMS = R.init_params(CFG, KEY)
+
+# empirical worst-case relative error of one pack/unpack round trip
+# (max|x - deq| / max|x|): int8 has 127 levels per power-of-two bucket,
+# fp8-e4m3 ~2 decimal digits, the 16-entry NF4 codebook is coarsest
+REL_ERR = {"int8": 0.02, "fp8": 0.15, "vq": 0.40}
+
+
+# --------------------------------------------------------------------------- #
+#  Codec layer
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("mode", ["int8", "fp8", "vq"])
+def test_pack_unpack_error_bound(mode):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 3, 16)).astype(np.float32))
+    packed = SQ.pack_array(x, mode)
+    y = SQ.unpack_array(packed, mode, x.dtype)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    err = float(jnp.max(jnp.abs(x - y)))
+    assert err <= REL_ERR[mode] * float(jnp.max(jnp.abs(x))), (mode, err)
+
+
+@pytest.mark.parametrize("mode", ["int8", "fp8", "vq"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_repack_is_fixpoint(mode, dtype):
+    """Quantize-on-write must not drift: the engine repacks the cache
+    every tick, so pack∘unpack must reach a fixpoint.  int8 is exact on
+    the FIRST repack (power-of-two scales: requantizing the grid lands
+    on itself); fp8/vq may shrink the scale bucket once, then stick."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8))).astype(dtype)
+    p1 = SQ.pack_array(x, mode)
+    y1 = SQ.unpack_array(p1, mode, dtype)
+    p2 = SQ.pack_array(y1, mode)
+    y2 = SQ.unpack_array(p2, mode, dtype)
+    if mode == "int8":
+        assert jnp.array_equal(p1["codes"], p2["codes"])
+        assert jnp.array_equal(p1["scale"], p2["scale"])
+    p3 = SQ.pack_array(y2, mode)
+    y3 = SQ.unpack_array(p3, mode, dtype)
+    assert jnp.array_equal(y2, y3), f"{mode} state drifts under repack"
+
+
+@pytest.mark.parametrize("mode", ["int8", "fp8", "vq"])
+def test_zero_state_is_exact(mode):
+    """Fresh caches are all-zero; packing must keep them exactly zero
+    (no NaN/garbage from a degenerate amax)."""
+    x = jnp.zeros((3, 4, 5), jnp.float32)
+    y = SQ.unpack_array(SQ.pack_array(x, mode), mode, x.dtype)
+    assert jnp.array_equal(y, x)
+
+
+def test_spec_validation_and_hash():
+    with pytest.raises(ValueError, match="int4"):
+        StateCacheSpec(default="int4")
+    with pytest.raises(ValueError, match="fp16"):
+        StateCacheSpec(overrides=(("state", "fp16"),))
+    assert not STATE_NONE.enabled()
+    assert STATE_INT8.enabled()
+    assert STATE_VQ_WKV.mode_for("state") == "vq"
+    assert STATE_VQ_WKV.mode_for("shift_tm") == "int8"
+    hashes = {s.spec_hash() for s in
+              (STATE_NONE, STATE_INT8, STATE_FP8, STATE_VQ_WKV)}
+    assert len(hashes) == 4
+    rt = StateCacheSpec.from_dict(STATE_VQ_WKV.to_dict())
+    assert rt == STATE_VQ_WKV and rt.spec_hash() == STATE_VQ_WKV.spec_hash()
+
+
+# --------------------------------------------------------------------------- #
+#  Registry layer: every family round-trips its cache
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "rwkv7-0.1b", "llama3-8b",
+                                  "jamba-1.5-large-398b"])
+def test_registry_pack_roundtrip_all_families(arch):
+    base = ALL_CONFIGS[arch]
+    kw = dict(vocab_size=64)
+    kw["n_layers"] = base.attn_every if base.family == "hybrid" else 2
+    cfg = reduced(base, **kw)
+    assert R.state_cache_leaves(cfg), f"{arch} declares no cache leaves"
+    float_cache = R.init_cache(cfg, 2, 32)
+    packed = R.pack_state(cfg, float_cache, STATE_INT8)
+    assert SQ.tree_nbytes(packed) < SQ.tree_nbytes(float_cache)
+    back = R.unpack_state(cfg, packed, STATE_INT8)
+    assert jax.tree.structure(back) == jax.tree.structure(float_cache)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(float_cache)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        # fresh caches are zero, so the round trip is exact
+        assert jnp.array_equal(a, b), arch
+    # spec=None and all-none specs are passthrough, not a repack
+    assert R.pack_state(cfg, float_cache, None) is float_cache
+    assert R.pack_state(cfg, float_cache, STATE_NONE) is float_cache
+
+
+# --------------------------------------------------------------------------- #
+#  Engine layer
+# --------------------------------------------------------------------------- #
+def _serve(state_spec, speculate=0, chunk_tokens=0, fast=True):
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, 64, size=n).astype(np.int32)
+               for n in (3, 11, 7, 18)]
+    kw = {}
+    if speculate:
+        drng = np.random.default_rng(7)
+        kw = dict(speculate=speculate, draft_params=jax.tree.map(
+            lambda x: x + 0.05 * drng.standard_normal(x.shape)
+            .astype(x.dtype), PARAMS))
+    eng = ServeEngine(CFG, PARAMS, n_slots=4, max_len=48, fast_path=fast,
+                      chunk_tokens=chunk_tokens, state_spec=state_spec,
+                      **kw)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=6)
+    done = eng.run_until_drained(max_ticks=200)
+    assert len(done) == len(prompts)
+    return eng, {r.uid: r.out_tokens for r in done}
+
+
+@pytest.mark.parametrize("speculate,chunk_tokens",
+                         [(0, 0), (0, 16), (2, 0), (2, 16)])
+def test_state_none_is_the_float_engine(speculate, chunk_tokens):
+    """state=none parity is structural, not numerical: the spec
+    normalizes to None at construction, so plain/chunked/speculative
+    greedy outputs are bit-identical to the unquantized engine."""
+    eng, out = _serve(STATE_NONE, speculate, chunk_tokens)
+    assert eng.state_spec is None
+    _, ref = _serve(None, speculate, chunk_tokens)
+    assert out == ref
+
+
+def test_slow_path_ignores_state_spec():
+    """The host loop is the float reference: fast_path=False must force
+    the spec off rather than serve a quantized 'reference'."""
+    eng, out = _serve(STATE_INT8, fast=False)
+    assert eng.state_spec is None
+    _, ref = _serve(None, fast=False)
+    assert out == ref
+
+
+@pytest.mark.parametrize("spec", [STATE_INT8, STATE_FP8, STATE_VQ_WKV],
+                         ids=["int8", "fp8", "vq_wkv"])
+@pytest.mark.parametrize("speculate,chunk_tokens", [(0, 0), (2, 16)])
+def test_quantized_state_serves_and_first_token_exact(
+        spec, speculate, chunk_tokens):
+    """Every mode serves the full trace; with whole-prompt admission the
+    FIRST token of each stream is exact (prefill logits are computed in
+    the float domain before the cache packs)."""
+    eng, out = _serve(spec, speculate, chunk_tokens)
+    assert eng.state_spec is spec
+    _, ref = _serve(None, speculate, chunk_tokens)
+    assert set(out) == set(ref)
+    for uid in out:
+        assert len(out[uid]) == len(ref[uid])
+    if chunk_tokens == 0:
+        assert all(out[u][0] == ref[u][0] for u in out)
+
+
+def test_spec_hash_keys_the_closure_cache():
+    """Engines with different specs must not share jitted ticks: the
+    spec hash joins every closure-cache key."""
+    from repro.serve import engine as se
+    se.clear_closure_cache()
+    _serve(None)
+    n_none = len(se._CLOSURE_CACHE)
+    _serve(STATE_INT8)
+    n_int8 = len(se._CLOSURE_CACHE)
+    assert n_int8 > n_none
+    e3, _ = _serve(STATE_INT8)     # same spec: fully warm, no new keys
+    assert len(se._CLOSURE_CACHE) == n_int8
+    assert sum(e3.jit_recompiles.values()) == 0
+
+
+# --------------------------------------------------------------------------- #
+#  Artifact layer: v4 round trip + v1-v3 compatibility
+# --------------------------------------------------------------------------- #
+def _rewrite_manifest(path, mutate):
+    with np.load(path, allow_pickle=False) as zf:
+        data = {k: zf[k] for k in zf.files}
+    m = json.loads(bytes(data["manifest"]).decode("utf-8"))
+    mutate(m)
+    data["manifest"] = np.frombuffer(json.dumps(m).encode("utf-8"),
+                                     dtype=np.uint8)
+    with open(path, "wb") as fh:
+        np.savez(fh, **data)
+
+
+def test_artifact_v4_roundtrip_and_v3_compat(tmp_path):
+    art = api.quantize(CFG, PARAMS, DATAFREE_3_275,
+                       state_cache=STATE_INT8)
+    path = str(tmp_path / "sc.rqa")
+    api.save(art, path)
+    back = api.load(path)
+    assert back.format_version == api.FORMAT_VERSION
+    assert back.state_spec == STATE_INT8
+    eng = api.Engine.from_artifact(back, n_slots=2, max_len=48)
+    assert eng.state_spec == STATE_INT8       # v4 spec adopted
+    # explicit override beats the artifact default
+    e2 = api.Engine.from_artifact(back, n_slots=2, max_len=48,
+                                  state_spec=STATE_NONE)
+    assert e2.state_spec is None
+
+    # simulate a pre-state-cache (v3) archive: strip the key + downversion
+    def _downgrade(m):
+        assert m.pop("state_cache") is not None
+        m["format_version"] = 3
+    _rewrite_manifest(path, _downgrade)
+    old = api.load(path)
+    assert old.state_spec is None
+    assert api.Engine.from_artifact(old, n_slots=2,
+                                    max_len=48).state_spec is None
+    # re-saving the in-memory upgrade writes a current-version file
+    path2 = str(tmp_path / "sc2.rqa")
+    api.save(old, path2)
+    assert api.load(path2).format_version == api.FORMAT_VERSION
+
+
+def test_artifact_without_spec_writes_null_and_loads_none(tmp_path):
+    art = api.quantize(CFG, PARAMS, DATAFREE_3_275)
+    path = str(tmp_path / "plain.rqa")
+    api.save(art, path)
+    assert api.load(path).state_spec is None
+
+
+def test_blockwise_kind_rejects_state_cache():
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": rng.integers(0, 64, size=(1, 8))
+                .astype(np.int32)}]
+    with pytest.raises(ValueError, match="state_cache"):
+        api.quantize(CFG, PARAMS, DATAFREE_3_275, batches=batches,
+                     state_cache=STATE_INT8)
+
+
+# --------------------------------------------------------------------------- #
+#  Memory accounting
+# --------------------------------------------------------------------------- #
+def test_state_cache_report_budget_math():
+    rep = state_cache_report(CFG, STATE_INT8, 48, memory_budget=1 << 20)
+    assert rep["state_bytes_per_slot"] < rep["float_bytes_per_slot"]
+    assert rep["ratio"] < 0.35            # the guard threshold holds here
+    slots = rep["slots_at_budget"]
+    assert slots["packed"] >= 2 * slots["float"]
+    # per-leaf numbers add up to the totals
+    assert sum(v["packed_bytes"] for v in rep["leaves"].values()) \
+        == rep["state_bytes_per_slot"]
+    assert sum(v["float_bytes"] for v in rep["leaves"].values()) \
+        == rep["float_bytes_per_slot"]
+    for name in R.state_cache_leaves(CFG):
+        assert rep["leaves"][name]["mode"] == "int8"
