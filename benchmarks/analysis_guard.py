@@ -1,0 +1,34 @@
+"""CI serving-graph sanitizer gate.
+
+Runs the full static analysis surface and fails on any finding not in
+the checked-in baseline (``benchmarks/analysis_baseline.json``):
+
+* the host-side AST lints over ``src/repro``, ``examples`` and
+  ``benchmarks`` (captured-mutation, iter-mutate, tick-host-sync,
+  facade-import — see ``repro.analysis`` for the rule catalog);
+* the jaxpr audits over a small quantized rwkv6 **ladder** engine
+  built fresh in-process (speculate=2, chunk_tokens=16, so all four
+  closure families — prefill, decode tick, spec_tick, prefill_chunk —
+  are traced): no host-transfer primitives, no float64, no silent XLA
+  dequant of a quantized weight, byte accounting consistent with
+  ``core.coverage``;
+* the ladder PRNG key-lineage contract.
+
+Everything is static — jaxprs are traced abstractly, nothing decodes —
+so the gate runs on the CPU CI runner in interpret mode.  The baseline
+is empty by policy (fix findings, don't accept them); a PR that must
+baseline a finding regenerates the file with
+``python -m repro.analysis --write-baseline`` and owns the diff.
+
+    PYTHONPATH=src python -m benchmarks.analysis_guard
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.analysis.__main__ import main
+
+if __name__ == "__main__":
+    rc = main(["--engine"])
+    print(f"\n[gate analysis] {'OK' if rc == 0 else 'FAILED'}")
+    sys.exit(rc)

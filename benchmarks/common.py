@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.configs import ARCHS, PAPER_FAMILY, ModelConfig, reduced
 from repro.core import quantized as qz
-from repro.core.pipeline import QuantizedLM, blockwise_quantize, float_lm
+from repro.api import QuantizedLM, blockwise_quantize, float_lm
 from repro.core.policy import QuantPolicy
 from repro.data.synthetic import CorpusConfig, SyntheticCorpus
 from repro.models import registry as R
@@ -116,7 +116,8 @@ def weight_mse(lm_q: QuantizedLM, lm_f: QuantizedLM) -> float:
 
 def iter_matmul_weights(params):
     """(path, layer, 2d weight) over scan-stacked block params."""
-    from repro.core.hybrid import iter_quantizable, _layer_slices
+    from repro.api import iter_quantizable
+    from repro.api import layer_slices as _layer_slices
     from repro.core.policy import DATAFREE_3_275
     for ps, leaf, kind, stacked in iter_quantizable(params, DATAFREE_3_275):
         if kind not in ("matmul", "matmul_nd"):

@@ -63,7 +63,7 @@ import jax
 
 from benchmarks.decode_throughput import decode_cfg
 from repro.core import coverage
-from repro.core.hybrid import quantize_tree
+from repro.api import quantize_tree
 from repro.core.policy import DATAFREE_3_275, DRAFT_VQ_2
 from repro.models import registry as R
 
@@ -73,80 +73,84 @@ BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_decode.json")
 
 
+def _gate(failures: list, name: str, bad: bool, detail: str) -> None:
+    """One named gate: print ``[gate <name>] OK/FAILED: detail`` and
+    record the failure.  Every check routes through here so a red CI
+    log always names the specific gate that tripped."""
+    status = "FAILED" if bad else "OK"
+    print(f"[gate {name}] {status}: {detail}")
+    if bad:
+        failures.append(f"{name}: {detail}")
+
+
 def _latency_failures(thr) -> list:
-    """Chunked-serving tail-latency gate over BENCH_decode.json."""
+    """Chunked-serving tail-latency gates over BENCH_decode.json."""
     if not os.path.exists(BENCH_JSON):
-        print("\n[latency gate skipped: BENCH_decode.json not found — "
+        print("\n[latency gates skipped: BENCH_decode.json not found — "
               "run `python -m benchmarks.run --only decode` first]")
         return []
     with open(BENCH_JSON) as f:
         cb = json.load(f).get("continuous_batching", {}).get("chunked")
     if cb is None:
-        print("\n[latency gate skipped: no continuous_batching section "
+        print("\n[latency gates skipped: no continuous_batching section "
               "in BENCH_decode.json — re-run the decode benchmark]")
         return []
     failures = []
     ttft = cb["ttft_ticks"]["p99"]
-    if ttft > thr["max_ttft_p99_ticks"]:
-        failures.append(
-            f"chunked ttft p99 {ttft:.1f} ticks > "
-            f"max_ttft_p99_ticks={thr['max_ttft_p99_ticks']}")
+    _gate(failures, "ttft-p99", ttft > thr["max_ttft_p99_ticks"],
+          f"chunked ttft p99 {ttft:.1f} ticks vs "
+          f"max_ttft_p99_ticks={thr['max_ttft_p99_ticks']}")
     qwait = cb["queue_wait_ticks"]["max"]
-    if qwait > thr["max_queue_wait_ticks"]:
-        failures.append(
-            f"chunked max queue wait {qwait:.0f} ticks > "
-            f"max_queue_wait_ticks={thr['max_queue_wait_ticks']}")
+    _gate(failures, "queue-wait", qwait > thr["max_queue_wait_ticks"],
+          f"chunked max queue wait {qwait:.0f} ticks vs "
+          f"max_queue_wait_ticks={thr['max_queue_wait_ticks']}")
     stall = cb["max_decode_stall_ticks"]
-    if stall > thr["max_decode_stall_ticks"]:
-        failures.append(
-            f"max_decode_stall_ticks={stall} > "
-            f"{thr['max_decode_stall_ticks']} — chunked prefill is "
-            "stalling live decode streams beyond its budget")
-    if not failures:
-        print(f"\nlatency gate OK: ttft p99 {ttft:.1f} <= "
-              f"{thr['max_ttft_p99_ticks']} ticks, max queue wait "
-              f"{qwait:.0f} <= {thr['max_queue_wait_ticks']} ticks, "
-              f"stall {stall} <= {thr['max_decode_stall_ticks']}")
+    _gate(failures, "decode-stall", stall > thr["max_decode_stall_ticks"],
+          f"max_decode_stall_ticks={stall} vs "
+          f"{thr['max_decode_stall_ticks']} (a prefill must never stall "
+          "live decode streams beyond one chunk's budget)")
     return failures
 
 
 def _state_cache_failures(thr, cfg) -> list:
     """Quantized-state gates: analytic bytes-per-slot + measured PPL."""
     from benchmarks.decode_throughput import BURSTY_MAX_LEN
-    from repro.core.policy import STATE_INT8
+    from repro.core.policy import STATE_INT8, STATE_VQ_WKV
 
     failures = []
+    print()
     rep = coverage.state_cache_report(cfg, STATE_INT8, BURSTY_MAX_LEN)
     max_ratio = thr.get("max_state_bytes_ratio", 0.5)
-    if rep["ratio"] > max_ratio:
-        failures.append(
-            f"int8 state bytes/slot {rep['state_bytes_per_slot']} is "
-            f"{rep['ratio']:.4f} of float > max_state_bytes_ratio="
-            f"{max_ratio}")
-    else:
-        print(f"\nstate-cache bytes gate OK: int8 "
-              f"{rep['state_bytes_per_slot']} B/slot = {rep['ratio']:.4f} "
-              f"of float <= {max_ratio}")
+    _gate(failures, "state-int8-bytes", rep["ratio"] > max_ratio,
+          f"int8 {rep['state_bytes_per_slot']} B/slot = "
+          f"{rep['ratio']:.4f} of float vs max_state_bytes_ratio="
+          f"{max_ratio}")
+
+    # the nibble-packed 4-bit vq cache must actually buy memory over
+    # int8 — one code per byte would pass the int8 gate while silently
+    # storing at int8 density
+    vrep = coverage.state_cache_report(cfg, STATE_VQ_WKV, BURSTY_MAX_LEN)
+    vmax = thr.get("max_state_vq_bytes_ratio", 0.25)
+    _gate(failures, "state-vq-bytes", vrep["ratio"] > vmax,
+          f"vq_wkv {vrep['state_bytes_per_slot']} B/slot = "
+          f"{vrep['ratio']:.4f} of float vs max_state_vq_bytes_ratio="
+          f"{vmax}")
 
     if not os.path.exists(BENCH_JSON):
-        print("[state-cache PPL gate skipped: BENCH_decode.json not "
+        print("[state-ppl gate skipped: BENCH_decode.json not "
               "found — run `python -m benchmarks.run --only decode` "
               "first]")
         return failures
     with open(BENCH_JSON) as f:
         sc = json.load(f).get("state_cache", {}).get("int8")
     if sc is None:
-        print("[state-cache PPL gate skipped: no state_cache section in "
+        print("[state-ppl gate skipped: no state_cache section in "
               "BENCH_decode.json — re-run the decode benchmark]")
         return failures
     max_delta = thr.get("max_state_ppl_delta", 0.1)
-    if sc["ppl_delta"] > max_delta:
-        failures.append(
-            f"int8 state-cache ppl delta {sc['ppl_delta']:+.4f} > "
-            f"max_state_ppl_delta={max_delta}")
-    else:
-        print(f"state-cache PPL gate OK: int8 delta "
-              f"{sc['ppl_delta']:+.4f} <= {max_delta}")
+    _gate(failures, "state-ppl", sc["ppl_delta"] > max_delta,
+          f"int8 state-cache ppl delta {sc['ppl_delta']:+.4f} vs "
+          f"max_state_ppl_delta={max_delta}")
     return failures
 
 
@@ -168,37 +172,34 @@ def main() -> int:
     print(coverage.format_table(draft_report))
 
     failures = []
-    if report["n_fallback_leaves"] > thr["max_fallback_leaves"]:
-        failures.append(
-            f"n_fallback_leaves={report['n_fallback_leaves']} > "
-            f"max_fallback_leaves={thr['max_fallback_leaves']}")
-    if report["ratio"] > thr["max_byte_ratio"]:
-        failures.append(
-            f"byte ratio {report['ratio']:.4f} > "
-            f"max_byte_ratio={thr['max_byte_ratio']}")
+    print()
+    _gate(failures, "kernel-coverage",
+          report["n_fallback_leaves"] > thr["max_fallback_leaves"],
+          f"target {report['n_kernel_leaves']}/{report['n_leaves']} "
+          f"leaves on kernels, n_fallback_leaves="
+          f"{report['n_fallback_leaves']} vs max_fallback_leaves="
+          f"{thr['max_fallback_leaves']}")
+    _gate(failures, "byte-ratio", report["ratio"] > thr["max_byte_ratio"],
+          f"target byte ratio {report['ratio']:.4f} vs "
+          f"max_byte_ratio={thr['max_byte_ratio']}")
     dmax_fb = thr.get("max_draft_fallback_leaves", 0)
-    if draft_report["n_fallback_leaves"] > dmax_fb:
-        failures.append(
-            f"draft n_fallback_leaves={draft_report['n_fallback_leaves']}"
-            f" > max_draft_fallback_leaves={dmax_fb}")
+    _gate(failures, "draft-kernel-coverage",
+          draft_report["n_fallback_leaves"] > dmax_fb,
+          f"draft n_fallback_leaves={draft_report['n_fallback_leaves']} "
+          f"vs max_draft_fallback_leaves={dmax_fb}")
     dmax_ratio = thr.get("max_draft_byte_ratio", thr["max_byte_ratio"])
-    if draft_report["ratio"] > dmax_ratio:
-        failures.append(
-            f"draft byte ratio {draft_report['ratio']:.4f} > "
-            f"max_draft_byte_ratio={dmax_ratio}")
+    _gate(failures, "draft-byte-ratio",
+          draft_report["ratio"] > dmax_ratio,
+          f"draft byte ratio {draft_report['ratio']:.4f} vs "
+          f"max_draft_byte_ratio={dmax_ratio}")
     failures += _state_cache_failures(thr, cfg)
     failures += _latency_failures(thr)
     if failures:
-        print("\ncoverage guard FAILED:")
+        print(f"\ncoverage guard FAILED ({len(failures)} gate(s)):")
         for f_ in failures:
             print(f"  - {f_}")
         return 1
-    print(f"\ncoverage guard OK: target {report['n_kernel_leaves']}/"
-          f"{report['n_leaves']} leaves on kernels "
-          f"(ratio {report['ratio']:.4f} <= {thr['max_byte_ratio']}), "
-          f"draft {draft_report['n_kernel_leaves']}/"
-          f"{draft_report['n_leaves']} "
-          f"(ratio {draft_report['ratio']:.4f} <= {dmax_ratio})")
+    print("\ncoverage guard OK: every gate passed")
     return 0
 
 

@@ -84,10 +84,10 @@ import numpy as np
 from benchmarks.common import Timer, csv_row
 from repro.configs import ARCHS, reduced
 from repro.core import coverage
-from repro.core.hybrid import quantize_tree
+from repro.api import quantize_tree
 from repro.core.policy import DATAFREE_3_275
 from repro.models import registry as R
-from repro.serve.engine import ServeEngine
+from repro.api import Engine as ServeEngine
 
 KEY = jax.random.PRNGKey(0)
 OUT_JSON = os.path.join(os.path.dirname(__file__), "..",
@@ -198,8 +198,8 @@ def _bursty_trace(cfg):
 
 def _drive_bursty(cfg, params, fast_path: bool, impl: str,
                   engine_factory=None):
-    from repro.serve import engine as se
-    se.clear_closure_cache()     # recompile counts must measure THIS
+    from repro.api import clear_closure_cache
+    clear_closure_cache()        # recompile counts must measure THIS
     prompts, arrivals = _bursty_trace(cfg)   # trace, not earlier sections
     eng = engine_factory() if engine_factory is not None else \
         ServeEngine(cfg, params, n_slots=BURSTY_N_SLOTS,
@@ -355,8 +355,8 @@ def _drive_cb(cfg, params, trace, fast_path, chunk_tokens):
 
 
 def _continuous_batching(cfg, params):
-    from repro.serve import engine as se
-    se.clear_closure_cache()
+    from repro.api import clear_closure_cache
+    clear_closure_cache()
     trace = _cb_trace(cfg)
     out = {"chunk_tokens": CB_CHUNK, "n_slots": CB_N_SLOTS,
            "max_len": CB_MAX_LEN, "n_requests": len(trace),
@@ -592,7 +592,6 @@ def _cold_start(cfg, params, qp, policy):
     import tempfile
 
     from repro import api
-    from repro.serve import engine as se
 
     out = {}
     t0 = time.time()
@@ -626,7 +625,7 @@ def _cold_start(cfg, params, qp, policy):
         gen.close()
         return dt, eng.jit_recompiles
 
-    se.clear_closure_cache()
+    api.clear_closure_cache()
     cold_s, cold_rc = boot_first_token(loaded)
     warm_s, warm_rc = boot_first_token(loaded)
     assert sum(warm_rc.values()) == 0, warm_rc   # cache reuse contract

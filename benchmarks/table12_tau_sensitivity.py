@@ -8,8 +8,8 @@ import numpy as np
 
 from benchmarks.common import (Timer, bench_config, calib_batches, csv_row,
                                eval_ppl, train_small)
-from repro.core.hybrid import compute_all_proxies
-from repro.core.pipeline import blockwise_quantize, float_lm
+from repro.api import compute_all_proxies
+from repro.api import blockwise_quantize, float_lm
 from repro.core.policy import PAPER_3_275
 
 KEY = jax.random.PRNGKey(0)

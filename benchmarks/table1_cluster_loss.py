@@ -33,7 +33,8 @@ def avg_cluster_loss(params, n_clusters: int, max_tensors: int = 24):
 
 def _class_pc(params, kind_sel: str) -> float:
     """Mean coarse proxy P_c over a weight class (uniformity measure)."""
-    from repro.core.hybrid import iter_quantizable, _layer_slices
+    from repro.api import iter_quantizable
+    from repro.api import layer_slices as _layer_slices
     from repro.core.policy import DATAFREE_3_275
     from repro.core import proxy as proxy_mod
     import jax.numpy as jnp

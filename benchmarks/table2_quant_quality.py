@@ -17,8 +17,8 @@ import numpy as np
 from benchmarks.common import (Timer, bench_config, calib_batches, csv_row,
                                eval_ppl, train_small, weight_mse)
 from repro.core import quantized as qz
-from repro.core.pipeline import (QuantizedLM, adapter_for, blockwise_quantize,
-                                 float_lm)
+from repro.api import (QuantizedLM, adapter_for, blockwise_quantize,
+                       float_lm)
 from repro.core.policy import (KMEANS_3_5, PAPER_3_275, RTN_3_5,
                                SQ_ONLY_3_5, VQ_ONLY_3_5, QuantPolicy)
 from repro.core.sq.awq import awq_quantize
@@ -34,7 +34,7 @@ def _effective_weight_lm(cfg, params, fn) -> QuantizedLM:
     Used for AWQ / rotation baselines whose scale/rotation cannot be
     fused in RWKV — accuracy is measured on the effective weights; the
     runtime overhead is reported separately (FLOPs column)."""
-    from repro.core.hybrid import iter_quantizable
+    from repro.api import iter_quantizable
     from repro.core.policy import DATAFREE_3_275
     targets = {ps for ps, _, kind, _ in
                iter_quantizable(params, DATAFREE_3_275)
@@ -59,7 +59,7 @@ def methods(cfg, params, batches):
     def bw(policy):
         return blockwise_quantize(cfg, params, batches, policy, KEY)
 
-    from repro.core.hybrid import _largest_group
+    from repro.api import largest_group as _largest_group
 
     def awq_fn(w):
         am = jnp.ones((w.shape[0],), jnp.float32)

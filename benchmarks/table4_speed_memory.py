@@ -88,7 +88,7 @@ def roofline_speed_table(print_csv):
 
 def measured_decode(print_csv):
     """CPU wall-clock decode with fp vs quantized small RWKV6."""
-    from repro.core.hybrid import quantize_tree
+    from repro.api import quantize_tree
     t = Timer()
     cfg = bench_config("rwkv6-3b")
     params = train_small(cfg)

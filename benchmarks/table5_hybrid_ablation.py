@@ -5,7 +5,7 @@ import jax
 
 from benchmarks.common import (Timer, bench_config, calib_batches, csv_row,
                                eval_ppl, train_small)
-from repro.core.pipeline import blockwise_quantize, float_lm
+from repro.api import blockwise_quantize, float_lm
 from repro.core.policy import PAPER_3_275, SQ_ONLY_3_5, VQ_ONLY_3_5
 
 KEY = jax.random.PRNGKey(0)

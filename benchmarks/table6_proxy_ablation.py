@@ -17,7 +17,7 @@ import numpy as np
 from benchmarks.common import (Timer, bench_config, calib_batches, csv_row,
                                eval_ppl, iter_matmul_weights, train_small)
 from repro.core import proxy as proxy_mod
-from repro.core.pipeline import blockwise_quantize, float_lm
+from repro.api import blockwise_quantize, float_lm
 from repro.core.policy import PAPER_3_275
 from repro.core.sq.rtn import rtn_quantize
 from repro.core.vq.gptvq import kmeans_vq_quantize

@@ -23,7 +23,7 @@ import argparse
 from benchmarks.common import (bench_config, calib_batches, eval_ppl,
                                train_small)
 from repro import api
-from repro.core.pipeline import float_lm
+from repro.api import float_lm
 from repro.core.policy import PAPER_3_275, RTN_3_5, SQ_ONLY_3_5, VQ_ONLY_3_5
 
 

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, reduced
 from repro.core import quantized as qz
-from repro.core.hybrid import quantize_tree
+from repro.api import quantize_tree
 from repro.core.policy import DATAFREE_3_275
 from repro.models import registry as R
 

@@ -1,0 +1,76 @@
+"""Serving-graph sanitizer: static jaxpr audits + host-side AST lints.
+
+Every serving guarantee this repo makes — device-resident decode ticks,
+the proxy-split never silently falling back to XLA dequant, the ladder
+PRNG contract — used to be enforced only by *running* things.  This
+package checks them statically, before a single token is decoded.
+
+Run it locally
+--------------
+
+    # AST lints over src/repro, examples/, benchmarks/ (default roots)
+    PYTHONPATH=src python -m repro.analysis
+
+    # + jaxpr audits of a freshly built quantized rwkv6 engine
+    PYTHONPATH=src python -m repro.analysis --engine
+
+    # lint specific paths only
+    PYTHONPATH=src python -m repro.analysis benchmarks examples
+
+Exit status is non-zero when any finding is not in the checked-in
+baseline (``benchmarks/analysis_baseline.json``).  CI runs the same
+thing via ``benchmarks/analysis_guard.py``.  Programmatic entry:
+``repro.api.audit_report(engine)``.
+
+What each rule catches
+----------------------
+
+AST lints (``ast_lint.py`` — see its docstring for the bug history):
+
+* ``captured-mutation`` — ``obj.attr += ...`` after ``obj.attr`` was
+  passed to a call in the same function (async-dispatch race, PR 8).
+* ``iter-mutate`` — ``pop``/``remove`` on the list a ``for`` loop is
+  iterating (skipped-element cancel bug, PR 9).
+* ``tick-host-sync`` — ``.item()`` / ``jax.device_get`` / ``np.*()``
+  calls in tick-path code (``TICK_PATH = True`` modules + the engine's
+  tick functions).
+* ``facade-import`` — examples/ or benchmarks/ importing
+  ``repro.core.pipeline`` / ``repro.core.hybrid`` / ``repro.serve``
+  instead of the supported ``repro.api`` facade.
+
+Graph audits (``jaxpr_audit.py`` — statically walks the ClosedJaxpr of
+every closure in the engine's shared jit cache):
+
+* ``host-transfer`` — callback/infeed/outfeed primitives in a graph.
+* ``f64-op`` — any float64 operand or result.
+* ``silent-dequant`` — int→float ``convert_element_type`` whose output
+  matches a quantized weight's dequantized size (XLA fallback).
+* ``coverage-drift`` — the dequant count disagrees with
+  ``core.coverage`` byte accounting (one of the detectors has rotted).
+* ``prng-lineage`` — the ladder key table violates the one-raw-key /
+  distinct-tags contract.
+
+Extending the baseline
+----------------------
+
+The repo policy is to FIX findings, and the checked-in baseline is
+empty.  If a finding genuinely must be accepted (e.g. mid-refactor),
+run ``python -m repro.analysis --write-baseline`` and commit the
+regenerated ``benchmarks/analysis_baseline.json`` — the diff shows
+exactly which keys the PR accepts, and the review owns that decision.
+Baseline keys are line-independent (rule + path + context), so
+unrelated edits never invalidate them.
+"""
+from repro.analysis.ast_lint import lint_paths, lint_source
+from repro.analysis.baseline import (load_baseline, new_findings,
+                                     write_baseline)
+from repro.analysis.findings import Finding, format_findings
+from repro.analysis.jaxpr_audit import (audit_engine, audit_jaxpr,
+                                        audit_ladder_keys)
+
+__all__ = [
+    "Finding", "format_findings",
+    "lint_source", "lint_paths",
+    "audit_engine", "audit_jaxpr", "audit_ladder_keys",
+    "load_baseline", "new_findings", "write_baseline",
+]

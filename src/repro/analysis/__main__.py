@@ -1,0 +1,117 @@
+"""CLI for the serving-graph sanitizer.
+
+    PYTHONPATH=src python -m repro.analysis [paths...] [options]
+
+Runs the host-side AST lints over the given repo-relative roots
+(default: ``src/repro``, ``examples``, ``benchmarks``), optionally the
+jaxpr audits over a freshly built quantized engine (``--engine``), and
+compares everything against the checked-in findings baseline.  Exits 1
+on any non-baselined finding.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis import (audit_engine, audit_ladder_keys, baseline,
+                            format_findings, lint_paths)
+
+DEFAULT_ROOTS = ["src/repro", "examples", "benchmarks"]
+DEFAULT_BASELINE = "benchmarks/analysis_baseline.json"
+
+
+def _repo_root() -> str:
+    """Repo root = the directory holding src/repro (cwd when run there)."""
+    here = os.path.dirname(os.path.abspath(__file__))   # src/repro/analysis
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def build_audit_engine(speculate: int = 2, chunk_tokens: int = 16):
+    """Small quantized rwkv6 ladder engine covering all four closure
+    families (prefill, decode tick, spec_tick, prefill_chunk)."""
+    import dataclasses
+
+    import jax
+
+    from repro import api
+    from repro.configs import ARCHS, reduced
+    from repro.core.pipeline import quantize_ladder
+    from repro.core.policy import DATAFREE_3_275, DRAFT_VQ_2
+    from repro.models import registry as R
+
+    cfg = reduced(ARCHS["rwkv6-3b"], d_model=256, n_layers=2, d_ff=512,
+                  vocab_size=128, n_heads=8)
+    cfg = dataclasses.replace(cfg, rwkv_head_dim=32, head_dim=0,
+                              name="audit-rwkv6")
+    params = R.init_params(cfg, jax.random.PRNGKey(0))
+    qparams, _, draft, _ = quantize_ladder(
+        params, DATAFREE_3_275, DRAFT_VQ_2, jax.random.PRNGKey(0))
+    # impl='pallas' even on CPU: the audit only TRACES the graphs, and
+    # the serving contract under audit is the kernel path's
+    return api.Engine(cfg, qparams, n_slots=2, max_len=64,
+                      draft_params=draft, speculate=speculate,
+                      chunk_tokens=chunk_tokens, impl="pallas")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static serving-graph sanitizer (AST + jaxpr)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"repo-relative roots to lint "
+                         f"(default: {' '.join(DEFAULT_ROOTS)})")
+    ap.add_argument("--baseline", default=None,
+                    help=f"findings baseline JSON "
+                         f"(default: {DEFAULT_BASELINE})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept the current findings: rewrite the "
+                         "baseline file and exit 0")
+    ap.add_argument("--engine", action="store_true",
+                    help="also build a small quantized rwkv6 ladder "
+                         "engine and run the jaxpr audits over its "
+                         "jitted closures (slower; needs jax)")
+    args = ap.parse_args(argv)
+
+    root = _repo_root()
+    roots = args.paths or DEFAULT_ROOTS
+    findings = lint_paths(root, roots)
+    findings.extend(audit_ladder_keys())
+
+    if args.engine:
+        eng = build_audit_engine()
+        report = audit_engine(eng)
+        findings.extend(report["findings"])
+        for name, info in report["closures"].items():
+            print(f"[jaxpr] {name}: {info['n_eqns']} eqns, "
+                  f"{info['findings']} findings")
+        if report["coverage"] is not None:
+            cov = report["coverage"]
+            print(f"[jaxpr] coverage cross-check (impl={cov['impl']}): "
+                  f"{cov['tick_weight_converts']} tick weight-sized "
+                  f"converts vs {cov['n_fallback_leaves']} fallback "
+                  f"leaves (ratio {cov['ratio']:.4f})")
+
+    bl_path = os.path.join(root, args.baseline or DEFAULT_BASELINE)
+    if args.write_baseline:
+        baseline.write_baseline(findings, bl_path)
+        print(f"wrote {len(findings)} finding(s) to {bl_path}")
+        return 0
+
+    accepted = baseline.load_baseline(bl_path)
+    fresh = baseline.new_findings(findings, accepted)
+    known = len(findings) - len(fresh)
+    if fresh:
+        print(format_findings(fresh))
+        print(f"\n{len(fresh)} new finding(s) "
+              f"({known} baselined) — fix them, or accept explicitly "
+              f"with --write-baseline")
+        return 1
+    print(f"analysis clean: 0 new findings ({known} baselined) over "
+          f"{', '.join(roots)}"
+          + (" + engine jaxpr audit" if args.engine else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,335 @@
+"""Host-side AST lints: repo-specific bug classes, stdlib ``ast`` only.
+
+Each rule encodes a bug class that actually shipped (and was fixed) in
+this repo, so the lint is a regression fence, not a style guide:
+
+* ``captured-mutation`` — in-place mutation (``obj.attr += ...``) of an
+  attribute that was earlier passed as a call argument in the same
+  function.  The PR 8 race class: ``off = jnp.asarray(job.consumed)``
+  handed a zero-copy view to an async jitted launch, then
+  ``job.consumed += cl`` mutated the buffer the launch was still
+  reading.  Rebinding (``obj.attr = obj.attr + x``) is the fix and is
+  NOT flagged.
+* ``iter-mutate`` — ``list.pop``/``list.remove`` on the exact list a
+  ``for`` loop is iterating.  The PR 9 cancel-sweep class: popping
+  shifts the elements behind the hit, so the sweep skips (and leaks)
+  rows.  Iterating a copy (``list(xs)``, ``xs[:]``) is the fix and is
+  NOT flagged.
+* ``tick-host-sync`` — ``.item()`` / ``jax.device_get`` / ``np.*()``
+  calls inside tick-path code (modules that declare ``TICK_PATH =
+  True``, plus the functions listed in :data:`TICK_FUNCTIONS`).  Those
+  force a device→host transfer inside what must stay a device-resident
+  jitted graph.  Using ``np`` dtypes/constants (``np.float32``) is
+  trace-time-only and is NOT flagged — only calls are.
+* ``facade-import`` — ``examples/`` and ``benchmarks/`` importing the
+  serving/quantization internals (``repro.core.pipeline``,
+  ``repro.core.hybrid``, ``repro.serve``) instead of the supported
+  ``repro.api`` facade (the ROADMAP entry-point rule; ``api``
+  re-exports the expert surface these callers need).
+
+``lint_source`` lints one (source, relpath) pair — the unit the
+bad-example corpus tests drive — and ``lint_paths`` walks a source
+tree.  Rules are scoped by repo-relative path, so the same engine can
+lint a corpus snippet *as if* it lived under ``benchmarks/``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+# modules whose serving internals the facade rule protects; anything
+# importable from these must be reached via `repro.api` in examples/
+# and benchmarks/ (api re-exports the needed expert surface)
+FACADE_DENY = ("repro.core.pipeline", "repro.core.hybrid", "repro.serve")
+FACADE_SCOPES = ("examples/", "benchmarks/")
+
+# functions that run inside a jitted tick but live in mixed host/device
+# modules (whole tick-path modules declare ``TICK_PATH = True`` instead)
+TICK_FUNCTIONS: Dict[str, Set[str]] = {
+    "src/repro/serve/engine.py": {"_tick", "_choose_tokens",
+                                  "_slot_write"},
+}
+
+
+def _dotted(node) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain; None for anything else."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _walk_scope(node):
+    """Yield nodes of one function/module scope in source order,
+    without descending into nested function/class definitions."""
+    for child in ast.iter_child_nodes(node):
+        yield child
+        if not isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef, ast.Lambda)):
+            yield from _walk_scope(child)
+
+
+def _functions(tree):
+    """(qualname, node) for every function definition in the module."""
+    out = []
+
+    def visit(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{child.name}"
+                out.append((q, child))
+                visit(child, f"{q}.")
+            elif isinstance(child, ast.ClassDef):
+                visit(child, f"{prefix}{child.name}.")
+            else:
+                visit(child, prefix)
+
+    visit(tree, "")
+    return out
+
+
+# --------------------------------------------------------------------------- #
+#  Rule: captured-mutation (the PR 8 async-dispatch race class)
+# --------------------------------------------------------------------------- #
+def _rule_captured_mutation(tree, relpath: str, src: str) -> List[Finding]:
+    findings = []
+    for qual, fn in _functions(tree):
+        captured: Dict[str, int] = {}       # dotted attr -> first capture line
+        for node in _walk_scope(fn):
+            if isinstance(node, ast.Call):
+                args = list(node.args) + [k.value for k in node.keywords]
+                for a in args:
+                    inner = a.value if isinstance(a, ast.Starred) else a
+                    d = _dotted(inner)
+                    if d is not None and "." in d:
+                        captured.setdefault(d, node.lineno)
+            elif isinstance(node, ast.AugAssign) \
+                    and isinstance(node.target, ast.Attribute):
+                d = _dotted(node.target)
+                if d is not None and d in captured \
+                        and captured[d] < node.lineno:
+                    findings.append(Finding(
+                        rule="captured-mutation", path=relpath,
+                        line=node.lineno,
+                        message=f"in-place mutation of `{d}` after it was "
+                                f"passed to a call at line {captured[d]} "
+                                "in the same function — if that call "
+                                "dispatched async device work holding a "
+                                "zero-copy view, this is a data race; "
+                                f"rebind instead (`{d} = {d} + ...`)",
+                        context=f"{qual}:{d}"))
+    return findings
+
+
+# --------------------------------------------------------------------------- #
+#  Rule: iter-mutate (the PR 9 pop-while-iterating class)
+# --------------------------------------------------------------------------- #
+def _rule_iter_mutate(tree, relpath: str, src: str) -> List[Finding]:
+    findings = []
+    scopes = [("<module>", tree)] + _functions(tree)
+    for qual, scope in scopes:
+        for node in _walk_scope(scope):
+            if not isinstance(node, ast.For):
+                continue
+            it = _dotted(node.iter)
+            if it is None:        # iterating a copy/call/slice: safe
+                continue
+            for sub in ast.walk(node):
+                if sub is node:
+                    continue
+                if isinstance(sub, ast.Call) \
+                        and isinstance(sub.func, ast.Attribute) \
+                        and sub.func.attr in ("pop", "remove") \
+                        and _dotted(sub.func.value) == it:
+                    findings.append(Finding(
+                        rule="iter-mutate", path=relpath,
+                        line=sub.lineno,
+                        message=f"`{it}.{sub.func.attr}(...)` inside a "
+                                f"`for` loop iterating `{it}` — removal "
+                                "shifts the elements behind the hit and "
+                                "the loop skips them; iterate a copy or "
+                                "rebuild the list",
+                        context=f"{qual}:{it}.{sub.func.attr}"))
+    return findings
+
+
+# --------------------------------------------------------------------------- #
+#  Rule: tick-host-sync (host transfers in device-resident code)
+# --------------------------------------------------------------------------- #
+def _numpy_aliases(tree) -> Set[str]:
+    aliases = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name in ("numpy", "numpy.typing"):
+                    aliases.add(a.asname or a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module == "jax":
+            pass
+    return aliases
+
+
+def _device_get_names(tree) -> Set[str]:
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "jax":
+            for a in node.names:
+                if a.name == "device_get":
+                    names.add(a.asname or a.name)
+    return names
+
+
+def _is_tick_module(tree) -> bool:
+    for node in ast.iter_child_nodes(tree):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "TICK_PATH" \
+                        and isinstance(node.value, ast.Constant) \
+                        and node.value.value is True:
+                    return True
+    return False
+
+
+def _rule_tick_host_sync(tree, relpath: str, src: str) -> List[Finding]:
+    scoped_fns = None
+    for suffix, fns in TICK_FUNCTIONS.items():
+        if relpath.endswith(suffix):
+            scoped_fns = fns
+    whole_module = _is_tick_module(tree)
+    if not whole_module and scoped_fns is None:
+        return []
+
+    np_alias = _numpy_aliases(tree)
+    dget = _device_get_names(tree)
+    findings = []
+
+    def check_scope(qual, scope):
+        for node in _walk_scope(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            expr = None
+            if isinstance(f, ast.Attribute) and f.attr == "item" \
+                    and not node.args:
+                expr = f"{_dotted(f) or '<expr>.item'}()"
+                what = ".item() scalar pull"
+            elif (d := _dotted(f)) is not None and (
+                    d == "jax.device_get" or d in dget):
+                expr, what = f"{d}(...)", "jax.device_get host transfer"
+            elif (d := _dotted(f)) is not None \
+                    and d.split(".")[0] in np_alias:
+                expr, what = f"{d}(...)", "numpy host-side call"
+            if expr is not None:
+                findings.append(Finding(
+                    rule="tick-host-sync", path=relpath, line=node.lineno,
+                    message=f"{what} `{expr}` in tick-path code "
+                            f"({qual}) — this forces a device→host "
+                            "synchronization inside what must stay a "
+                            "device-resident jitted graph",
+                    context=f"{qual}:{expr}"))
+
+    if whole_module:
+        for qual, fn in _functions(tree):
+            check_scope(qual, fn)
+        check_scope("<module>", tree)
+    else:
+        for qual, fn in _functions(tree):
+            if fn.name in scoped_fns:
+                check_scope(qual, fn)
+    return findings
+
+
+# --------------------------------------------------------------------------- #
+#  Rule: facade-import (examples/ and benchmarks/ go through repro.api)
+# --------------------------------------------------------------------------- #
+def _rule_facade_import(tree, relpath: str, src: str) -> List[Finding]:
+    if not any(relpath.startswith(s) for s in FACADE_SCOPES):
+        return []
+
+    def denied(mod: str) -> bool:
+        return any(mod == d or mod.startswith(d + ".")
+                   for d in FACADE_DENY)
+
+    findings = []
+    for node in ast.walk(tree):
+        mods: List[Tuple[str, int]] = []
+        if isinstance(node, ast.Import):
+            mods = [(a.name, node.lineno) for a in node.names]
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            # `from repro.core.hybrid import X` denies on the module;
+            # `from repro.core import hybrid` denies on module.name
+            if denied(node.module):
+                mods = [(node.module, node.lineno)]
+            else:
+                mods = [(f"{node.module}.{a.name}", node.lineno)
+                        for a in node.names
+                        if denied(f"{node.module}.{a.name}")]
+        for mod, line in mods:
+            if denied(mod):
+                findings.append(Finding(
+                    rule="facade-import", path=relpath, line=line,
+                    message=f"import of serving internal `{mod}` — "
+                            "examples/ and benchmarks/ must go through "
+                            "the supported `repro.api` facade (it "
+                            "re-exports the expert surface)",
+                    context=mod))
+    return findings
+
+
+RULES = {
+    "captured-mutation": _rule_captured_mutation,
+    "iter-mutate": _rule_iter_mutate,
+    "tick-host-sync": _rule_tick_host_sync,
+    "facade-import": _rule_facade_import,
+}
+
+
+def lint_source(src: str, relpath: str,
+                rules: Optional[List[str]] = None) -> List[Finding]:
+    """Lint one source blob as if it lived at ``relpath``."""
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding(rule="syntax", path=relpath, line=e.lineno or 0,
+                        message=f"unparseable: {e.msg}",
+                        context="syntax")]
+    findings = []
+    for name, rule in RULES.items():
+        if rules is None or name in rules:
+            findings.extend(rule(tree, relpath, src))
+    return findings
+
+
+# directories never linted: generated, caches, and the intentionally-bad
+# lint-corpus snippets the self-tests feed through lint_source directly
+SKIP_DIRS = {"__pycache__", ".git", "analysis_corpus", ".claude"}
+
+
+def lint_paths(repo_root: str, roots: List[str],
+               rules: Optional[List[str]] = None) -> List[Finding]:
+    """Walk ``roots`` (repo-relative) and lint every ``.py`` file."""
+    findings = []
+    for root in roots:
+        absroot = os.path.join(repo_root, root)
+        if os.path.isfile(absroot):
+            files = [absroot]
+        else:
+            files = []
+            for dirpath, dirnames, filenames in os.walk(absroot):
+                dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+                files.extend(os.path.join(dirpath, f)
+                             for f in sorted(filenames)
+                             if f.endswith(".py"))
+        for path in files:
+            rel = os.path.relpath(path, repo_root).replace(os.sep, "/")
+            with open(path, encoding="utf-8") as f:
+                src = f.read()
+            findings.extend(lint_source(src, rel, rules))
+    return findings

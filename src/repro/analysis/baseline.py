@@ -1,0 +1,57 @@
+"""Checked-in findings baseline: CI fails on any NEW finding.
+
+The baseline is a JSON file of finding keys (``Finding.key()`` — rule +
+path + context, line-independent) that are known and accepted.  The CI
+gate (``benchmarks/analysis_guard.py``) compares a fresh run against it
+and fails on any key not present, so the sanitizer is always-on without
+requiring a flag-day cleanup of every legacy site.
+
+Extending the baseline is an explicit, reviewable act: run
+
+    python -m repro.analysis --write-baseline
+
+which rewrites the file with the current findings (sorted, one key per
+entry, with the human-readable message preserved for review).  A PR
+that grows the baseline shows exactly which new violations it accepts.
+The repo policy is to FIX findings rather than baseline them — the
+checked-in baseline is empty — but the mechanism keeps the gate usable
+while a large refactor is mid-flight.
+"""
+from __future__ import annotations
+
+import json
+from typing import Iterable, List
+
+from repro.analysis.findings import Finding
+
+
+def load_baseline(path: str) -> set:
+    """Set of accepted finding keys from ``path`` (missing file: empty)."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return set()
+    return {e["key"] for e in data.get("findings", [])}
+
+
+def new_findings(findings: Iterable[Finding], baseline: set
+                 ) -> List[Finding]:
+    """Findings whose key is not baselined (these fail the CI gate)."""
+    return [f for f in findings if f.key() not in baseline]
+
+
+def write_baseline(findings: Iterable[Finding], path: str) -> None:
+    """Rewrite the baseline file to accept exactly ``findings``."""
+    entries = sorted(
+        ({"key": f.key(), "message": f.message} for f in findings),
+        key=lambda e: e["key"])
+    with open(path, "w") as f:
+        json.dump({
+            "comment": "accepted analysis findings; regenerate with "
+                       "`python -m repro.analysis --write-baseline`. "
+                       "Policy: fix findings instead of baselining them "
+                       "— every entry here needs a review-time reason.",
+            "findings": entries,
+        }, f, indent=2)
+        f.write("\n")

@@ -1,0 +1,44 @@
+"""Finding record shared by the AST lints and the jaxpr audits.
+
+A finding is one rule violation at one site.  Its identity for baseline
+purposes (:meth:`Finding.key`) deliberately excludes the line number —
+baselined findings must survive unrelated edits that shift lines — and
+instead uses ``rule``, the repo-relative ``path`` and a stable
+``context`` string (enclosing function plus the offending expression,
+or the audited closure name for graph findings).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str            # rule id, e.g. "iter-mutate"
+    path: str            # repo-relative file, or "jaxpr:<closure>"
+    line: int            # 1-based source line; 0 for graph findings
+    message: str         # human-readable description of the violation
+    context: str = ""    # stable site id (function + expression)
+
+    def key(self) -> str:
+        """Line-independent identity used for baseline matching."""
+        return f"{self.rule}:{self.path}:{self.context}"
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message, "context": self.context}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Finding":
+        return cls(rule=d["rule"], path=d["path"], line=int(d["line"]),
+                   message=d["message"], context=d.get("context", ""))
+
+    def __str__(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: [{self.rule}] {self.message}"
+
+
+def format_findings(findings) -> str:
+    """One line per finding, stably sorted for diff-friendly output."""
+    ordered = sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+    return "\n".join(str(f) for f in ordered)

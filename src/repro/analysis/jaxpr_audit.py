@@ -1,0 +1,294 @@
+"""Static jaxpr audits over the engine's jitted serving closures.
+
+:func:`audit_engine` walks the ClosedJaxpr of every closure a
+``ServeEngine`` serves with (prefill, decode tick, spec_tick,
+prefill_chunk — enumerated by ``engine.audit_closures()``) and checks,
+without executing or compiling anything:
+
+* **host-transfer** — no callback / infeed / outfeed primitives inside
+  the graphs.  The device-residency guarantee: a tick that round-trips
+  to the host caps throughput at host-sync latency no matter how fast
+  the kernels are.
+* **f64-op** — no ``float64`` anywhere.  An accidental f64 constant
+  silently doubles weight traffic (and trips x64-disabled backends).
+* **silent-dequant** — no integer→float ``convert_element_type`` whose
+  output is exactly the size of a quantized weight's dequantized form.
+  That pattern is XLA materializing a weight the Pallas kernels were
+  supposed to stream packed — the "silent fallback" the coverage guard
+  exists to catch.  State-cache unpacks are int→float converts too, but
+  their numels carry the pool/positions axes, so weight-sized matches
+  do not collide with them.
+* **coverage-drift** — the convert-based count above must agree with
+  ``core.coverage`` byte accounting: ``silent-dequant findings == 0``
+  iff ``coverage_report(...)["n_fallback_leaves"] == 0``.  The two
+  detectors are independent (one walks the traced graph, one the param
+  tree), so drift means one of them has rotted — itself a failure.
+
+:func:`audit_ladder_keys` checks the PR 7 target/draft PRNG contract
+structurally over ``core.pipeline.LADDER_KEY_TAGS``: exactly one rung
+consumes the caller's key un-derived (the bit-identical target), and
+every derived rung folds in a distinct tag (collision-free lineage).
+
+Traced jaxprs are memoized in ``_JAXPR_CACHE`` keyed by the engine's
+shared-closure cache key; the cache is registered with
+``serve.engine.register_audit_cache`` so ``clear_closure_cache()``
+invalidates it — repeated audits in one process can never report
+jaxprs of closures that no longer exist.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.analysis.findings import Finding
+
+# primitive-name fragments that imply a device<->host round trip
+HOST_PRIM_FRAGMENTS = ("callback", "infeed", "outfeed")
+
+
+def _jaxpr_cache() -> dict:
+    from repro.serve import engine as _engine
+    global _JAXPR_CACHE
+    if _JAXPR_CACHE is None:
+        _JAXPR_CACHE = _engine.register_audit_cache({})
+    return _JAXPR_CACHE
+
+
+_JAXPR_CACHE: Optional[dict] = None
+
+
+def iter_eqns(jaxpr, _in_kernel=False):
+    """Yield ``(eqn, in_kernel)`` over ``jaxpr`` and its sub-jaxprs.
+
+    Descends into pjit / scan / while / cond / closed_call bodies via
+    the standard ``params`` conventions, so a check over the top-level
+    trace really covers the whole lowered graph.  ``in_kernel`` marks
+    eqns living inside a ``pallas_call`` body: a Pallas kernel
+    *deliberately* dequantizes packed planes in registers, so the
+    silent-dequant detector must not mistake its in-kernel converts
+    for XLA materializing a weight in HBM.
+    """
+    for eqn in jaxpr.eqns:
+        yield eqn, _in_kernel
+        inner = _in_kernel or "pallas" in eqn.primitive.name
+        for v in eqn.params.values():
+            for j in _jaxprs_of(v):
+                yield from iter_eqns(j, inner)
+
+
+def _jaxprs_of(v):
+    """Jaxprs hiding in one eqn param value (jaxpr, ClosedJaxpr, lists)."""
+    out = []
+    if hasattr(v, "eqns"):                       # a Jaxpr
+        out.append(v)
+    elif hasattr(v, "jaxpr"):                    # a ClosedJaxpr
+        out.append(v.jaxpr)
+    elif isinstance(v, (tuple, list)):
+        for x in v:
+            out.extend(_jaxprs_of(x))
+    return out
+
+
+def trace_closure(fn, args, cache_key=None):
+    """ClosedJaxpr of ``fn(*args)`` (abstract trace, nothing executed)."""
+    cache = _jaxpr_cache()
+    if cache_key is not None and cache_key in cache:
+        return cache[cache_key]
+    closed = jax.make_jaxpr(fn)(*args)
+    if cache_key is not None:
+        cache[cache_key] = closed
+    return closed
+
+
+def _aval_dtypes(eqn):
+    for v in list(eqn.invars) + list(eqn.outvars):
+        aval = getattr(v, "aval", None)
+        dt = getattr(aval, "dtype", None)
+        if dt is not None:
+            yield v, aval, dt
+
+
+def audit_jaxpr(name: str, closed,
+                dequant_numels: Optional[Dict[int, List[str]]] = None,
+                kernel_numels: Optional[set] = None,
+                stats: Optional[dict] = None) -> List[Finding]:
+    """Run the graph checks over one closure's ClosedJaxpr.
+
+    Returns findings with path ``jaxpr:<name>``.  ``dequant_numels``
+    (from ``core.coverage.dequant_numels``) arms the silent-dequant
+    detector — without it only host-transfer and f64 are checked.
+    ``kernel_numels`` restricts the *finding* to converts matching
+    leaves coverage claims are kernel-served (under ``impl='xla'``
+    every leaf is an expected fallback, so materializing converts are
+    by-design there, not silent); omitted, every dequant-numel match
+    is a finding.  ``stats`` (if given) accumulates
+    ``weight_converts`` — ALL dequant-numel matches regardless of
+    kernel status — for the coverage cross-check.
+    """
+    path = f"jaxpr:{name}"
+    findings = []
+    seen_prims = set()
+    seen_f64 = set()
+    dequants: Dict[str, int] = {}
+    for eqn, in_kernel in iter_eqns(closed.jaxpr):
+        pname = eqn.primitive.name
+        if any(f in pname for f in HOST_PRIM_FRAGMENTS) \
+                and pname not in seen_prims:
+            seen_prims.add(pname)
+            findings.append(Finding(
+                rule="host-transfer", path=path, line=0,
+                message=f"primitive `{pname}` inside the {name} graph — "
+                        "a device->host round trip in what must stay a "
+                        "device-resident launch",
+                context=pname))
+        for _, aval, dt in _aval_dtypes(eqn):
+            if dt == np.float64 and (pname, "f64") not in seen_f64:
+                seen_f64.add((pname, "f64"))
+                findings.append(Finding(
+                    rule="f64-op", path=path, line=0,
+                    message=f"float64 operand/result on `{pname}` in the "
+                            f"{name} graph — doubles weight traffic and "
+                            "breaks x64-disabled backends",
+                    context=pname))
+        if pname == "convert_element_type" and dequant_numels \
+                and not in_kernel:
+            inv, outv = eqn.invars[0], eqn.outvars[0]
+            idt = getattr(getattr(inv, "aval", None), "dtype", None)
+            odt = getattr(getattr(outv, "aval", None), "dtype", None)
+            if idt is not None and odt is not None \
+                    and np.issubdtype(idt, np.integer) \
+                    and np.issubdtype(odt, np.floating):
+                numel = int(np.prod(outv.aval.shape)) \
+                    if outv.aval.shape else 1
+                if numel in dequant_numels:
+                    if stats is not None:
+                        stats["weight_converts"] = \
+                            stats.get("weight_converts", 0) + 1
+                    if kernel_numels is not None \
+                            and numel not in kernel_numels:
+                        continue          # an expected-fallback leaf
+                    leaves = dequant_numels[numel]
+                    ctx = f"{idt}->{odt}:{numel}"
+                    dequants[ctx] = dequants.get(ctx, 0) + 1
+                    findings.append(Finding(
+                        rule="silent-dequant", path=path, line=0,
+                        message=f"{idt}->{odt} convert of {numel} "
+                                f"elements in the {name} graph matches "
+                                "the dequantized size of leaf(s) "
+                                f"{', '.join(leaves[:3])} — XLA is "
+                                "materializing a weight the kernels "
+                                "should stream packed",
+                        context=ctx))
+    return findings
+
+
+def audit_engine(engine, impl: Optional[str] = None) -> Dict[str, Any]:
+    """Audit every jitted closure of ``engine``; return a report dict.
+
+    ``{"findings": [Finding...], "closures": {name: {...}},
+    "coverage": {...}}`` — ``closures`` records per-graph eqn counts and
+    what was checked; ``coverage`` carries the cross-check inputs (the
+    convert-based dequant count vs ``coverage_report``'s
+    ``n_fallback_leaves``).  Drift between the two detectors is
+    reported as a ``coverage-drift`` finding.
+    """
+    from repro.core import coverage as cov
+
+    impl = impl or engine.impl
+    numels = cov.dequant_numels(engine._dparams)
+    report = kernel_numels = None
+    if numels:
+        # what SHOULD be materialized: under the claimed impl, coverage
+        # marks each leaf kernel-served or expected-fallback.  Converts
+        # matching a purely kernel-served numel are silent fallbacks;
+        # numels shared with an expected-fallback leaf are ambiguous and
+        # stay out of the finding set (the boolean cross-check still
+        # covers them).
+        report = cov.coverage_report(engine._dparams, impl=impl)
+        fallback_numels = {
+            e["lead"] * e["shape"][0] * e["shape"][1]
+            for e in report["leaves"] if not e["kernel"]}
+        kernel_numels = {
+            e["lead"] * e["shape"][0] * e["shape"][1]
+            for e in report["leaves"]
+            if e["kernel"]} - fallback_numels
+
+    findings: List[Finding] = []
+    closures: Dict[str, Any] = {}
+    tick_converts = 0
+    for ent in engine.audit_closures():
+        closed = trace_closure(ent["fn"], ent["args"], ent["cache_key"])
+        stats: Dict[str, int] = {}
+        fs = audit_jaxpr(ent["name"], closed, dequant_numels=numels,
+                         kernel_numels=kernel_numels, stats=stats)
+        if ent["name"] in ("decode_tick", "spec_tick"):
+            tick_converts += stats.get("weight_converts", 0)
+        closures[ent["name"]] = {
+            "cache_key": repr(ent["cache_key"]),
+            "n_eqns": sum(1 for _ in iter_eqns(closed.jaxpr)),
+            "weight_converts": stats.get("weight_converts", 0),
+            "findings": len(fs),
+        }
+        findings.extend(fs)
+
+    if report is not None and "decode_tick" in closures:
+        # byte-accounting cross-check: the graph-side and tree-side
+        # fallback detectors must agree on "any fallback at all?"
+        audit_clean = tick_converts == 0
+        coverage_clean = report["n_fallback_leaves"] == 0
+        if audit_clean != coverage_clean:
+            findings.append(Finding(
+                rule="coverage-drift", path="jaxpr:decode_tick", line=0,
+                message="graph audit and coverage accounting disagree: "
+                        f"audit saw {tick_converts} weight-sized "
+                        "dequant converts in the tick graphs while "
+                        f"coverage_report(impl={impl!r}) counts "
+                        f"{report['n_fallback_leaves']} fallback leaves "
+                        "— one of the two detectors has rotted",
+                context="dequant-vs-fallback"))
+
+    findings.extend(audit_ladder_keys())
+    return {
+        "findings": findings,
+        "closures": closures,
+        "coverage": None if report is None else {
+            "impl": impl,
+            "n_fallback_leaves": report["n_fallback_leaves"],
+            "tick_weight_converts": tick_converts,
+            "ratio": report["ratio"],
+        },
+    }
+
+
+def audit_ladder_keys() -> List[Finding]:
+    """Structural check of the ladder PRNG contract (PR 7).
+
+    Over ``core.pipeline.LADDER_KEY_TAGS``: exactly one rung must
+    consume the caller's key un-derived (``None`` — the bit-identical
+    target rung), and all derived rungs must fold in distinct tags so
+    no two rungs ever see correlated rounding noise.
+    """
+    from repro.core.pipeline import LADDER_KEY_TAGS
+
+    findings = []
+    path = "prng:quantize_ladder"
+    raw = [r for r, t in LADDER_KEY_TAGS.items() if t is None]
+    if len(raw) != 1:
+        findings.append(Finding(
+            rule="prng-lineage", path=path, line=0,
+            message=f"{len(raw)} rungs consume the caller's key "
+                    f"un-derived ({raw or 'none'}); exactly one may "
+                    "(the bit-identical target rung)",
+            context="raw-key-count"))
+    tags = [t for t in LADDER_KEY_TAGS.values() if t is not None]
+    dupes = {t for t in tags if tags.count(t) > 1}
+    if dupes:
+        findings.append(Finding(
+            rule="prng-lineage", path=path, line=0,
+            message=f"duplicate fold_in tags {sorted(dupes)} in "
+                    "LADDER_KEY_TAGS — colliding rungs would quantize "
+                    "with identical rounding noise",
+            context="tag-collision"))
+    return findings

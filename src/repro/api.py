@@ -48,10 +48,27 @@ from repro.core.policy import PAPER_3_275, QuantPolicy
 from repro.serve.engine import ServeEngine as Engine
 from repro.serve.engine import clear_closure_cache
 
-__all__ = ["quantize", "save", "load", "lm", "coverage_report", "Engine",
+# ---- expert surface -------------------------------------------------------
+# Research-grade internals the paper-table benchmarks need (proxy values,
+# per-layer slicing, float baselines).  Re-exported here so examples/ and
+# benchmarks/ never import core.pipeline / core.hybrid / serve.engine
+# directly — the ROADMAP facade rule, enforced by the `facade-import`
+# lint in `repro.analysis`.  Supported but lower-level than the
+# quantize/save/load/Engine surface above.
+from repro.core.hybrid import (compute_all_proxies, iter_quantizable,
+                               _largest_group as largest_group,
+                               _layer_slices as layer_slices)
+from repro.core.pipeline import adapter_for, float_lm
+
+__all__ = ["quantize", "save", "load", "lm", "coverage_report",
+           "audit_report", "Engine",
            "QuantizedArtifact", "QuantPolicy", "QuantReport",
            "ArtifactFormatError", "FORMAT_VERSION", "PAPER_3_275",
-           "clear_closure_cache"]
+           "clear_closure_cache",
+           # expert surface
+           "quantize_tree", "blockwise_quantize", "QuantizedLM",
+           "float_lm", "adapter_for", "compute_all_proxies",
+           "iter_quantizable", "layer_slices", "largest_group"]
 
 
 def quantize(cfg, params, policy: QuantPolicy = PAPER_3_275, *,
@@ -165,3 +182,21 @@ def coverage_report(artifact: QuantizedArtifact, *, impl: str = "pallas",
     if getattr(artifact, "cfg", None) is not None:
         params = _R.prepare_decode_params(artifact.cfg, params)
     return _cov.coverage_report(params, impl=impl, hlo=hlo)
+
+
+def audit_report(engine: Engine) -> Dict[str, Any]:
+    """Static jaxpr audit of every jitted closure ``engine`` serves with.
+
+    Walks the ClosedJaxprs of the prefill / decode-tick / spec-tick /
+    prefill-chunk closures (abstract tracing — nothing is executed) and
+    checks the serving-graph invariants: no host-transfer primitives,
+    no float64, no silent XLA dequant of a quantized weight (cross-
+    checked against ``coverage_report`` byte accounting), and the
+    ladder PRNG key contract.  Returns ``{"findings": [...],
+    "closures": {...}, "coverage": {...}}`` — an empty ``findings``
+    list is the pass condition CI enforces.  See ``repro.analysis``
+    for the rule catalog and the CLI (``python -m repro.analysis``).
+    """
+    from repro.analysis import audit_engine as _audit
+
+    return _audit(engine)

@@ -214,6 +214,31 @@ def coverage_report(obj, impl: str = "pallas",
     }
 
 
+def dequant_numels(obj) -> Dict[int, List[str]]:
+    """Dequantized-weight element counts, keyed numel -> leaf paths.
+
+    The operand-size table the jaxpr audit's silent-dequant detector
+    matches ``convert_element_type`` outputs against: an int->float
+    convert whose output numel equals a quantized leaf's full
+    dequantized size is (with overwhelming likelihood) XLA
+    materializing that weight — the fallback ``coverage_report`` counts
+    as ``n_fallback_leaves``.  Sharing this walk with
+    :func:`coverage_report` keeps the two accountings in lockstep; the
+    audit treats drift between them as a finding in its own right.
+    """
+    params = getattr(obj, "params", obj)
+    flat = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=qz.is_serializable_container)[0]
+    out: Dict[int, List[str]] = {}
+    for path, leaf in flat:
+        if not qz.is_serializable_container(leaf):
+            continue
+        for e in _leaf_entries(leaf, "xla"):
+            numel = e["lead"] * e["shape"][0] * e["shape"][1]
+            out.setdefault(int(numel), []).append(_path_str(path))
+    return out
+
+
 def speculative_effective_bytes(target_report: Dict[str, Any],
                                 draft_report: Dict[str, Any],
                                 k: int,

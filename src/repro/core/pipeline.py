@@ -266,6 +266,22 @@ def blockwise_quantize(cfg, params, batches: List[Dict], policy: QuantPolicy,
                        tail=tail, report=report)
 
 
+# The ladder PRNG contract, as data: each rung's key derivation from the
+# caller's key.  ``None`` means "consume the caller's key itself" (NOT a
+# split) — the target rung must stay bit-identical to a ladder-free
+# quantize; any other rung folds in its (unique) tag.  The structural
+# audit in ``repro.analysis.jaxpr_audit.audit_ladder_keys`` checks this
+# table directly: exactly one un-derived rung, no duplicate tags — a
+# collision would hand two rungs correlated rounding noise.
+LADDER_KEY_TAGS = {"target": None, "draft": 0x5bec}
+
+
+def ladder_keys(key) -> dict:
+    """Per-rung PRNG keys derived from ``key`` per ``LADDER_KEY_TAGS``."""
+    return {rung: key if tag is None else jax.random.fold_in(key, tag)
+            for rung, tag in LADDER_KEY_TAGS.items()}
+
+
 def quantize_ladder(params, policy: QuantPolicy, draft_policy: QuantPolicy,
                     key) -> Tuple[Any, QuantReport, Any, QuantReport]:
     """Quantize the SAME float tree at two fidelities (data-free).
@@ -277,14 +293,16 @@ def quantize_ladder(params, policy: QuantPolicy, draft_policy: QuantPolicy,
     rungs see the float weights, so draft error never compounds into the
     target.  Returns ``(qparams, report, draft_params, draft_report)``.
 
-    The target rung consumes ``key`` itself (NOT a split of it): adding
-    a ladder to an existing quantize call must keep the target tree —
-    and therefore every greedy decode — bit-identical to the
-    ladder-free run.  The draft rung gets a folded-in derivation.
+    Key lineage follows ``LADDER_KEY_TAGS``: the target rung consumes
+    ``key`` itself (NOT a split of it), so adding a ladder to an
+    existing quantize call keeps the target tree — and therefore every
+    greedy decode — bit-identical to the ladder-free run.  The draft
+    rung gets a folded-in derivation.
     """
-    qparams, report = quantize_tree(params, policy, key)
+    keys = ladder_keys(key)
+    qparams, report = quantize_tree(params, policy, keys["target"])
     draft_params, draft_report = quantize_tree(
-        params, draft_policy, jax.random.fold_in(key, 0x5bec))
+        params, draft_policy, keys["draft"])
     return qparams, report, draft_params, draft_report
 
 

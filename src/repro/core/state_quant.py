@@ -10,7 +10,10 @@ Packed representation: each float array becomes ``{"codes", "scale"}``.
 ``scale`` is reduced over the last axis with ``keepdims=True`` so every
 batch axis survives — the engine's structural batch-axis probe, slot
 scatter/gather and elastic pool resize all operate on packed trees
-unchanged.
+unchanged.  ``vq`` codes at ``vq_bits <= 4`` are nibble-packed (two
+codes per stored byte, halving the codes plane vs int8); the batch
+axes still survive, only the last axis shrinks, so the same engine
+machinery applies.
 
 Scales are power-of-two (``exp2(ceil(log2(amax/denom)))``).  For int8
 this makes repacking an already-packed row an *exact* fixpoint: the max
@@ -68,12 +71,30 @@ def pack_array(x, mode: str, vq_bits: int = 4):
         scale = _po2_scale(x, 1.0)
         y = x.astype(jnp.float32) / scale
         idx = jnp.argmin(jnp.abs(y[..., None] - cb), axis=-1)
-        return {"codes": idx.astype(jnp.uint8), "scale": scale}
+        idx = idx.astype(jnp.uint8)
+        if vq_bits <= 4:
+            # nibble-pack: two 4-bit codes per stored byte, halving the
+            # codes plane (one-code-per-byte vq bought no memory over
+            # int8).  Odd last dims pad one dummy code; unpack_array
+            # needs the original `shape` to slice it back off.
+            d = idx.shape[-1]
+            if d % 2:
+                idx = jnp.concatenate(
+                    [idx, jnp.zeros(idx.shape[:-1] + (1,), jnp.uint8)],
+                    axis=-1)
+            idx = idx[..., 0::2] | (idx[..., 1::2] << 4)
+        return {"codes": idx, "scale": scale}
     raise ValueError(f"unknown state-cache mode {mode!r}")
 
 
-def unpack_array(packed, mode: str, dtype, vq_bits: int = 4):
-    """Inverse of :func:`pack_array`, restoring ``dtype``."""
+def unpack_array(packed, mode: str, dtype, vq_bits: int = 4, shape=None):
+    """Inverse of :func:`pack_array`, restoring ``dtype``.
+
+    ``shape`` is the unpacked array's shape; only nibble-packed vq
+    (``vq_bits <= 4``) consults it — and only to recover an odd last
+    dim, which the packed form alone cannot distinguish from the
+    padded even one.  Omitting it assumes an even last dim.
+    """
     if mode == "none":
         return packed
     codes, scale = packed["codes"], packed["scale"]
@@ -83,7 +104,18 @@ def unpack_array(packed, mode: str, dtype, vq_bits: int = 4):
         y = codes.astype(jnp.float32) * scale
     elif mode == "vq":
         cb = jnp.asarray(codebook(vq_bits))
-        y = cb[codes] * scale
+        if vq_bits <= 4:
+            d = 2 * codes.shape[-1] if shape is None else shape[-1]
+            assert codes.shape[-1] == (d + 1) // 2, (
+                f"nibble-packed codes last dim {codes.shape[-1]} does "
+                f"not match unpacked last dim {d}")
+            lo = codes & 0x0F
+            hi = codes >> 4
+            idx = jnp.stack([lo, hi], axis=-1).reshape(
+                codes.shape[:-1] + (2 * codes.shape[-1],))[..., :d]
+        else:
+            idx = codes
+        y = cb[idx] * scale
     else:
         raise ValueError(f"unknown state-cache mode {mode!r}")
     return y.astype(dtype)
@@ -118,9 +150,12 @@ def pack_cache(cache: dict, spec, leaves) -> dict:
 def unpack_cache(packed: dict, spec, leaves, float_struct: dict) -> dict:
     """Inverse of :func:`pack_cache`.
 
-    ``float_struct`` supplies the original dtypes (a ShapeDtypeStruct
-    tree of the unpacked cache, e.g. from ``jax.eval_shape`` of the
-    family's ``init_cache``).
+    ``float_struct`` supplies the original dtypes and shapes (a
+    ShapeDtypeStruct tree of the unpacked cache, e.g. from
+    ``jax.eval_shape`` of the family's ``init_cache``; last dims are
+    batch/length independent, so the probe-sized struct is valid for
+    any pool).  Shapes let nibble-packed vq leaves recover an odd
+    last dim.
     """
     if spec is None or not spec.enabled():
         return packed
@@ -129,7 +164,8 @@ def unpack_cache(packed: dict, spec, leaves, float_struct: dict) -> dict:
         mode = spec.mode_for(name)
         if name in packed and mode != "none":
             out[name] = _map2(
-                lambda p, s: unpack_array(p, mode, s.dtype, spec.vq_bits),
+                lambda p, s: unpack_array(p, mode, s.dtype, spec.vq_bits,
+                                          shape=s.shape),
                 packed[name], float_struct[name])
     return out
 

@@ -235,10 +235,26 @@ def _shared_closure(key: tuple, builder) -> dict:
     return ent
 
 
+# caches that memoize DERIVED views of the jitted closures (e.g. the
+# jaxpr cache in repro.analysis.jaxpr_audit).  They must die with the
+# closures they describe, or a clear + re-jit cycle in one process would
+# let an audit report jaxprs of closures that no longer exist.
+_AUDIT_CACHES: List[dict] = []
+
+
+def register_audit_cache(cache: dict) -> dict:
+    """Register ``cache`` to be emptied by :func:`clear_closure_cache`."""
+    _AUDIT_CACHES.append(cache)
+    return cache
+
+
 def clear_closure_cache() -> None:
-    """Drop every shared jitted closure (cold-start measurements/tests)."""
+    """Drop every shared jitted closure (cold-start measurements/tests)
+    plus any registered derived caches (audit jaxprs) built from them."""
     _CLOSURE_CACHE.clear()
     _PROBE_CACHE.clear()
+    for c in _AUDIT_CACHES:
+        c.clear()
 
 
 # eval_shape probes memoized alongside the closure cache: `_batch_axes`
@@ -647,6 +663,69 @@ class ServeEngine:
             self._spec_stats = jnp.zeros((4,), jnp.int32)
 
     # ------------------------------------------------------------------ #
+    def audit_closures(self):
+        """Enumerate the jitted closures this engine serves with.
+
+        The introspection surface for ``repro.analysis.jaxpr_audit``:
+        yields one dict per closure family —
+
+            {"name":  "prefill" | "decode_tick" | "spec_tick"
+                      | "prefill_chunk",
+             "cache_key": the shared `_CLOSURE_CACHE` tuple,
+             "fn":    the jitted closure,
+             "args":  example arguments (live buffers or
+                      `ShapeDtypeStruct` trees) that `jax.make_jaxpr`
+                      can trace the closure with}
+
+        Nothing is executed or compiled — the args only carry
+        shape/dtype for abstract tracing.  Tick families need the fast
+        path (device-resident buffers); prefill is always available.
+        """
+        chash = R.cfg_hash(self.cfg)
+        sshash = self.state_spec.spec_hash() \
+            if self.state_spec is not None else "none"
+        rows = self._row_bucket(1) if self._ragged else 1
+        bucket = self.min_bucket
+        batch = {"tokens": jax.ShapeDtypeStruct((rows, bucket), jnp.int32)}
+        if self._ragged:
+            batch["lengths"] = jax.ShapeDtypeStruct((rows,), jnp.int32)
+        scratch = jax.eval_shape(
+            lambda: R.init_cache(self.cfg, rows, self.max_len,
+                                 self.state_spec))
+        yield {"name": "prefill",
+               "cache_key": ("prefill", chash, self.impl, sshash),
+               "fn": self._prefill,
+               "args": (self._dparams, batch, scratch)}
+        if self.chunk_tokens:
+            cbatch = dict(batch,
+                          lengths=jax.ShapeDtypeStruct((rows,), jnp.int32))
+            yield {"name": "prefill_chunk",
+                   "cache_key": ("prefill_chunk", chash, self.impl,
+                                 sshash),
+                   "fn": self._prefill_chunk,
+                   "args": (self._dparams, cbatch, scratch,
+                            jax.ShapeDtypeStruct((rows,), jnp.int32))}
+        if not self.fast_path:
+            return
+        yield {"name": "decode_tick",
+               "cache_key": ("tick", chash, self.impl, self.max_len,
+                             sshash),
+               "fn": self._tick,
+               "args": (self._dparams, self.cache, self._tok, self._pos,
+                        self._tcount, self._live, self._temps,
+                        self._maxnew, self._out, self._dkey)}
+        if self.speculate:
+            yield {"name": "spec_tick",
+                   "cache_key": ("spec_tick", chash, self.impl,
+                                 self.max_len, self.speculate, sshash),
+                   "fn": self._spec_tick,
+                   "args": (self._dparams, self._draft, self.cache,
+                            self._dcache, self._tok, self._pos,
+                            self._tcount, self._live, self._temps,
+                            self._maxnew, self._out, self._dkey,
+                            self._spec_stats)}
+
+    # ------------------------------------------------------------------ #
     def submit(self, prompt, max_new_tokens: int = 32,
                temperature: float = 0.0) -> int:
         if max_new_tokens < 1:
@@ -674,7 +753,7 @@ class ServeEngine:
         # mid-chunked-prefill: drop the row at once, and the whole job
         # (scratch cache + its share of the per-tick budget) when its
         # last row dies
-        for job in self._jobs:
+        for job in list(self._jobs):
             for i, r in enumerate(job.reqs):
                 if r is not None and r.uid == uid:
                     r.done = r.cancelled = True
@@ -682,7 +761,8 @@ class ServeEngine:
                     self._cancel_freed = True
                     self.completed.append(r)
                     if all(x is None for x in job.reqs):
-                        self._jobs.remove(job)
+                        self._jobs = [j for j in self._jobs
+                                      if j is not job]
                     return True
         # prefill done but still waiting for a decode slot: its first
         # token was already sampled, so deliver it with the cancel.

@@ -69,6 +69,11 @@ from repro.models import registry as R
 # an established invariant, so speculative engines stay under it
 from repro.kernels.qmv.ops import DECODE_M_MAX as SPEC_M_MAX
 
+# everything in this module runs inside the jitted spec_tick: the
+# tick-host-sync lint (repro.analysis) holds the WHOLE file to the
+# no-.item()/no-device_get/no-numpy-calls rule
+TICK_PATH = True
+
 _NO_BATCH_AX = -1      # mirrors serve.engine's sentinel
 
 

@@ -1,0 +1,11 @@
+"""BAD: in-place mutation of `job.consumed` after a call captured it.
+
+The PR 8 race class: the call may have dispatched async device work
+holding a zero-copy view of the attribute's buffer.
+"""
+
+
+def advance(job, launch):
+    off = launch(job.consumed)
+    job.consumed += 4
+    return off

@@ -1,0 +1,8 @@
+"""OK near-miss: rebinding allocates a fresh value, so the async launch
+keeps reading its own (old) buffer — this is the fix idiom."""
+
+
+def advance(job, launch):
+    off = launch(job.consumed)
+    job.consumed = job.consumed + 4
+    return off

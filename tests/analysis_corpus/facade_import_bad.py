@@ -1,0 +1,5 @@
+"""BAD: a benchmark reaching past the facade into serving internals
+(all three denied module roots, both import forms)."""
+import repro.core.hybrid  # noqa: F401
+from repro.core.pipeline import quantize_ladder  # noqa: F401
+from repro.serve.engine import ServeEngine  # noqa: F401

@@ -1,0 +1,4 @@
+"""OK near-miss: the facade re-exports the expert surface, and policy
+tables are data, not serving internals."""
+from repro.api import Engine, quantize_tree  # noqa: F401
+from repro.core.policy import DATAFREE_3_275  # noqa: F401

@@ -1,0 +1,11 @@
+"""BAD: removal from the exact list the `for` loop iterates.
+
+The PR 9 cancel-sweep class: the removal shifts the elements behind the
+hit and the loop skips (and leaks) them.
+"""
+
+
+def cancel_all(jobs):
+    for job in jobs:
+        if job.done:
+            jobs.remove(job)

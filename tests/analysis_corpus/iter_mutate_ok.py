@@ -1,0 +1,8 @@
+"""OK near-miss: iterating a copy — mutating the original is safe, and
+is the fix idiom for the cancel-sweep class."""
+
+
+def cancel_all(jobs):
+    for job in list(jobs):
+        if job.done:
+            jobs.remove(job)

@@ -1,0 +1,12 @@
+"""BAD: three distinct host-sync shapes inside a tick-path module."""
+import jax
+import numpy as np
+
+TICK_PATH = True
+
+
+def tick(counter, buf):
+    n = counter.item()          # scalar pull blocks on the device
+    host = jax.device_get(buf)  # explicit device->host transfer
+    total = np.sum(host)        # numpy call = host-side compute
+    return n + total

@@ -1,0 +1,10 @@
+"""OK near-miss: `np.float32` as a dtype constant is trace-time-only —
+no host transfer happens inside the jitted graph."""
+import numpy as np
+
+TICK_PATH = True
+
+
+def tick(x, pos):
+    y = x.astype(np.float32)
+    return y, pos + 1

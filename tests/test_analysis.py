@@ -1,0 +1,286 @@
+"""Serving-graph sanitizer self-tests.
+
+Three layers:
+
+* **corpus** — every AST rule fires on its known-bad snippet in
+  ``tests/analysis_corpus/`` and stays quiet on the paired near-miss
+  (the fix idiom), driven through ``lint_source`` with synthetic
+  repo-relative paths so the path-scoped rules see the right scope;
+* **jaxpr audits** — unit checks of each graph rule on hand-built
+  jaxprs (callback, f64, int→float dequant-sized converts, the
+  in-kernel pallas exemption) plus the ladder PRNG contract;
+* **regression** — the decode-tick audit is clean for a float engine
+  of every serving family, and for the quantized rwkv6 ladder engine
+  the convert-count cross-check agrees with ``core.coverage``.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (Finding, audit_engine, audit_jaxpr,
+                            audit_ladder_keys, lint_paths, lint_source,
+                            load_baseline, new_findings, write_baseline)
+from repro.analysis import jaxpr_audit
+from repro.configs import get_config, reduced
+from repro.models import registry as R
+from repro.serve.engine import ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+CORPUS = os.path.join(os.path.dirname(__file__), "analysis_corpus")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _corpus(name):
+    with open(os.path.join(CORPUS, name), encoding="utf-8") as f:
+        return f.read()
+
+
+# --------------------------------------------------------------------------- #
+#  AST rule corpus: each rule fires on its bad snippet, not its near-miss
+# --------------------------------------------------------------------------- #
+CORPUS_CASES = [
+    # (file, lint-as path, expected rule or None)
+    ("captured_mutation_bad.py", "src/repro/serve/x.py",
+     "captured-mutation"),
+    ("captured_mutation_ok.py", "src/repro/serve/x.py", None),
+    ("iter_mutate_bad.py", "src/repro/serve/x.py", "iter-mutate"),
+    ("iter_mutate_ok.py", "src/repro/serve/x.py", None),
+    ("tick_host_sync_bad.py", "src/repro/serve/x.py", "tick-host-sync"),
+    ("tick_host_sync_ok.py", "src/repro/serve/x.py", None),
+    ("facade_import_bad.py", "benchmarks/x.py", "facade-import"),
+    ("facade_import_ok.py", "benchmarks/x.py", None),
+]
+
+
+@pytest.mark.parametrize("fname,relpath,rule", CORPUS_CASES,
+                         ids=[c[0] for c in CORPUS_CASES])
+def test_corpus_snippet(fname, relpath, rule):
+    findings = lint_source(_corpus(fname), relpath)
+    if rule is None:
+        assert findings == [], [str(f) for f in findings]
+    else:
+        assert findings, f"{fname} must trigger {rule}"
+        assert {f.rule for f in findings} == {rule}
+
+
+def test_tick_host_sync_bad_flags_all_three_shapes():
+    fs = lint_source(_corpus("tick_host_sync_bad.py"),
+                     "src/repro/serve/x.py")
+    assert len(fs) == 3
+    assert {f.context.split(":", 1)[1] for f in fs} == \
+        {"counter.item()", "jax.device_get(...)", "np.sum(...)"}
+
+
+def test_facade_rule_is_path_scoped():
+    # the same denied imports are legal inside src/repro itself
+    src = _corpus("facade_import_bad.py")
+    assert lint_source(src, "src/repro/core/x.py") == []
+
+
+def test_tick_host_sync_function_scope():
+    # without TICK_PATH, only the functions listed in TICK_FUNCTIONS
+    # for that exact file are in scope
+    src = ("def _tick(c):\n    return c.item()\n"
+           "def helper(c):\n    return c.item()\n")
+    fs = lint_source(src, "src/repro/serve/engine.py")
+    assert [f.context for f in fs] == ["_tick:c.item()"]
+    assert lint_source(src, "src/repro/serve/other.py") == []
+
+
+def test_unparseable_source_is_a_finding():
+    fs = lint_source("def broken(:\n", "src/repro/x.py")
+    assert [f.rule for f in fs] == ["syntax"]
+
+
+def test_repo_tree_is_lint_clean():
+    # the shipped tree holds itself to the rules (satellite: violations
+    # were fixed, not baselined)
+    fs = lint_paths(REPO_ROOT, ["src/repro", "examples", "benchmarks"])
+    assert fs == [], "\n".join(str(f) for f in fs)
+
+
+def test_baseline_roundtrip(tmp_path):
+    f1 = Finding(rule="r", path="p.py", line=3, message="m", context="c")
+    f2 = Finding(rule="r", path="p.py", line=9, message="m", context="c")
+    p = str(tmp_path / "bl.json")
+    write_baseline([f1], p)
+    # keys are line-independent: the same finding moving lines stays
+    # baselined, a different rule does not
+    assert new_findings([f2], load_baseline(p)) == []
+    f3 = Finding(rule="other", path="p.py", line=3, message="m",
+                 context="c")
+    assert new_findings([f3], load_baseline(p)) == [f3]
+    assert load_baseline(str(tmp_path / "missing.json")) == set()
+
+
+# --------------------------------------------------------------------------- #
+#  jaxpr audit units
+# --------------------------------------------------------------------------- #
+def test_audit_clean_graph():
+    closed = jax.make_jaxpr(lambda x: (x * 2).sum())(
+        jnp.ones((4,), jnp.float32))
+    assert audit_jaxpr("t", closed) == []
+
+
+def test_audit_flags_host_callback():
+    def fn(x):
+        return jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+    closed = jax.make_jaxpr(fn)(jnp.ones((4,), jnp.float32))
+    fs = audit_jaxpr("t", closed)
+    assert "host-transfer" in {f.rule for f in fs}
+
+
+def test_audit_flags_f64():
+    jax.config.update("jax_enable_x64", True)
+    try:
+        closed = jax.make_jaxpr(lambda x: x * 2.0)(
+            jnp.ones((3,), jnp.float64))
+    finally:
+        jax.config.update("jax_enable_x64", False)
+    fs = audit_jaxpr("t", closed)
+    assert "f64-op" in {f.rule for f in fs}
+
+
+def _dequant_jaxpr(dtype):
+    def fn(w, x):
+        return x @ w.astype(jnp.float32)
+
+    return jax.make_jaxpr(fn)(jnp.zeros((8, 4), dtype),
+                              jnp.zeros((2, 8), jnp.float32))
+
+
+def test_audit_flags_silent_dequant():
+    closed = _dequant_jaxpr(jnp.int8)
+    stats = {}
+    fs = audit_jaxpr("t", closed, dequant_numels={32: ["blocks/w"]},
+                     kernel_numels={32}, stats=stats)
+    assert [f.rule for f in fs] == ["silent-dequant"]
+    assert fs[0].context == "int8->float32:32"
+    assert stats["weight_converts"] == 1
+
+
+def test_audit_dequant_near_misses():
+    # float->float convert of the same numel: not a dequant
+    stats = {}
+    fs = audit_jaxpr("t", _dequant_jaxpr(jnp.bfloat16),
+                     dequant_numels={32: ["blocks/w"]},
+                     kernel_numels={32}, stats=stats)
+    assert fs == [] and not stats
+    # numel coverage already claims as expected fallback: counted for
+    # the cross-check, but not a finding
+    stats = {}
+    fs = audit_jaxpr("t", _dequant_jaxpr(jnp.int8),
+                     dequant_numels={32: ["blocks/w"]},
+                     kernel_numels=set(), stats=stats)
+    assert fs == [] and stats["weight_converts"] == 1
+    # numel not matching any quantized leaf: ignored entirely
+    fs = audit_jaxpr("t", _dequant_jaxpr(jnp.int8),
+                     dequant_numels={999: ["blocks/w"]})
+    assert fs == []
+
+
+def test_audit_exempts_in_kernel_dequant():
+    # dequantize-in-registers inside a pallas_call body is the kernels'
+    # INTENDED pattern — neither a finding nor a cross-check count
+    pl = pytest.importorskip("jax.experimental.pallas")
+
+    def kernel(w_ref, o_ref):
+        o_ref[...] = w_ref[...].astype(jnp.float32)
+
+    def fn(w):
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((8, 4), jnp.float32),
+            interpret=True)(w)
+
+    closed = jax.make_jaxpr(fn)(jnp.zeros((8, 4), jnp.int8))
+    assert any(in_k for _, in_k in jaxpr_audit.iter_eqns(closed.jaxpr))
+    stats = {}
+    fs = audit_jaxpr("t", closed, dequant_numels={32: ["blocks/w"]},
+                     kernel_numels={32}, stats=stats)
+    assert fs == [] and not stats
+
+
+# --------------------------------------------------------------------------- #
+#  ladder PRNG lineage
+# --------------------------------------------------------------------------- #
+def test_ladder_key_contract_is_clean():
+    assert audit_ladder_keys() == []
+
+
+def test_ladder_key_collision_is_flagged(monkeypatch):
+    from repro.core import pipeline
+    monkeypatch.setattr(pipeline, "LADDER_KEY_TAGS",
+                        {"target": None, "draft": 7, "extra": 7})
+    assert {f.context for f in audit_ladder_keys()} == {"tag-collision"}
+
+
+def test_ladder_raw_key_count_is_flagged(monkeypatch):
+    from repro.core import pipeline
+    monkeypatch.setattr(pipeline, "LADDER_KEY_TAGS",
+                        {"target": None, "draft": None})
+    assert {f.context for f in audit_ladder_keys()} == {"raw-key-count"}
+    monkeypatch.setattr(pipeline, "LADDER_KEY_TAGS", {"draft": 1})
+    assert {f.context for f in audit_ladder_keys()} == {"raw-key-count"}
+
+
+# --------------------------------------------------------------------------- #
+#  engine regression: every serving family's graphs audit clean
+# --------------------------------------------------------------------------- #
+SERVING_FAMILIES = ["rwkv6-3b", "rwkv7-0.1b", "llama3-8b",
+                    "jamba-1.5-large-398b"]
+
+
+@pytest.mark.parametrize("arch", SERVING_FAMILIES)
+def test_decode_tick_audit_clean_per_family(arch):
+    base = get_config(arch)
+    kw = dict(n_layers=2, vocab_size=64)
+    if base.attn_every:          # hybrid: keep n_layers % attn_every == 0
+        kw["attn_every"] = 2
+    cfg = reduced(base, **kw)
+    params = R.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=32)
+    names = {e["name"] for e in eng.audit_closures()}
+    assert "prefill" in names and "decode_tick" in names
+    report = audit_engine(eng)
+    assert report["findings"] == [], \
+        "\n".join(str(f) for f in report["findings"])
+    assert report["closures"]["decode_tick"]["n_eqns"] > 0
+
+
+def test_quantized_ladder_engine_audit_cross_check():
+    # the CI gate's acceptance criterion, in-suite: quantized rwkv6
+    # ladder engine (all four closure families), 0 findings, and the
+    # graph-side convert count agrees with coverage byte accounting
+    from repro.analysis.__main__ import build_audit_engine
+
+    eng = build_audit_engine(speculate=2, chunk_tokens=16)
+    report = audit_engine(eng)
+    assert set(report["closures"]) == {"prefill", "prefill_chunk",
+                                       "decode_tick", "spec_tick"}
+    assert report["findings"] == [], \
+        "\n".join(str(f) for f in report["findings"])
+    cov = report["coverage"]
+    assert cov["impl"] == "pallas"
+    assert cov["n_fallback_leaves"] == 0
+    assert cov["tick_weight_converts"] == 0
+
+
+def test_clear_closure_cache_invalidates_audit_cache():
+    from repro.serve import engine as se
+
+    cache = jaxpr_audit._jaxpr_cache()
+    closed = jaxpr_audit.trace_closure(
+        lambda x: x + 1, (jax.ShapeDtypeStruct((2,), jnp.float32),),
+        cache_key=("test", "k"))
+    assert cache[("test", "k")] is closed
+    se.clear_closure_cache()
+    assert cache == {}
+    # the registered dict object survives (cleared in place, not
+    # replaced), so the memo keeps working after invalidation
+    assert jaxpr_audit._jaxpr_cache() is cache

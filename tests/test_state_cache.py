@@ -87,8 +87,36 @@ def test_zero_state_is_exact(mode):
     """Fresh caches are all-zero; packing must keep them exactly zero
     (no NaN/garbage from a degenerate amax)."""
     x = jnp.zeros((3, 4, 5), jnp.float32)
-    y = SQ.unpack_array(SQ.pack_array(x, mode), mode, x.dtype)
+    y = SQ.unpack_array(SQ.pack_array(x, mode), mode, x.dtype,
+                        shape=x.shape)
     assert jnp.array_equal(y, x)
+
+
+def test_vq_codes_are_nibble_packed():
+    """4-bit vq stores two codes per byte — half the int8 codes plane
+    (one code per byte would buy no memory over int8 at all)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 4, 16)).astype(np.float32))
+    vq, i8 = SQ.pack_array(x, "vq"), SQ.pack_array(x, "int8")
+    assert vq["codes"].shape == (2, 4, 8) and vq["codes"].dtype == jnp.uint8
+    assert vq["codes"].nbytes * 2 == i8["codes"].nbytes
+    y = SQ.unpack_array(vq, "vq", x.dtype, shape=x.shape)
+    assert y.shape == x.shape
+    err = float(jnp.max(jnp.abs(x - y)))
+    assert err <= REL_ERR["vq"] * float(jnp.max(jnp.abs(x)))
+
+
+def test_vq_nibble_roundtrip_odd_last_dim():
+    """Odd last dims pad one dummy nibble on pack; unpack recovers the
+    true dim from ``shape`` and slices the pad back off."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((3, 7)).astype(np.float32))
+    packed = SQ.pack_array(x, "vq")
+    assert packed["codes"].shape == (3, 4)        # ceil(7/2)
+    y = SQ.unpack_array(packed, "vq", x.dtype, shape=x.shape)
+    assert y.shape == x.shape
+    err = float(jnp.max(jnp.abs(x - y)))
+    assert err <= REL_ERR["vq"] * float(jnp.max(jnp.abs(x)))
 
 
 def test_spec_validation_and_hash():
